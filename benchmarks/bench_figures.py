@@ -1,0 +1,70 @@
+"""One benchmark per paper figure (section 4, Figs 1-5), all derived from
+the traced distributed-training workload exactly as the paper derives its
+figures from the traced Trixi.jl run."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import events as ev
+from repro.core.analysis import (
+    bandwidth_timeline, connectivity, parallelism_timeline, routine_timeline,
+    time_fractions,
+)
+
+from workload import csv_row, ensure_trace, timeit
+
+
+def bench() -> list[str]:
+    trace = ensure_trace()
+    rows = []
+
+    # Fig 1: instantaneous parallelism
+    us, (centers, par) = timeit(parallelism_timeline, trace, buckets=200)
+    rows.append(csv_row(
+        "fig1_parallelism", us,
+        f"min={par.min():.2f} max={par.max():.2f} of {trace.num_tasks} tasks; "
+        f"mean={par.mean():.2f}",
+    ))
+
+    # Fig 2: per-rank routine timeline
+    us, tl = timeit(routine_timeline, trace, ev.EV_COLLECTIVE)
+    n_int = sum(len(v) for v in tl.values())
+    rows.append(csv_row(
+        "fig2_timeline", us,
+        f"{n_int} collective intervals across {len(tl)} ranks",
+    ))
+
+    # Fig 3: connectivity matrix
+    us, (counts, sizes) = timeit(connectivity, trace)
+    ring = all(
+        counts[i, (i + 1) % trace.num_tasks] > 0 for i in range(trace.num_tasks)
+    )
+    rows.append(csv_row(
+        "fig3_connectivity", us,
+        f"{int(counts.sum())} msgs; ring_pattern={ring}; "
+        f"max_pair={int(counts.max())}",
+    ))
+
+    # Fig 4: time fraction per routine (paper: Waitany ~60%, Allreduce ~30%)
+    us, fr = timeit(time_fractions, trace, ev.EV_COLLECTIVE)
+    top = sorted(fr.items(), key=lambda kv: -kv[1]["mean"])
+    desc = "; ".join(f"{k}={v['mean'] * 100:.2f}%" for k, v in top[:3])
+    rows.append(csv_row("fig4_fractions", us, desc))
+
+    # Fig 5: node bandwidth
+    us, (centers, series, peak) = timeit(bandwidth_timeline, trace, buckets=200)
+    rows.append(csv_row(
+        "fig5_bandwidth", us,
+        f"peak={peak:.1f} MB/s vs 50 GB/s link "
+        f"({peak / 50e3 * 100:.4f}% of theoretical)",
+    ))
+    return rows
+
+
+def main():
+    for r in bench():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

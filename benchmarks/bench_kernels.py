@@ -1,0 +1,65 @@
+"""Kernel micro-benchmarks: Pallas kernels (interpret mode on CPU — numbers
+measure call/dispatch cost, the kernels target TPU) vs their jnp oracles,
+plus counted FLOPs for the roofline narrative."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssd_scan.ops import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_sequential_ref
+
+from workload import csv_row, timeit
+
+
+def bench() -> list[str]:
+    rows = []
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    b, s, hq, hkv, d = 1, 512, 4, 2, 64
+    q = jax.random.normal(ks[0], (b, s, hq, d), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, hkv, d), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, hkv, d), jnp.float32)
+    flops = 4 * b * s * s * hq * d / 2  # causal
+
+    fa = lambda: jax.block_until_ready(
+        flash_attention(q, k, v, causal=True, interpret=True))
+    fa()  # compile
+    us, _ = timeit(fa, repeat=3)
+    rows.append(csv_row("flash_attention_interp", us,
+                        f"{flops / 1e9:.2f} GFLOP causal B{b} S{s} H{hq}/{hkv} D{d}"))
+
+    ref = jax.jit(lambda: attention_ref(q, k, v, causal=True))
+    jax.block_until_ready(ref())
+    us, _ = timeit(lambda: jax.block_until_ready(ref()), repeat=3)
+    rows.append(csv_row("attention_ref_jit", us, "pure-jnp oracle, same shape"))
+
+    h, p, n = 4, 32, 16
+    x = jax.random.normal(ks[0], (1, 512, h, p), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (1, 512, h)))
+    a_log = jnp.zeros((h,))
+    bm = jax.random.normal(ks[2], (1, 512, 1, n), jnp.float32)
+    cm = jax.random.normal(ks[0], (1, 512, 1, n), jnp.float32)
+
+    sk = lambda: jax.block_until_ready(
+        ssd_scan(x, dt, a_log, bm, cm, chunk=128, interpret=True)[0])
+    sk()
+    us, _ = timeit(sk, repeat=3)
+    rows.append(csv_row("ssd_scan_interp", us, f"S512 H{h} P{p} N{n} chunk128"))
+
+    refs = jax.jit(lambda: ssd_sequential_ref(
+        x, dt, a_log, jnp.repeat(bm, h, 2), jnp.repeat(cm, h, 2))[0])
+    jax.block_until_ready(refs())
+    us, _ = timeit(lambda: jax.block_until_ready(refs()), repeat=3)
+    rows.append(csv_row("ssd_sequential_ref_jit", us, "definitional recurrence"))
+    return rows
+
+
+def main():
+    for r in bench():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Paraver writer/parser throughput + trace-size accounting."""
+from __future__ import annotations
+
+import os
+import tempfile
+
+from repro.core.paraver import parse_prv, write_prv
+
+from workload import csv_row, ensure_trace, timeit
+
+
+def bench() -> list[str]:
+    trace = ensure_trace()
+    n_rec = len(trace.states) + len(trace.events) + len(trace.comms)
+    rows = []
+    with tempfile.TemporaryDirectory() as td:
+        us, paths = timeit(write_prv, trace, os.path.join(td, "t"), repeat=3)
+        size = paths["prv"].stat().st_size
+        rows.append(csv_row(
+            "paraver_write", us,
+            f"{n_rec / (us / 1e6) / 1e6:.2f} M rec/s; {size / 1024:.0f} KiB prv; "
+            f"{size / max(n_rec, 1):.1f} B/record",
+        ))
+        us, back = timeit(parse_prv, paths["prv"], repeat=3)
+        rows.append(csv_row(
+            "paraver_parse", us,
+            f"{n_rec / (us / 1e6) / 1e6:.2f} M rec/s; roundtrip_records="
+            f"{len(back.states) + len(back.events) + len(back.comms)}=={n_rec}",
+        ))
+    return rows
+
+
+def main():
+    for r in bench():
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

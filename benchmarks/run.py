@@ -1,0 +1,45 @@
+"""Benchmark harness — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Prints ``name,us_per_call,derived`` CSV rows.  The figure benchmarks analyze
+the traced distributed-training workload (generated once, in a subprocess
+with its own fake-device pool).
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent))
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+
+def main() -> None:
+    import bench_tracer_overhead
+    import bench_figures
+    import bench_paraver_io
+    import bench_kernels
+
+    print("name,us_per_call,derived")
+    sections = [
+        ("tracer overhead (paper: low-overhead claim)", bench_tracer_overhead),
+        ("paper figures 1-5 (traced distributed workload)", bench_figures),
+        ("paraver trace IO", bench_paraver_io),
+        ("pallas kernels (interpret mode)", bench_kernels),
+    ]
+    failures = 0
+    for title, mod in sections:
+        print(f"# --- {title} ---")
+        try:
+            for row in mod.bench():
+                print(row)
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{mod.__name__},FAILED,{type(e).__name__}: {e}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

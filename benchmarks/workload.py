@@ -1,0 +1,49 @@
+"""Shared benchmark workload: the traced distributed training job.
+
+The paper's evaluation traces one MPI application and derives all figures
+from that single trace; we do the same — examples/distributed_trace.py is
+run once (in a subprocess, so its fake-device XLA_FLAGS never leak into the
+benchmark process) and every figure benchmark analyzes the resulting .prv.
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+TRACE = ROOT / "examples" / "out" / "distributed.prv"
+
+
+def ensure_trace(refresh: bool = False):
+    if refresh or not TRACE.exists():
+        env = dict(os.environ)
+        env["PYTHONPATH"] = str(ROOT / "src")
+        r = subprocess.run(
+            [sys.executable, str(ROOT / "examples" / "distributed_trace.py")],
+            capture_output=True, text=True, env=env, timeout=900,
+        )
+        if r.returncode != 0:
+            raise RuntimeError(f"workload generation failed:\n{r.stderr[-2000:]}")
+    from repro.core.paraver import parse_prv
+
+    return parse_prv(TRACE)
+
+
+def timeit(fn, *args, repeat: int = 5, **kw):
+    """(median_us_per_call, result)"""
+    import time
+
+    results = None
+    times = []
+    for _ in range(repeat):
+        t0 = time.perf_counter_ns()
+        results = fn(*args, **kw)
+        times.append((time.perf_counter_ns() - t0) / 1e3)
+    times.sort()
+    return times[len(times) // 2], results
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.2f},{derived}"

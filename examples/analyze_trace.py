@@ -1,0 +1,59 @@
+"""Offline Paraver-trace analysis — the paper's "external post-processing"
+workflow (and its future-work item of reparsing .prv natively).
+
+    PYTHONPATH=src python examples/analyze_trace.py examples/out/distributed.prv
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+from repro import core as xtrace
+from repro.core import events as ev
+from repro.core.analysis import ascii_matrix, ascii_series
+
+
+def main(argv=None):
+    argv = argv or sys.argv[1:]
+    if not argv:
+        default = pathlib.Path(__file__).resolve().parent / "out" / "distributed.prv"
+        if not default.exists():
+            print("usage: analyze_trace.py <trace.prv>  (or run "
+                  "distributed_trace.py first)")
+            return 1
+        argv = [str(default)]
+    trace = xtrace.parse_prv(argv[0])
+    print(trace.summary())
+
+    _, par = xtrace.parallelism_timeline(trace, buckets=72)
+    print("\n[Fig 1] instantaneous parallelism")
+    print(ascii_series(par, label="tasks running"))
+
+    counts, sizes = xtrace.connectivity(trace)
+    if counts.sum():
+        print("\n[Fig 3] connectivity matrix")
+        print(ascii_matrix(counts, label="messages"))
+
+    for etype, tag in ((ev.EV_COLLECTIVE, "collectives"), (ev.EV_PHASE, "phases"),
+                       (ev.EV_USER_FUNC, "user functions")):
+        fr = xtrace.time_fractions(trace, etype)
+        if fr:
+            print(f"\n[Fig 4] time fractions — {tag}:")
+            for name, st in sorted(fr.items(), key=lambda kv: -kv[1]["mean"]):
+                print(f"  {name:22s} {st['mean'] * 100:6.2f}% (+-{st['std'] * 100:.2f})")
+
+    _, series, peak = xtrace.bandwidth_timeline(trace, buckets=72)
+    if peak:
+        print(f"\n[Fig 5] peak node bandwidth: {peak:.2f} MB/s")
+    print("\n[what-if] Dimemas-style bandwidth sweep (predicted speedup):")
+    for f, sp in xtrace.bandwidth_sweep(trace).items():
+        print(f"  {f:>5.1f}x links -> {sp:5.3f}x")
+    rep = xtrace.straggler_report(trace)
+    if rep.median_ms:
+        print(f"\nstragglers: {rep.stragglers or 'none'} "
+              f"(median step {rep.median_ms:.2f} ms)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

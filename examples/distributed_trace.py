@@ -1,0 +1,126 @@
+"""The paper's section-4 evaluation, transposed: trace a *distributed* JAX
+training job and analyze it with the Paraver-model analyses (Figs 1-5).
+
+Where the paper traces a 16-rank MPI Taylor-Green vortex run, we trace a
+16-device (4 data x 4 model) sharded LM training job: host-side phases are
+captured live, and the compiled step's exact collective schedule (the
+LD_PRELOAD-interception analogue, from the optimized HLO) is replayed onto
+each measured step window as states + events + communication records.
+
+    PYTHONPATH=src python examples/distributed_trace.py
+"""
+import os
+import pathlib
+import sys
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import core as xtrace
+from repro.core import events as ev
+from repro.core.analysis import ascii_matrix, ascii_series
+from repro.configs import get_config, reduced
+from repro.configs.base import ShapeSpec, TrainConfig
+from repro.core.hlo_comm import parse_collectives
+from repro.launch.mesh import make_debug_mesh
+from repro.models.model import build_model
+from repro.optim.adamw import init_train_state, train_state_axes
+from repro.sharding.partition import make_rules, use_rules
+from repro.train.step import make_train_step
+
+
+def main(num_steps: int = 6):
+    out = pathlib.Path(__file__).resolve().parent / "out"
+    out.mkdir(exist_ok=True)
+    mesh = make_debug_mesh(data=4, model=2)
+    cfg = reduced(get_config("granite-8b"), num_layers=4, d_model=128,
+                  num_heads=4, num_kv_heads=2, head_dim=32, d_ff=256)
+    shape = ShapeSpec("dist", "train", 64, 8)
+    tcfg = TrainConfig(learning_rate=1e-3, warmup_steps=2)
+    model = build_model(cfg)
+    rules = make_rules(cfg, mesh, shape)
+
+    endpoint_map = xtrace.device_endpoint_map(
+        mesh, task_axes=("data",), thread_axes=("model",)
+    )
+
+    with use_rules(rules):
+        step_fn = make_train_step(model, tcfg, microbatches=1)
+        state_sh = rules.tree_shardings(train_state_axes(model.param_axes()))
+        batch_axes = model.batch_axes()
+        params = model.init(jax.random.PRNGKey(0))
+        state = jax.device_put(init_train_state(params), state_sh)
+        # NOTE: no donation here — XLA CPU's in-process SPMD runtime mishandles
+        # donated replicated shards (fine on TPU; the dry-run keeps donation
+        # since it only compiles).
+        jit_step = jax.jit(step_fn, in_shardings=(state_sh, None),
+                           out_shardings=(state_sh, None))
+
+        rng = np.random.default_rng(0)
+        batch = {
+            "tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (64, 8)), jnp.int32),
+            "targets": jnp.asarray(rng.integers(0, cfg.vocab_size, (64, 8)), jnp.int32),
+            "loss_mask": jnp.ones((64, 8), jnp.float32),
+        }
+        compiled = jit_step.lower(state, batch).compile()
+        ops = parse_collectives(compiled.as_text(), total_devices=mesh.size)
+        print(f"compiled schedule: {len(ops)} collectives "
+              f"({sorted({o.kind for o in ops})})")
+        # warm up, then trace only the steady-state steps (Extrae practice:
+        # start tracing after initialization)
+        state, _ = jit_step(state, batch)
+
+        tracer = xtrace.init("distributed-train", mode="mesh_data")
+        tracer.pm.bind_mesh(mesh, task_axes=("data",), thread_axes=("model",))
+
+        # real steps; replay the compiled collective schedule per step window
+        for s in range(num_steps):
+            t0 = time.perf_counter_ns()
+            with tracer.phase(ev.PHASE_STEP, step=s):
+                state, metrics = jit_step(state, batch)
+                jax.block_until_ready(metrics["loss"])
+            t1 = time.perf_counter_ns()
+            xtrace.replay_step(tracer, ops, t0, t1, endpoint_map, step=s)
+            from repro.core.comm_replay import replay_running_gaps
+
+            replay_running_gaps(tracer, endpoint_map, t0, t1)
+
+    trace = xtrace.finish()
+    paths = xtrace.write_prv(trace, out / "distributed")
+    xtrace.write_chrome_trace(trace, out / "distributed.chrome.json")
+    print(trace.summary())
+    print(f"paraver: {paths['prv']}")
+
+    # ---- the five paper analyses ----
+    centers, par = xtrace.parallelism_timeline(trace, buckets=72)
+    print("\nFig 1 — instantaneous parallelism (tasks running):")
+    print(ascii_series(par, label="parallelism"))
+
+    tl = xtrace.routine_timeline(trace, ev.EV_COLLECTIVE)
+    print(f"\nFig 2 — per-rank collective timeline: rank0 has {len(tl[0])} intervals")
+
+    counts, sizes = xtrace.connectivity(trace)
+    print("\nFig 3 — connectivity (messages rank->rank):")
+    print(ascii_matrix(counts, label="connectivity"))
+
+    print("\nFig 4 — time fraction per collective routine:")
+    for name, st in xtrace.time_fractions(trace, ev.EV_COLLECTIVE).items():
+        print(f"  {name:20s} {st['mean'] * 100:6.2f}% (+-{st['std'] * 100:.2f})")
+
+    centers, series, peak = xtrace.bandwidth_timeline(trace, buckets=72, by="node")
+    print("\nFig 5 — node bandwidth (MB/s):")
+    print(ascii_series(series.sum(0), label="bandwidth"))
+    print(f"peak {peak:.1f} MB/s vs theoretical link 50 GB/s "
+          f"(= {peak / 50e3 * 100:.3f}% — dry-run replay scale)")
+    print(f"\nfinal loss {float(metrics['loss']):.4f}")
+    return trace
+
+
+if __name__ == "__main__":
+    main()

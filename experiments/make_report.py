@@ -1,0 +1,74 @@
+"""Render EXPERIMENTS.md tables from the dry-run/hillclimb JSONs.
+
+    PYTHONPATH=src python experiments/make_report.py
+"""
+import json
+import pathlib
+import sys
+
+HERE = pathlib.Path(__file__).resolve().parent
+
+
+def fmt(v):
+    if isinstance(v, bool):
+        return "Y" if v else "N"
+    if isinstance(v, float):
+        if v == 0:
+            return "0"
+        if abs(v) < 1e-3 or abs(v) >= 1e5:
+            return f"{v:.2e}"
+        return f"{v:.3f}"
+    return str(v)
+
+
+def roofline_table(rows, mesh):
+    cols = ["arch", "shape", "dominant", "compute_s", "memory_s",
+            "collective_s", "useful_ratio", "roofline_fraction", "fits_hbm"]
+    head = ("| " + " | ".join(["arch", "shape", "dom", "compute s", "memory s",
+                               "coll s", "useful", "roofline frac", "fits"])
+            + " |")
+    sep = "|" + "---|" * 9
+    out = [head, sep]
+    for r in rows:
+        if r.get("status") != "ok" or r["mesh"] != mesh:
+            continue
+        out.append("| " + " | ".join(fmt(r[c]) for c in cols) + " |")
+    return "\n".join(out)
+
+
+def dryrun_table(rows, mesh):
+    out = ["| arch | shape | microbatches | flops/dev | bytes/dev | coll bytes/dev"
+           " | collectives | temp GiB | args GiB | compile s |",
+           "|" + "---|" * 10]
+    for r in rows:
+        if r.get("status") != "ok" or r["mesh"] != mesh:
+            continue
+        coll = " ".join(f"{k}:{v}" for k, v in sorted(r["coll_by_kind"].items()))
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r.get('microbatches', '-')} "
+            f"| {r['flops_dev']:.3e} | {r['bytes_dev']:.3e} "
+            f"| {r['coll_operand_bytes_dev']:.3e} | {coll} "
+            f"| {r['temp_bytes_dev'] / 2**30:.2f} | {r['arg_bytes_dev'] / 2**30:.2f} "
+            f"| {r.get('compile_s', 0)} |")
+    return "\n".join(out)
+
+
+def main():
+    src = sys.argv[1] if len(sys.argv) > 1 else "dryrun_baseline.json"
+    rows = json.load(open(HERE / src))
+    print("### Roofline — single pod (16d x 16m, 256 chips)\n")
+    print(roofline_table(rows, "16dx16m"))
+    print("\n### Roofline — multi-pod (2p x 16d x 16m, 512 chips)\n")
+    print(roofline_table(rows, "2px16dx16m"))
+    print("\n### Dry-run detail — single pod\n")
+    print(dryrun_table(rows, "16dx16m"))
+    print("\n### Dry-run detail — multi-pod\n")
+    print(dryrun_table(rows, "2px16dx16m"))
+    skipped = [r for r in rows if r.get("status") == "skipped" and r["mesh"] == "16dx16m"]
+    print("\n### Skipped cells (same set on both meshes)\n")
+    for r in skipped:
+        print(f"- `{r['arch']} x {r['shape']}` — {r['reason']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""repro: Extrae/Paraver-style tracing profiler (the paper) integrated into
+a multi-pod JAX training/serving framework.  See README.md / DESIGN.md."""
+
+__version__ = "1.0.0"

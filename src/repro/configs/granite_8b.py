@@ -1,0 +1,22 @@
+"""granite-8b [dense]: 36L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=49152.
+
+Llama-arch code model, arXiv:2405.04324.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="granite-8b",
+    family="dense",
+    num_layers=36,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    head_dim=128,
+    d_ff=14_336,
+    vocab_size=49_152,
+    rope_theta=10_000.0,
+    act="silu",
+    remat="full",
+    attn_block_kv=1024,
+    microbatches={"train_4k": 4},
+)

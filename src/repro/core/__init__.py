@@ -1,0 +1,31 @@
+"""repro.core — the paper's contribution: an Extrae/Paraver-style tracing
+profiler for JAX/TPU programs.
+
+Public API mirrors Extrae.jl:
+
+    from repro import core as xtrace
+    tracer = xtrace.init("myapp")
+    xtrace.register(84210, "Vector length")
+    xtrace.emit(84210, n)
+
+    @tracer.user_function
+    def axpy(a, x, y): ...
+
+    trace = xtrace.finish()
+    xtrace.write_prv(trace, "out/myapp")
+"""
+from repro.core import events  # noqa: F401
+from repro.core.analysis import (  # noqa: F401
+    bandwidth_timeline, connectivity, parallelism_timeline, routine_timeline,
+    straggler_report, time_fractions,
+)
+from repro.core.chrome_trace import write_chrome_trace  # noqa: F401
+from repro.core.comm_replay import device_endpoint_map, replay_step  # noqa: F401
+from repro.core.counters import StepCounters, rusage_counters  # noqa: F401
+from repro.core.hlo_comm import (  # noqa: F401
+    CollectiveOp, collective_summary, parse_collectives,
+)
+from repro.core.paraver import parse_prv, write_prv  # noqa: F401
+from repro.core.records import Trace  # noqa: F401
+from repro.core.tracer import Tracer, emit, finish, get_tracer, init, register  # noqa: F401
+from repro.core.whatif import bandwidth_sweep, roofline_whatif, simulate_bandwidth  # noqa: F401

@@ -1,0 +1,242 @@
+"""Trace analyses reproducing the paper's evaluation (section 4, Figs 1-5)
+plus the straggler detection the trainer consumes.
+
+  * Fig 1  instantaneous parallelism        -> parallelism_timeline
+  * Fig 2  per-rank routine timeline        -> routine_timeline
+  * Fig 3  rank connectivity matrix         -> connectivity
+  * Fig 4  time fraction per routine        -> time_fractions
+  * Fig 5  node bandwidth over time         -> bandwidth_timeline
+
+Everything operates on the in-memory :class:`Trace` (writer-independent, so
+the same analyses run on parsed .prv files — the paper's future-work item).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import events as ev
+from repro.core.records import Trace
+
+
+# ----------------------------------------------------------------------
+# Fig 1: instantaneous parallelism
+# ----------------------------------------------------------------------
+
+
+def parallelism_timeline(trace: Trace, *, state=ev.STATE_RUNNING, buckets: int = 200,
+                         busy_means_not_idle: bool = False, oversample: int = 64):
+    """Average number of tasks in ``state`` over time (paper: ranks not idle).
+
+    Overlapping per-task states are resolved innermost-wins per Paraver
+    semantics (a task inside a GROUP_COMM sliver is *not* RUNNING even though
+    a base RUNNING interval covers the window).  States are painted on a
+    fine grid (``buckets * oversample`` cells, capped at 1 << 16) and
+    average-pooled, so sub-bucket slivers contribute fractionally — this is
+    what makes the Fig-1 curve continuous rather than resolution-quantized.
+    """
+    st = trace.states
+    if not len(st):
+        return np.zeros(buckets), np.zeros(buckets)
+    fine = min(buckets * oversample, 1 << 16)
+    fine = (fine // buckets) * buckets  # exact pooling factor
+    edges = np.linspace(0, trace.t_end, fine + 1)
+    out_edges = np.linspace(0, trace.t_end, buckets + 1)
+    centers = (out_edges[:-1] + out_edges[1:]) / 2
+    count = np.zeros(fine)
+    for task in range(trace.num_tasks):
+        rows = st[st["task"] == task]
+        if not len(rows):
+            continue
+        # innermost wins: shorter intervals override longer base intervals
+        order = np.argsort(rows["end"] - rows["begin"])[::-1]
+        cur = np.full(fine, -1, np.int64)
+        for r in rows[order]:
+            lo = np.searchsorted(edges, r["begin"], "right") - 1
+            hi = np.searchsorted(edges, r["end"], "left")
+            cur[max(lo, 0): max(hi, lo + 1)] = r["state"]
+        if busy_means_not_idle:
+            count += (cur != ev.STATE_IDLE) & (cur >= 0)
+        else:
+            count += cur == state
+    pooled = count.reshape(buckets, fine // buckets).mean(axis=1)
+    return centers, pooled
+
+
+# ----------------------------------------------------------------------
+# Fig 2: per-rank routine timeline (from enter/exit event pairs)
+# ----------------------------------------------------------------------
+
+
+def routine_timeline(trace: Trace, event_type: int = ev.EV_COLLECTIVE):
+    """dict task -> structured array (begin, end, value) of routine intervals,
+    reconstructed from nonzero->zero event pairs (Extrae convention)."""
+    out: dict[int, np.ndarray] = {}
+    evs = trace.events[trace.events["type"] == event_type]
+    dt = np.dtype([("begin", np.int64), ("end", np.int64), ("value", np.int64)])
+    for task in range(trace.num_tasks):
+        rows = evs[evs["task"] == task]
+        intervals = []
+        open_by_thread: dict[int, list[tuple[int, int]]] = {}
+        for r in rows:
+            stack = open_by_thread.setdefault(int(r["thread"]), [])
+            if r["value"] != 0:
+                stack.append((int(r["time"]), int(r["value"])))
+            elif stack:
+                b, v = stack.pop()
+                intervals.append((b, int(r["time"]), v))
+        out[task] = np.array(intervals, dt) if intervals else np.empty(0, dt)
+    return out
+
+
+# ----------------------------------------------------------------------
+# Fig 3: connectivity matrix
+# ----------------------------------------------------------------------
+
+
+def connectivity(trace: Trace):
+    """(counts, bytes) [ntasks x ntasks] from communication records."""
+    n = trace.num_tasks
+    counts = np.zeros((n, n), np.int64)
+    sizes = np.zeros((n, n), np.int64)
+    c = trace.comms
+    if len(c):
+        np.add.at(counts, (c["stask"], c["rtask"]), 1)
+        np.add.at(sizes, (c["stask"], c["rtask"]), c["size"])
+    return counts, sizes
+
+
+# ----------------------------------------------------------------------
+# Fig 4: fraction of time per routine
+# ----------------------------------------------------------------------
+
+
+def time_fractions(trace: Trace, event_type: int = ev.EV_COLLECTIVE,
+                   labels: dict[int, str] | None = None):
+    """Per-routine share of total trace time, with per-task dispersion.
+
+    Returns {label: {"mean": f, "std": f, "per_task": [f..]}} — the paper's
+    Fig 4 finds MPI_Waitany ~60% / MPI_Allreduce ~30% this way.
+    """
+    if labels is None:
+        et = trace.event_types.get(event_type)
+        labels = dict(et.values) if et else {}
+    tl = routine_timeline(trace, event_type)
+    values = sorted({int(v) for arr in tl.values() for v in arr["value"]})
+    out = {}
+    span = max(trace.t_end, 1)
+    for v in values:
+        per_task = []
+        for task in range(trace.num_tasks):
+            arr = tl.get(task)
+            tot = int((arr[arr["value"] == v]["end"] - arr[arr["value"] == v]["begin"]).sum()) if arr is not None and len(arr) else 0
+            per_task.append(tot / span)
+        per = np.array(per_task)
+        out[labels.get(v, str(v))] = {
+            "mean": float(per.mean()), "std": float(per.std()),
+            "per_task": per,
+        }
+    return out
+
+
+# ----------------------------------------------------------------------
+# Fig 5: bandwidth timeline
+# ----------------------------------------------------------------------
+
+
+def bandwidth_timeline(trace: Trace, *, buckets: int = 100, by: str = "node"):
+    """Aggregate communication bandwidth over time (MB/s).
+
+    Each message's bytes are spread uniformly over [psend, precv) and
+    attributed to the receiving node (paper Fig 5) or task.
+    Returns (centers_ns, series [ngroups, buckets], peak_MBs).
+    """
+    c = trace.comms
+    ngroups = trace.num_nodes if by == "node" else trace.num_tasks
+    edges = np.linspace(0, trace.t_end, buckets + 1)
+    centers = (edges[:-1] + edges[1:]) / 2
+    series = np.zeros((ngroups, buckets))
+    if not len(c):
+        return centers, series, 0.0
+    width = edges[1] - edges[0]
+    for r in c:
+        g = trace.node_of_task[int(r["rtask"])] if by == "node" else int(r["rtask"])
+        b0, b1 = int(r["psend"]), int(r["precv"])
+        if b1 <= b0:
+            b1 = b0 + 1
+        lo = np.clip(np.searchsorted(edges, b0, "right") - 1, 0, buckets - 1)
+        hi = np.clip(np.searchsorted(edges, b1, "left"), 1, buckets)
+        per_ns = r["size"] / (b1 - b0)
+        for bkt in range(lo, hi):
+            o0, o1 = max(b0, edges[bkt]), min(b1, edges[bkt + 1])
+            if o1 > o0:
+                series[g, bkt] += per_ns * (o1 - o0)
+    series = series / width * 1e9 / 1e6  # bytes/bucket -> MB/s
+    return centers, series, float(series.max())
+
+
+# ----------------------------------------------------------------------
+# Straggler detection (consumed by the trainer's mitigation hook)
+# ----------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class StragglerReport:
+    per_task_mean_ms: np.ndarray
+    median_ms: float
+    threshold: float
+    stragglers: list[int]
+
+
+def straggler_report(trace: Trace, *, threshold: float = 2.0) -> StragglerReport:
+    """Flag tasks whose mean train_step duration exceeds threshold x median."""
+    tl = routine_timeline(trace, ev.EV_PHASE)
+    means = np.zeros(trace.num_tasks)
+    for task, arr in tl.items():
+        steps = arr[arr["value"] == ev.PHASE_STEP]
+        if len(steps):
+            means[task] = float((steps["end"] - steps["begin"]).mean()) / 1e6
+    active = means[means > 0]
+    med = float(np.median(active)) if len(active) else 0.0
+    stragglers = [
+        int(t) for t in range(trace.num_tasks)
+        if med > 0 and means[t] > threshold * med
+    ]
+    return StragglerReport(means, med, threshold, stragglers)
+
+
+# ----------------------------------------------------------------------
+# ASCII rendering (examples/benchmarks "plots")
+# ----------------------------------------------------------------------
+
+
+def ascii_series(values, width: int = 72, height: int = 8, label: str = "") -> str:
+    v = np.asarray(values, float)
+    if v.size == 0 or v.max() <= 0:
+        return f"{label}: (empty)"
+    if v.size > width:
+        splits = np.array_split(v, width)
+        v = np.array([s.mean() for s in splits])
+    rows = []
+    vmax = v.max()
+    for h in range(height, 0, -1):
+        cut = vmax * (h - 0.5) / height
+        rows.append("".join("█" if x >= cut else " " for x in v))
+    axis = f"0{'─' * (len(v) - 2)}>"
+    head = f"{label}  (max={vmax:.4g})"
+    return "\n".join([head] + ["|" + r for r in rows] + [" " + axis])
+
+
+def ascii_matrix(mat, label: str = "", max_dim: int = 32) -> str:
+    m = np.asarray(mat, float)
+    if m.shape[0] > max_dim:
+        f = m.shape[0] // max_dim
+        m = m[: max_dim * f, : max_dim * f].reshape(max_dim, f, max_dim, f).sum((1, 3))
+    shades = " ░▒▓█"
+    vmax = m.max() if m.max() > 0 else 1.0
+    rows = [
+        "".join(shades[min(int(x / vmax * (len(shades) - 1)), len(shades) - 1)] for x in row)
+        for row in m
+    ]
+    return "\n".join([f"{label}  (max={vmax:.4g})"] + rows)

@@ -1,0 +1,63 @@
+"""Chrome-trace (about://tracing / Perfetto) JSON export.
+
+Stands in for the paper's future-work OTF2 conversion: a second, widely
+readable trace format produced from the same in-memory Trace.  States become
+complete ("X") slices, enter/exit event pairs become B/E spans, counters
+become "C" events, and communications become flow arrows (s/f).
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.core import events as ev
+from repro.core.records import Trace
+
+_COUNTER_TYPES = set(ev.CTR_LABELS)
+_SPAN_TYPES = {ev.EV_PHASE, ev.EV_USER_FUNC, ev.EV_COLLECTIVE}
+
+
+def write_chrome_trace(trace: Trace, path: str | Path) -> Path:
+    path = Path(path)
+    out = []
+    for t in range(trace.num_tasks):
+        out.append({"ph": "M", "pid": t, "name": "process_name",
+                    "args": {"name": f"task{t} (node{trace.node_of_task[t]})"}})
+
+    for r in trace.states:
+        out.append({
+            "ph": "X", "pid": int(r["task"]), "tid": int(r["thread"]),
+            "ts": r["begin"] / 1e3, "dur": max((r["end"] - r["begin"]) / 1e3, 0.001),
+            "name": ev.STATE_LABELS.get(int(r["state"]), f"state{r['state']}"),
+            "cat": "state",
+        })
+
+    for r in trace.events:
+        code, val = int(r["type"]), int(r["value"])
+        et = trace.event_types.get(code)
+        if code in _COUNTER_TYPES:
+            out.append({"ph": "C", "pid": int(r["task"]), "tid": int(r["thread"]),
+                        "ts": r["time"] / 1e3,
+                        "name": et.desc if et else str(code),
+                        "args": {"value": val}})
+        elif code in _SPAN_TYPES:
+            name = (et.values.get(val) if et else None) or (et.desc if et else str(code))
+            out.append({
+                "ph": "E" if val == 0 else "B",
+                "pid": int(r["task"]), "tid": int(r["thread"]),
+                "ts": r["time"] / 1e3, "name": name, "cat": et.desc if et else "event",
+            })
+        else:
+            out.append({"ph": "i", "pid": int(r["task"]), "tid": int(r["thread"]),
+                        "ts": r["time"] / 1e3, "s": "t",
+                        "name": f"{et.desc if et else code}={val}"})
+
+    for i, r in enumerate(trace.comms):
+        flow = {"cat": "comm", "name": f"msg{int(r['size'])}B", "id": i}
+        out.append({**flow, "ph": "s", "pid": int(r["stask"]), "tid": int(r["sthread"]),
+                    "ts": r["psend"] / 1e3})
+        out.append({**flow, "ph": "f", "bp": "e", "pid": int(r["rtask"]),
+                    "tid": int(r["rthread"]), "ts": max(r["precv"], r["psend"] + 1) / 1e3})
+
+    path.write_text(json.dumps({"traceEvents": out, "displayTimeUnit": "ms"}))
+    return path

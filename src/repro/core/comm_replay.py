@@ -1,0 +1,116 @@
+"""Replay compiled-HLO collectives onto the trace timeline.
+
+TPU collectives execute inside the XLA program, so their wall-clock placement
+is not observable from the host.  We reconstruct a faithful-by-construction
+approximation: the per-step collective *schedule* (op order, bytes, groups)
+is exact from the compiled HLO; op placement inside a measured step window
+[t0, t1) is proportional to each op's modeled wire time (DESIGN.md section 2
+records this assumption).
+
+For every collective we inject, per participating (task, thread):
+  * a STATE_GROUP_COMM state interval for the op duration,
+  * EV_COLLECTIVE enter/exit events (the "MPI call" timeline, Fig 2),
+  * communication records following the op's algorithm:
+      - collective-permute: exactly its source->target pairs;
+      - all-to-all: full pairwise exchange (operand/n per peer);
+      - all-reduce / all-gather / reduce-scatter: bidirectional-ring
+        neighbour aggregate messages (one record per directed ring edge).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import events as ev
+from repro.core.hlo_comm import CollectiveOp
+from repro.core.process_model import device_task_thread
+
+LINK_BW = 50e9  # ~GB/s per ICI link (task spec hardware constants)
+
+
+def device_endpoint_map(mesh, task_axes=("pod", "data"), thread_axes=("model",)):
+    """global device index (XLA replica id) -> (task, thread)."""
+    n = mesh.size
+    return {i: device_task_thread(mesh, i, task_axes, thread_axes) for i in range(n)}
+
+
+def replay_step(
+    tracer, ops: list[CollectiveOp], t0: int, t1: int, endpoint_map: dict,
+    *, step: int | None = None, comm_records: bool = True,
+    max_group_for_comms: int = 64,
+):
+    """Inject one step's collective schedule into ``tracer`` over [t0, t1).
+
+    ``max_group_for_comms`` caps ring-record synthesis for very large groups
+    (the events/states are always injected; only pairwise records are capped
+    to keep trace sizes sane — the cap is recorded as a tag).
+    """
+    if not ops:
+        return
+    times = np.array([max(op.wire_bytes_per_device(), 1.0) / LINK_BW for op in ops])
+    total = times.sum()
+    span = (t1 - t0)
+    # collectives occupy their modeled fraction of the window, capped at 90%
+    frac = min(total / max(span * 1e-9, 1e-12), 0.9)
+    scale = frac * span / total * 1e-9 if total > 0 else 0.0
+    gaps = (span - times.sum() * scale / 1e-9) / (len(ops) + 1)
+
+    cursor = float(t0)
+    for i, op in enumerate(ops):
+        dur = times[i] * scale / 1e-9  # ns
+        cursor += gaps
+        begin, end = int(cursor), int(cursor + max(dur, 1.0))
+        cursor = end
+        kind_id = ev.COLL_IDS[op.kind]
+        groups = op.replica_groups or (tuple(sorted(endpoint_map)),)
+        if op.kind == "collective-permute" and op.source_target_pairs:
+            participants = sorted({d for p in op.source_target_pairs for d in p})
+            groups = (tuple(participants),)
+        for group in groups:
+            for dev in group:
+                if dev not in endpoint_map:
+                    continue
+                task, thread = endpoint_map[dev]
+                tracer.inject_state(task, thread, begin, end, ev.STATE_GROUP_COMM)
+                tracer.inject_event(task, thread, begin, ev.EV_COLLECTIVE, kind_id)
+                tracer.inject_event(task, thread, end, ev.EV_COLLECTIVE, ev.COLL_END)
+            if comm_records:
+                _inject_comms(tracer, op, group, begin, end, endpoint_map,
+                              max_group_for_comms, tag=i)
+
+
+def _inject_comms(tracer, op, group, begin, end, endpoint_map, cap, tag):
+    n = len(group)
+    if n <= 1:
+        return
+    if op.kind == "collective-permute" and op.source_target_pairs:
+        for src, dst in op.source_target_pairs:
+            if src in endpoint_map and dst in endpoint_map:
+                tracer.comm(src=endpoint_map[src], dst=endpoint_map[dst],
+                            send_ns=begin, recv_ns=end,
+                            size=op.operand_bytes, tag=tag)
+        return
+    if n > cap:
+        group = group[:cap]
+        n = len(group)
+    if op.kind == "all-to-all":
+        per = max(op.operand_bytes // max(n, 1), 1)
+        for a in group:
+            for b in group:
+                if a != b and a in endpoint_map and b in endpoint_map:
+                    tracer.comm(src=endpoint_map[a], dst=endpoint_map[b],
+                                send_ns=begin, recv_ns=end, size=per, tag=tag)
+        return
+    # ring algorithms: one aggregate record per directed ring edge
+    size = int(op.wire_bytes_per_device())
+    for i in range(n):
+        a, b = group[i], group[(i + 1) % n]
+        if a in endpoint_map and b in endpoint_map:
+            tracer.comm(src=endpoint_map[a], dst=endpoint_map[b],
+                        send_ns=begin, recv_ns=end, size=size, tag=tag)
+
+
+def replay_running_gaps(tracer, endpoint_map, t0: int, t1: int):
+    """Mark the step window base state RUNNING for every endpoint (the
+    injected GROUP_COMM intervals overlay it in Paraver's state semantics)."""
+    for task, thread in set(endpoint_map.values()):
+        tracer.inject_state(task, thread, t0, t1, ev.STATE_RUNNING)

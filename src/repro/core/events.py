@@ -1,0 +1,105 @@
+"""Predefined event types and Paraver state ids (Extrae-compatible flavor).
+
+Extrae reserves code ranges per source; we keep the same ranges so traces
+open naturally next to Extrae-produced ones:
+
+  * 4xxxxxxx  runtime/tracer events (flush, phases)
+  * 5xxxxxxx  communication-model events (our XLA collectives ~ "MPI calls")
+  * 42xxxxxx  counters (PAPI analogue: XLA cost-analysis + rusage)
+  * 45xxxxxx  sampler events
+  * 6xxxxxxx  user functions
+  * >= 80000000  user events (``register``/``emit``)
+"""
+from __future__ import annotations
+
+# ---- Paraver states (subset of the default semantic table) ----
+STATE_IDLE = 0
+STATE_RUNNING = 1
+STATE_NOT_CREATED = 2
+STATE_WAITING_MSG = 3
+STATE_WAITING_LINK = 4
+STATE_SYNC = 5
+STATE_GROUP_COMM = 9
+STATE_IO = 10
+STATE_RUNTIME = 12
+STATE_FLUSH = 13
+
+STATE_LABELS = {
+    STATE_IDLE: "Idle",
+    STATE_RUNNING: "Running",
+    STATE_NOT_CREATED: "Not created",
+    STATE_WAITING_MSG: "Waiting a message",
+    STATE_WAITING_LINK: "Blocking Send",
+    STATE_SYNC: "Synchronization",
+    STATE_GROUP_COMM: "Group Communication",
+    STATE_IO: "I/O",
+    STATE_RUNTIME: "Not used / runtime",
+    STATE_FLUSH: "Flushing traces",
+}
+
+# ---- tracer/runtime phases ----
+EV_PHASE = 40000001  # trainer phase; values below
+PHASE_END = 0
+PHASE_STEP = 1
+PHASE_DATA = 2
+PHASE_CKPT = 3
+PHASE_COMPILE = 4
+PHASE_EVAL = 5
+PHASE_LABELS = {
+    PHASE_END: "End",
+    PHASE_STEP: "train_step",
+    PHASE_DATA: "data_load",
+    PHASE_CKPT: "checkpoint",
+    PHASE_COMPILE: "compile",
+    PHASE_EVAL: "eval",
+}
+
+EV_FLUSH = 40000003  # tracer buffer flush (begin=1/end=0)
+EV_STEP_NUMBER = 40000050  # value = global step
+
+# ---- collective ("MPI-call") events; value = routine id ----
+EV_COLLECTIVE = 50000002
+COLL_END = 0
+COLL_ALL_REDUCE = 1
+COLL_ALL_GATHER = 2
+COLL_REDUCE_SCATTER = 3
+COLL_ALL_TO_ALL = 4
+COLL_PERMUTE = 5
+COLL_SEND_RECV = 6
+COLL_LABELS = {
+    COLL_END: "End",
+    COLL_ALL_REDUCE: "all-reduce",
+    COLL_ALL_GATHER: "all-gather",
+    COLL_REDUCE_SCATTER: "reduce-scatter",
+    COLL_ALL_TO_ALL: "all-to-all",
+    COLL_PERMUTE: "collective-permute",
+    COLL_SEND_RECV: "send-recv",
+}
+COLL_IDS = {v: k for k, v in COLL_LABELS.items() if k != COLL_END}
+
+# ---- counters (PAPI analogue) ----
+EV_CTR_FLOPS = 42100001  # per-step HLO flops (per device), from cost_analysis
+EV_CTR_BYTES = 42100002  # per-step HLO bytes accessed
+EV_CTR_COLL_BYTES = 42100003  # per-step collective bytes (per device)
+EV_CTR_RSS = 42100010  # max RSS (KiB)
+EV_CTR_UTIME = 42100011  # user time (us)
+EV_CTR_STIME = 42100012  # system time (us)
+EV_CTR_MINFLT = 42100013  # minor page faults
+CTR_LABELS = {
+    EV_CTR_FLOPS: "HLO FLOPs per step (device)",
+    EV_CTR_BYTES: "HLO bytes accessed per step (device)",
+    EV_CTR_COLL_BYTES: "Collective bytes per step (device)",
+    EV_CTR_RSS: "Max RSS (KiB)",
+    EV_CTR_UTIME: "User time (us)",
+    EV_CTR_STIME: "System time (us)",
+    EV_CTR_MINFLT: "Minor page faults",
+}
+
+# ---- sampler ----
+EV_SAMPLE_FUNC = 45000100  # value = registered function id (callstack leaf)
+
+# ---- user functions (@user_function analogue); value = func id, 0 = end ----
+EV_USER_FUNC = 60000019
+
+# ---- first code available to Extrae.register()-style user events ----
+USER_EVENT_BASE = 80000000

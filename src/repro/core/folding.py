@@ -1,0 +1,84 @@
+"""Folding — the paper's second named future-work integration.
+
+BSC's Folding tool overlays the sparse samples from many repetitions of a
+region (e.g. every train_step instance) onto ONE normalized time axis,
+turning a 1 kHz sampler into an effectively much finer profile of the
+*representative* instance.  We implement that core idea over our Trace:
+
+  1. collect the instances of a bracketed region (phase/user-function
+     enter->exit pairs);
+  2. map every sampler event inside an instance to its normalized position
+     t in [0, 1);
+  3. histogram the folded samples per sampled function -> a fine-grained
+     "where inside a step does time go" profile that no single instance's
+     samples could resolve.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import events as ev
+from repro.core.analysis import routine_timeline
+from repro.core.records import Trace
+
+
+@dataclasses.dataclass
+class FoldedProfile:
+    region_value: int
+    num_instances: int
+    num_samples: int
+    bins: np.ndarray  # [num_bins] sample density over normalized time
+    per_function: dict[str, np.ndarray]  # function -> folded histogram
+    mean_duration_ns: float
+
+    def top_functions(self, k: int = 5) -> list[tuple[str, float]]:
+        total = max(self.num_samples, 1)
+        return sorted(
+            ((name, h.sum() / total) for name, h in self.per_function.items()),
+            key=lambda kv: -kv[1],
+        )[:k]
+
+
+def fold(trace: Trace, *, region_type: int = ev.EV_PHASE,
+         region_value: int = ev.PHASE_STEP,
+         sample_type: int = ev.EV_SAMPLE_FUNC, num_bins: int = 50,
+         task: int | None = None) -> FoldedProfile:
+    """Fold sampler events from every instance of a region onto [0, 1)."""
+    tl = routine_timeline(trace, region_type)
+    instances = []
+    for t, arr in tl.items():
+        if task is not None and t != task:
+            continue
+        sel = arr[arr["value"] == region_value]
+        instances.extend((int(r["begin"]), int(r["end"]), t) for r in sel)
+    samples = trace.events[trace.events["type"] == sample_type]
+    labels = trace.event_types.get(sample_type)
+    names = labels.values if labels else {}
+
+    bins = np.zeros(num_bins)
+    per_fn: dict[str, np.ndarray] = {}
+    n_samples = 0
+    durs = []
+    for begin, end, t in instances:
+        durs.append(end - begin)
+        if end <= begin:
+            continue
+        inside = samples[(samples["time"] >= begin) & (samples["time"] < end)
+                         & (samples["task"] == t)]
+        for s in inside:
+            pos = (int(s["time"]) - begin) / (end - begin)
+            b = min(int(pos * num_bins), num_bins - 1)
+            bins[b] += 1
+            name = names.get(int(s["value"]), f"fn{int(s['value'])}")
+            per_fn.setdefault(name, np.zeros(num_bins))[b] += 1
+            n_samples += 1
+    return FoldedProfile(
+        region_value=region_value,
+        num_instances=len(instances),
+        num_samples=n_samples,
+        bins=bins,
+        per_function=per_fn,
+        mean_duration_ns=float(np.mean(durs)) if durs else 0.0,
+    )

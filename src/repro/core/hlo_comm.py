@@ -1,0 +1,211 @@
+"""Static communication capture from compiled SPMD HLO.
+
+On TPU there is no symbol interception: every collective the hardware will
+run is present in the optimized HLO of the compiled step.  This module
+parses ``compiled.as_text()`` and extracts each collective with exact byte
+counts, replica groups, and (for collective-permute) source->target pairs —
+strictly *more* information than Extrae's MPI wrappers see, obtained before
+the job even runs.
+
+Outputs feed (a) per-step communication records replayed onto the trace
+timeline (core/comm_replay.py), and (b) the roofline collective term
+(launch/roofline.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVE_KINDS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+# e.g.  %name = bf16[512,64]{1,0} all-gather(%x), channel_id=1, ...
+#        %name = (f32[2]{0}, f32[4]{0}) all-gather-start(...)
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w\.\-]+)\s*=\s*(?P<type>.+?)\s+"
+    r"(?P<op>[a-z][\w\-]*)\("
+)
+_SHAPE_RE = re.compile(r"(?P<dt>\w+)\[(?P<dims>[\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{(?P<g>.*?)\}(?:,|\s|$)")
+_GROUPS_V2_RE = re.compile(
+    r"replica_groups=\[(?P<rows>\d+),(?P<cols>\d+)\]<=\[(?P<dims>[\d,]+)\]"
+    r"(?:T\((?P<perm>[\d,]+)\))?"
+)
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt = m.group("dt")
+        if dt not in _DTYPE_BYTES:
+            continue
+        dims = m.group("dims")
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass(frozen=True)
+class CollectiveOp:
+    name: str
+    kind: str  # one of COLLECTIVE_KINDS
+    result_bytes: int
+    operand_bytes: int  # per-participant payload (the "message" size)
+    group_size: int
+    num_groups: int
+    source_target_pairs: tuple[tuple[int, int], ...] = ()
+    replica_groups: tuple[tuple[int, ...], ...] = ()
+
+    def wire_bytes_per_device(self) -> float:
+        """Ring/bidirectional cost model: bytes crossing one device's links.
+
+        all-gather:       (n-1)/n * result        (each device receives the rest)
+        reduce-scatter:   (n-1)/n * operand
+        all-reduce:       2 * (n-1)/n * operand   (RS + AG)
+        all-to-all:       (n-1)/n * operand
+        collective-permute: operand               (point-to-point)
+        """
+        n = max(self.group_size, 1)
+        f = (n - 1) / n
+        if self.kind == "all-gather":
+            return f * self.result_bytes
+        if self.kind == "reduce-scatter":
+            return f * self.operand_bytes
+        if self.kind == "all-reduce":
+            return 2.0 * f * self.operand_bytes
+        if self.kind == "all-to-all":
+            return f * self.operand_bytes
+        return float(self.operand_bytes)
+
+
+def _parse_groups(line: str, total_devices: int | None):
+    m = _GROUPS_V2_RE.search(line)
+    if m:
+        # iota form: [rows,cols]<=[dims...](T(perm)?) — device ids are an iota
+        # over prod(dims), optionally transposed, reshaped to (rows, cols)
+        import numpy as np
+
+        rows, cols = int(m.group("rows")), int(m.group("cols"))
+        dims = [int(x) for x in m.group("dims").split(",")]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group("perm"):
+            ids = np.transpose(ids, [int(x) for x in m.group("perm").split(",")])
+        ids = ids.reshape(rows, cols)
+        groups = tuple(tuple(int(x) for x in row) for row in ids)
+        return groups, cols, rows
+    key = "replica_groups={"
+    start = line.find(key)
+    if start >= 0:
+        # scan balanced braces: replica_groups={{0,4},{1,5},...} or {0,1,2}
+        i = start + len(key) - 1
+        depth, j = 0, i
+        while j < len(line):
+            if line[j] == "{":
+                depth += 1
+            elif line[j] == "}":
+                depth -= 1
+                if depth == 0:
+                    break
+            j += 1
+        body = line[i + 1: j]
+        if not body:
+            return (), total_devices or 1, 1
+        groups = [
+            tuple(int(x) for x in part.split(",") if x)
+            for part in re.findall(r"\{([\d,]*)\}", body)
+        ]
+        groups = [g for g in groups if g]
+        if not groups and body.strip():
+            groups = [tuple(int(x) for x in body.split(",") if x.strip())]
+        if groups:
+            return tuple(groups), len(groups[0]), len(groups)
+    return (), total_devices or 1, 1
+
+
+def parse_collectives(hlo_text: str, total_devices: int | None = None) -> list[CollectiveOp]:
+    """Extract every collective from optimized HLO text.
+
+    Handles sync ops and async ``*-start`` forms (``*-done`` is skipped so
+    nothing is double-counted).
+    """
+    ops: list[CollectiveOp] = []
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        op = m.group("op")
+        base = op[:-6] if op.endswith("-start") else op
+        if base not in COLLECTIVE_KINDS:
+            continue
+        if op.endswith("-done"):
+            continue
+        type_str = m.group("type")
+        if op.endswith("-start") and type_str.lstrip().startswith("("):
+            # async form: tuple (operand_alias, result) — count the result only
+            elems = [e for e in re.split(r",(?![^\[]*\])", type_str.strip("() "))
+                     if _SHAPE_RE.search(e)]
+            type_str = elems[-1] if elems else type_str
+        result_bytes = _type_bytes(type_str)
+        groups, gsize, ngroups = _parse_groups(line, total_devices)
+        pairs = ()
+        pstart = line.find("source_target_pairs={")
+        if pstart >= 0:
+            seg = line[pstart + len("source_target_pairs="):]
+            depth, j = 0, 0
+            while j < len(seg):
+                if seg[j] == "{":
+                    depth += 1
+                elif seg[j] == "}":
+                    depth -= 1
+                    if depth == 0:
+                        break
+                j += 1
+            pairs = tuple(
+                (int(a), int(b))
+                for a, b in re.findall(r"\{(\d+),(\d+)\}", seg[1:j] )
+            )
+            gsize = 2
+        # per-participant payload from result size + op semantics
+        if base == "all-gather":
+            operand = result_bytes // max(gsize, 1)
+        elif base == "reduce-scatter":
+            operand = result_bytes * max(gsize, 1)
+        else:  # all-reduce, all-to-all, collective-permute
+            operand = result_bytes
+        ops.append(
+            CollectiveOp(
+                name=m.group("name"), kind=base, result_bytes=result_bytes,
+                operand_bytes=operand, group_size=gsize, num_groups=ngroups,
+                source_target_pairs=pairs, replica_groups=groups,
+            )
+        )
+    return ops
+
+
+def collective_summary(ops: list[CollectiveOp]) -> dict:
+    """Aggregates used by EXPERIMENTS.md section Dry-run and the roofline."""
+    by_kind: dict[str, dict] = {}
+    for op in ops:
+        d = by_kind.setdefault(op.kind, {"count": 0, "operand_bytes": 0, "wire_bytes": 0.0})
+        d["count"] += 1
+        d["operand_bytes"] += op.operand_bytes
+        d["wire_bytes"] += op.wire_bytes_per_device()
+    total_operand = sum(d["operand_bytes"] for d in by_kind.values())
+    total_wire = sum(d["wire_bytes"] for d in by_kind.values())
+    return {
+        "by_kind": by_kind,
+        "total_operand_bytes": total_operand,
+        "total_wire_bytes_per_device": total_wire,
+        "count": sum(d["count"] for d in by_kind.values()),
+    }

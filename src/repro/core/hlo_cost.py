@@ -1,0 +1,363 @@
+"""HLO-text cost model with while-loop trip-count awareness.
+
+XLA's built-in ``HloCostAnalysis`` (surfaced as ``compiled.cost_analysis()``)
+counts a while-loop body ONCE, regardless of trip count.  Every LM stack in
+this repo is a ``lax.scan`` over layers, so FLOPs/bytes/collective counts
+would be under-reported by ~num_layers.  This module re-derives the counters
+from ``compiled.as_text()``:
+
+  * parses the module into computations;
+  * walks the call graph from ENTRY, assigning each computation an execution
+    multiplier (while bodies/conditions x trip count, fusions/calls x1,
+    conditionals take the max branch);
+  * counts dot/convolution FLOPs exactly from shapes + contraction dims,
+    elementwise/reduce ops at 1 flop/element;
+  * counts memory traffic as operand+result bytes of top-level ops (fusion
+    internals excluded — they live in registers/VMEM, which is also the
+    more faithful HBM-traffic model);
+  * scales every collective by its computation's multiplier.
+
+Trip counts are recovered from the loop-condition computation (the compare
+against a constant that ``lax.scan`` emits).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+from repro.core.hlo_comm import (
+    COLLECTIVE_KINDS, CollectiveOp, _INSTR_RE, _SHAPE_RE, _type_bytes,
+    parse_collectives,
+)
+
+# e.g.  %region_0.2 (arg_tuple.3: (s32[], f32[8,64]{1,0})) -> (s32[], ...) {
+#       ENTRY %main.7 (Arg_0.1: f32[7,64,64]) -> f32[7,64,64] {
+_COMP_HEADER_RE = re.compile(
+    r"^(?:ENTRY\s+)?%?(?P<name>[\w\.\-]+)\s+\(.*\)\s*->\s*.+\{\s*$"
+)
+_CONST_RE = re.compile(r"=\s*[su]\d+\[\]\s+constant\((\d+)\)")
+_CALLED_RE = re.compile(r"(?:to_apply|calls|body|condition|branch_computations)=\{?%?([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)\}?")
+_DOT_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "exponential-minus-one", "log", "log-plus-one", "tanh",
+    "rsqrt", "sqrt", "negate", "abs", "sign", "floor", "ceil", "round",
+    "compare", "select", "and", "or", "xor", "not", "clamp", "atan2",
+    "cosine", "sine", "logistic", "cbrt", "erf",
+}
+_REDUCE_OPS = {"reduce", "reduce-window", "all-reduce", "reduce-scatter"}
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    line: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: list[Instr]
+    is_fusion_body: bool = False
+
+    def __post_init__(self):
+        self.shapes: dict[str, str] = {}
+
+
+def parse_module(text: str):
+    """-> (computations: {name: Computation}, entry_name).
+
+    Instruction names are only unique *within* a computation, so each
+    Computation carries its own name->type table (a global table collides
+    across computations and mis-resolves operand shapes).
+    """
+    comps: dict[str, Computation] = {}
+    entry = None
+    cur: Computation | None = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HEADER_RE.match(line.strip())
+            if m:
+                cur = Computation(m.group("name"), [])
+                if line.strip().startswith("ENTRY"):
+                    entry = cur.name
+                comps[cur.name] = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if m:
+            ins = Instr(m.group("name"), m.group("type"), m.group("op"), line)
+            cur.instrs.append(ins)
+            cur.shapes[ins.name] = ins.type_str
+    if entry is None and comps:
+        entry = next(iter(comps))
+    return comps, entry
+
+
+def _trip_count(comps, cond_name: str) -> int:
+    cond = comps.get(cond_name)
+    if cond is None:
+        return 1
+    consts = []
+    for ins in cond.instrs:
+        consts += [int(x) for x in _CONST_RE.findall(ins.line)]
+    return max(consts) if consts else 1
+
+
+def _callees(ins: Instr) -> list[str]:
+    out = []
+    for m in _CALLED_RE.finditer(ins.line):
+        for name in m.group(1).split(","):
+            out.append(name.strip().lstrip("%"))
+    return out
+
+
+def computation_multipliers(comps, entry: str) -> dict[str, float]:
+    """Execution count of each computation, walking from ENTRY."""
+    mult: dict[str, float] = {}
+
+    def visit(name: str, m: float):
+        if name not in comps:
+            return
+        mult[name] = mult.get(name, 0.0) + m
+        for ins in comps[name].instrs:
+            if ins.op == "while":
+                body = cond = None
+                bm = re.search(r"body=%?([\w\.\-]+)", ins.line)
+                cm = re.search(r"condition=%?([\w\.\-]+)", ins.line)
+                body = bm.group(1) if bm else None
+                cond = cm.group(1) if cm else None
+                trips = _trip_count(comps, cond) if cond else 1
+                if body:
+                    visit(body, m * trips)
+                if cond:
+                    visit(cond, m * (trips + 1))
+            elif ins.op == "conditional":
+                for c in _callees(ins):
+                    visit(c, m)  # upper bound: all branches counted
+            elif ins.op in ("fusion", "call", "map", "reduce", "reduce-window",
+                            "sort", "scatter", "select-and-scatter",
+                            "all-reduce", "reduce-scatter", "custom-call"):
+                for c in _callees(ins):
+                    # reducers/comparators are trivial; count structure x1
+                    visit(c, m)
+    visit(entry, 1.0)
+    return mult
+
+
+def _dims_product(type_str: str) -> float:
+    total = 0.0
+    for m in _SHAPE_RE.finditer(type_str):
+        n = 1.0
+        if m.group("dims"):
+            for d in m.group("dims").split(","):
+                n *= int(d)
+        total += n
+    return total
+
+
+def _dot_flops(ins: Instr, shapes: dict[str, str]) -> float:
+    result_elems = _dims_product(ins.type_str)
+    mm = _DOT_DIMS_RE.search(ins.line)
+    # lhs operand name = first operand in parens
+    ops = re.search(r"\b" + re.escape(ins.op) + r"\(([^)]*)\)", ins.line)
+    contract = 1.0
+    if mm and ops:
+        lhs_name = ops.group(1).split(",")[0].strip().lstrip("%")
+        lhs_type = shapes.get(lhs_name, "")
+        sm = _SHAPE_RE.search(lhs_type)
+        if sm and sm.group("dims"):
+            dims = [int(x) for x in sm.group("dims").split(",")]
+            idxs = [int(x) for x in mm.group(1).split(",") if x]
+            for i in idxs:
+                if i < len(dims):
+                    contract *= dims[i]
+    return 2.0 * result_elems * contract
+
+
+def _conv_flops(ins: Instr, shapes: dict[str, str]) -> float:
+    result_elems = _dims_product(ins.type_str)
+    ops = re.search(r"convolution\(([^)]*)\)", ins.line)
+    rhs_elems = 1.0
+    if ops:
+        parts = [p.strip().lstrip("%") for p in ops.group(1).split(",")]
+        if len(parts) >= 2:
+            rhs_elems = _dims_product(shapes.get(parts[1], ""))
+    fg = re.search(r"feature_group_count=(\d+)", ins.line)
+    groups = int(fg.group(1)) if fg else 1
+    # per output element: prod(kernel)/out_channels MACs (grouped conv aware)
+    out_ch = 1.0
+    sm = list(_SHAPE_RE.finditer(ins.type_str))
+    if sm and sm[0].group("dims"):
+        out_ch = float(sm[0].group("dims").split(",")[-1] or 1)
+    per_out = rhs_elems / max(out_ch, 1.0)
+    return 2.0 * result_elems * per_out * 1.0 if groups == 1 else 2.0 * result_elems * per_out
+
+
+def _operand_names(ins: Instr) -> list[str]:
+    ops = re.search(r"\b" + re.escape(ins.op) + r"\(([^)]*)\)", ins.line)
+    if not ops:
+        return []
+    names = []
+    for p in ops.group(1).split(","):
+        p = p.strip()
+        p = re.sub(r"/\*.*?\*/", "", p).strip()  # strip /*index=N*/ comments
+        names.append(p.lstrip("%"))
+    return names
+
+
+def _operand_bytes(ins: Instr, shapes: dict[str, str]) -> float:
+    return sum(_type_bytes(shapes[p]) for p in _operand_names(ins) if p in shapes)
+
+
+def _fusion_operand_bytes(ins: Instr, shapes: dict[str, str], comps) -> float:
+    """Operand bytes for a fusion, slice-aware.
+
+    lax.scan passes whole stacked carry buffers ([L, ...]) into per-layer
+    fusions that immediately ``dynamic-slice`` them — the actual HBM read is
+    one slice, not the buffer.  For each operand whose corresponding fusion
+    parameter is consumed (only) by a dynamic-slice, count the slice bytes.
+    """
+    called = None
+    cm = re.search(r"calls=%?([\w\.\-]+)", ins.line)
+    if cm:
+        called = comps.get(cm.group(1))
+    names = _operand_names(ins)
+    if called is None:
+        return sum(_type_bytes(shapes[p]) for p in names if p in shapes)
+
+    # map parameter index -> parameter name inside the fused computation
+    param_name: dict[int, str] = {}
+    for b_ins in called.instrs:
+        if b_ins.op == "parameter":
+            pm = re.search(r"parameter\((\d+)\)", b_ins.line)
+            if pm:
+                param_name[int(pm.group(1))] = b_ins.name
+    total = 0.0
+    for i, p in enumerate(names):
+        full = _type_bytes(shapes.get(p, ""))
+        pname = param_name.get(i)
+        if pname:
+            sliced = 0.0
+            n_slice_uses = n_dus_dest_uses = n_other_uses = 0
+            for b_ins in called.instrs:
+                if b_ins.op == "parameter":
+                    continue
+                ops_in = _operand_names(b_ins)
+                if pname not in ops_in:
+                    continue
+                if b_ins.op in ("dynamic-slice", "slice"):
+                    sliced += _type_bytes(b_ins.type_str)
+                    n_slice_uses += 1
+                elif b_ins.op == "dynamic-update-slice" and ops_in[0] == pname:
+                    n_dus_dest_uses += 1  # in-place destination: not read
+                else:
+                    n_other_uses += 1
+            if n_other_uses == 0 and (n_slice_uses or n_dus_dest_uses):
+                total += min(sliced, full)
+                continue
+        total += full
+    return total
+
+
+def _fusion_result_bytes(ins: Instr, comps) -> float:
+    """Result bytes for a fusion; if the fusion root is a dynamic-update-slice
+    the write is one update region, not the whole (aliased) buffer."""
+    cm = re.search(r"calls=%?([\w\.\-]+)", ins.line)
+    called = comps.get(cm.group(1)) if cm else None
+    if called is not None:
+        for b_ins in called.instrs:
+            if "ROOT" in b_ins.line and b_ins.op == "dynamic-update-slice":
+                ops_in = _operand_names(b_ins)
+                if len(ops_in) >= 2:
+                    upd = called.shapes.get(ops_in[1], "")
+                    if upd:
+                        return _type_bytes(upd)
+    return _type_bytes(ins.type_str)
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float
+    bytes_accessed: float
+    collectives: list[CollectiveOp]
+    coll_operand_bytes: float
+    coll_wire_bytes: float
+    while_trip_counts: dict[str, int]
+
+    @property
+    def collective_bytes(self) -> float:
+        return self.coll_operand_bytes
+
+
+def analyze_hlo(text: str, total_devices: int | None = None) -> HloCost:
+    comps, entry = parse_module(text)
+    mult = computation_multipliers(comps, entry)
+
+    flops = 0.0
+    bytes_acc = 0.0
+    coll_operand = 0.0
+    coll_wire = 0.0
+    collectives: list[CollectiveOp] = []
+    trips: dict[str, int] = {}
+
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m <= 0:
+            continue
+        fusion_body = cname.startswith("fused_") or ".fused" in cname
+        shapes = comp.shapes
+        for ins in comp.instrs:
+            op = ins.op
+            if op == "parameter" or op == "constant":
+                continue
+            if op == "dot":
+                flops += m * _dot_flops(ins, shapes)
+            elif op == "convolution":
+                flops += m * _conv_flops(ins, shapes)
+            elif op in _ELEMENTWISE:
+                flops += m * _dims_product(ins.type_str)
+            elif op in _REDUCE_OPS:
+                flops += m * _operand_bytes(ins, shapes) / 4.0  # ~1 flop/elem
+            if op == "while":
+                cm = re.search(r"condition=%?([\w\.\-]+)", ins.line)
+                if cm:
+                    trips[ins.name] = _trip_count(comps, cm.group(1))
+            base = op[:-6] if op.endswith("-start") else op
+            if base in COLLECTIVE_KINDS and not op.endswith("-done"):
+                parsed = parse_collectives(ins.line, total_devices)
+                for c in parsed:
+                    coll_operand += m * c.operand_bytes
+                    coll_wire += m * c.wire_bytes_per_device()
+                    collectives.append(c if m == 1.0 else dataclasses.replace(
+                        c, name=f"{c.name}(x{m:g})"))
+            # HBM traffic: top-level ops only (fusion internals live in VMEM;
+            # while/conditional results are in-place carries, their bodies'
+            # ops are counted directly)
+            if not fusion_body and op not in (
+                "tuple", "get-tuple-element", "bitcast", "parameter",
+                "while", "conditional", "call",
+            ):
+                if op == "fusion":
+                    opb = _fusion_operand_bytes(ins, shapes, comps)
+                    res = _fusion_result_bytes(ins, comps)
+                elif op == "dynamic-update-slice":
+                    # in-place: read update + write region (not the buffer)
+                    names = _operand_names(ins)
+                    upd = _type_bytes(shapes.get(names[1], "")) if len(names) > 1 else 0.0
+                    opb, res = upd, upd
+                else:
+                    opb = _operand_bytes(ins, shapes)
+                    res = _type_bytes(ins.type_str)
+                bytes_acc += m * (res + opb)
+
+    return HloCost(
+        flops=flops, bytes_accessed=bytes_acc, collectives=collectives,
+        coll_operand_bytes=coll_operand, coll_wire_bytes=coll_wire,
+        while_trip_counts=trips,
+    )

@@ -1,0 +1,114 @@
+"""Paraver process model: WORKLOAD > APPLICATION > TASK > THREAD.
+
+The paper's key design point: the process model is *virtual* and orthogonal
+to the physical resource model, and the TASK/THREAD identity functions are
+user-replaceable (``set_taskid_function!`` / ``set_threadid_function!`` in
+Extrae.jl).  Mapping policies provided here:
+
+  * "single"          — one task, threads = host threads (default on CPU);
+  * "jax_process"     — task = jax.process_index() (multi-host JAX ~ MPI rank);
+  * "mesh_data"       — task = data-parallel coordinate of a device in the
+                        mesh, thread = model-parallel coordinate (how we map
+                        an SPMD program onto the MPI-rank-shaped model);
+  * custom            — any callables via set_task_id_fn / set_num_tasks_fn.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable
+
+
+class ProcessModel:
+    def __init__(self, mode: str = "single"):
+        self._local = threading.local()
+        self._thread_counter = 0
+        self._lock = threading.Lock()
+        self._task_id_fn: Callable[[], int] | None = None
+        self._num_tasks_fn: Callable[[], int] | None = None
+        self._thread_id_fn: Callable[[], int] | None = None
+        self.set_mode(mode)
+
+    # ---- identity-function customization (Extrae.jl API parity) ----
+    def set_task_id_fn(self, fn: Callable[[], int]):
+        self._task_id_fn = fn
+
+    def set_num_tasks_fn(self, fn: Callable[[], int]):
+        self._num_tasks_fn = fn
+
+    def set_thread_id_fn(self, fn: Callable[[], int]):
+        self._thread_id_fn = fn
+
+    def set_mode(self, mode: str):
+        self.mode = mode
+        if mode == "single":
+            self._task_id_fn = lambda: 0
+            self._num_tasks_fn = lambda: 1
+        elif mode == "jax_process":
+            import jax
+
+            self._task_id_fn = jax.process_index
+            self._num_tasks_fn = jax.process_count
+        elif mode == "mesh_data":
+            # configured later via bind_mesh()
+            self._task_id_fn = lambda: 0
+            self._num_tasks_fn = lambda: 1
+        else:
+            raise ValueError(f"unknown process-model mode {mode!r}")
+
+    def bind_mesh(self, mesh, task_axes=("pod", "data"), thread_axes=("model",)):
+        """mesh_data mode: TASK = flattened (pod, data) coordinate,
+        THREAD = flattened (model,) coordinate of the *local* device."""
+        import numpy as np
+
+        names = [a for a in task_axes if a in mesh.axis_names]
+        ntasks = int(np.prod([mesh.shape[a] for a in names])) if names else 1
+        self._num_tasks_fn = lambda: ntasks
+        self.mesh = mesh
+        self.task_axes = names
+        self.thread_axes = [a for a in thread_axes if a in mesh.axis_names]
+
+    # ---- queries ----
+    def task_id(self) -> int:
+        return int(self._task_id_fn())
+
+    def num_tasks(self) -> int:
+        return int(self._num_tasks_fn())
+
+    def thread_id(self) -> int:
+        """Stable small integer per host thread (auto-assigned on first use),
+        unless a custom thread_id_fn was installed."""
+        if self._thread_id_fn is not None:
+            return int(self._thread_id_fn())
+        tid = getattr(self._local, "tid", None)
+        if tid is None:
+            with self._lock:
+                tid = self._thread_counter
+                self._thread_counter += 1
+            self._local.tid = tid
+        return tid
+
+    def num_threads_seen(self) -> int:
+        return max(self._thread_counter, 1)
+
+
+def device_task_thread(mesh, device_index: int,
+                       task_axes=("pod", "data"), thread_axes=("model",)):
+    """Map a flat device index in a mesh to (task, thread) per the mesh_data
+    policy — used when replaying compiled-HLO collectives onto the process
+    model (each participating device becomes a (task, thread) endpoint)."""
+    import numpy as np
+
+    shape = dict(mesh.shape)
+    names = list(mesh.axis_names)
+    sizes = [shape[n] for n in names]
+    coords = np.unravel_index(device_index, sizes)
+    coord = dict(zip(names, (int(c) for c in coords)))
+    task = 0
+    for a in task_axes:
+        if a in shape:
+            task = task * shape[a] + coord[a]
+    thread = 0
+    for a in thread_axes:
+        if a in shape:
+            thread = thread * shape[a] + coord[a]
+    return task, thread

@@ -1,0 +1,44 @@
+"""Paraver resource model: SYSTEM > NODE > CPU, built from jax.devices().
+
+On real TPU deployments NODE = host and CPU = local chip/core; in this CPU
+container jax reports one device, and synthetic multi-rank traces (HLO
+replay, benchmarks) construct the resource model from the mesh instead.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ResourceModel:
+    num_nodes: int
+    cpus_per_node: list[int]
+
+    @property
+    def total_cpus(self) -> int:
+        return sum(self.cpus_per_node)
+
+
+def from_jax_devices() -> ResourceModel:
+    import jax
+
+    devs = jax.devices()
+    hosts: dict[int, int] = {}
+    for d in devs:
+        hosts[d.process_index] = hosts.get(d.process_index, 0) + 1
+    n = max(len(hosts), 1)
+    return ResourceModel(num_nodes=n, cpus_per_node=[hosts.get(i, 1) for i in range(n)])
+
+
+def from_mesh(mesh, devices_per_node: int = 4) -> ResourceModel:
+    """Synthetic resource model for dry-run meshes: v5e-like hosts with
+    ``devices_per_node`` chips each."""
+    total = mesh.size
+    n = max(total // devices_per_node, 1)
+    return ResourceModel(num_nodes=n, cpus_per_node=[devices_per_node] * n)
+
+
+def node_of_task(rm: ResourceModel, num_tasks: int) -> list[int]:
+    """Round-robin tasks over nodes (contiguous blocks, MPI-style)."""
+    per = max(num_tasks // rm.num_nodes, 1)
+    return [min(t // per, rm.num_nodes - 1) for t in range(num_tasks)]

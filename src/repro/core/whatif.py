@@ -1,0 +1,94 @@
+"""Dimemas-style what-if analysis (the paper's named future-work item:
+"integrate with other BSC performance modeling tools such as Folding and
+Dimemas").
+
+Dimemas replays an Extrae trace through a network simulator to predict how
+the application would behave on different hardware.  We implement the core
+of that idea over our Trace model: every communication/collective interval
+is rescaled by a hypothetical link-bandwidth (or latency) factor, the
+per-task timelines are re-laid-out preserving computation intervals, and
+the tool reports predicted makespan/speedup — answering "what if the
+interconnect were k x faster?" without re-running the job.
+
+Works on both captured traces and the dry-run's compiled collective
+schedules (where it degenerates to rescaling the roofline collective term).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core import events as ev
+from repro.core.analysis import routine_timeline
+from repro.core.records import Trace
+
+
+@dataclasses.dataclass
+class WhatIfResult:
+    base_makespan_ns: int
+    predicted_makespan_ns: float
+    speedup: float
+    base_comm_ns: float
+    predicted_comm_ns: float
+    per_task_base_comm_ns: np.ndarray
+    per_task_predicted_ns: np.ndarray
+
+
+def simulate_bandwidth(trace: Trace, bandwidth_factor: float,
+                       *, latency_factor: float | None = None,
+                       event_type: int = ev.EV_COLLECTIVE) -> WhatIfResult:
+    """Predict the timeline if links were ``bandwidth_factor``x faster.
+
+    Model (Dimemas' simplest machine model): each communication interval's
+    duration splits into latency (fixed share, default 10%) + transfer
+    (scales with 1/bandwidth); computation is unchanged; per-task serial
+    re-layout (no re-overlapping discovered — conservative).
+    """
+    lat_share = 0.1
+    lat_f = latency_factor if latency_factor is not None else 1.0
+    tl = routine_timeline(trace, event_type)
+
+    per_base = np.zeros(trace.num_tasks)
+    per_pred = np.zeros(trace.num_tasks)
+    for task in range(trace.num_tasks):
+        arr = tl.get(task)
+        comm = float((arr["end"] - arr["begin"]).sum()) if arr is not None and len(arr) else 0.0
+        new_comm = comm * (lat_share * lat_f + (1 - lat_share) / bandwidth_factor)
+        per_base[task] = comm
+        per_pred[task] = trace.t_end - comm + new_comm
+
+    base_comm = float(per_base.sum())
+    pred_comm = base_comm * (lat_share * lat_f + (1 - lat_share) / bandwidth_factor)
+    predicted = float(per_pred.max()) if trace.num_tasks else float(trace.t_end)
+    return WhatIfResult(
+        base_makespan_ns=trace.t_end,
+        predicted_makespan_ns=predicted,
+        speedup=trace.t_end / predicted if predicted > 0 else 1.0,
+        base_comm_ns=base_comm,
+        predicted_comm_ns=pred_comm,
+        per_task_base_comm_ns=per_base,
+        per_task_predicted_ns=per_pred,
+    )
+
+
+def bandwidth_sweep(trace: Trace, factors=(0.5, 1.0, 2.0, 4.0, 8.0)):
+    """{factor: predicted speedup} — the classic Dimemas sensitivity curve.
+    A flat curve means the app is not communication-bound (paper section 4's
+    diagnosis workflow)."""
+    return {f: simulate_bandwidth(trace, f).speedup for f in factors}
+
+
+def roofline_whatif(compute_s: float, memory_s: float, collective_s: float,
+                    bandwidth_factor: float) -> dict:
+    """Dry-run variant: rescale the collective roofline term."""
+    base = max(compute_s, memory_s, collective_s)
+    new_coll = collective_s / bandwidth_factor
+    new = max(compute_s, memory_s, new_coll)
+    return {
+        "base_bound_s": base,
+        "predicted_bound_s": new,
+        "speedup": base / new if new > 0 else 1.0,
+        "bound_shifts_to": ("compute" if new == compute_s else
+                            "memory" if new == memory_s else "collective"),
+    }

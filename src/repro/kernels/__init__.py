@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the framework's compute hot spots (the paper has
+no kernel-level contribution — see DESIGN.md section 6):
+
+  flash_attention/  causal/SWA/GQA fused attention (kernel.py + ops.py + ref.py)
+  ssd_scan/         Mamba-2 SSD chunked scan    (kernel.py + ops.py + ref.py)
+
+Kernels are validated in interpret mode against pure-jnp oracles
+(tests/test_kernels_*.py) and target TPU (pl.pallas_call + BlockSpec VMEM
+tiling, 128-aligned MXU dims).
+"""

@@ -1,0 +1,48 @@
+"""jit'd wrapper: model layout <-> kernel layout, padding, backend select."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_fwd
+
+
+def _pad_to(x, axis: int, mult: int):
+    s = x.shape[axis]
+    pad = (-s) % mult
+    if pad == 0:
+        return x, s
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), s
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_offset", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q, k, v, *, causal: bool = True, window: int | None = None,
+    q_offset: int = 0, block_q: int = 128, block_k: int = 128,
+    interpret: bool | None = None,
+):
+    """q: [B, Sq, Hq, D]; k/v: [B, Skv, Hkv, D] (model layout).
+
+    interpret=None -> auto: Pallas interpret mode off-TPU (this container),
+    compiled Mosaic kernel on TPU.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    qt = jnp.swapaxes(q, 1, 2)  # [B, Hq, Sq, D]
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    qt, sq = _pad_to(qt, 2, block_q)
+    kt, _ = _pad_to(kt, 2, block_k)
+    vt, _ = _pad_to(vt, 2, block_k)
+    out = flash_attention_fwd(
+        qt, kt, vt, causal=causal, window=window, q_offset=q_offset,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return jnp.swapaxes(out[:, :, :sq], 1, 2)

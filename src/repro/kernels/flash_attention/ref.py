@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Deliberately standalone (no imports from repro.models) so kernel tests
+validate against an independent implementation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None,
+                  q_offset: int = 0):
+    """q: [B, Sq, Hq, D]; k/v: [B, Skv, Hkv, D] with Hq % Hkv == 0.
+
+    fp32 softmax, GQA by head replication.  Returns [B, Sq, Hq, D] in q.dtype.
+    """
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    kf = jnp.repeat(k, g, axis=2)  # [B, Skv, Hq, D]
+    vf = jnp.repeat(v, g, axis=2)
+    scores = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
+                        kf.astype(jnp.float32)) / (d ** 0.5)
+    q_pos = q_offset + jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    scores = jnp.where(mask[None, None], scores, -2.0e38)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", p, vf.astype(jnp.float32))
+    return out.astype(q.dtype)

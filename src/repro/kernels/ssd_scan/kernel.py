@@ -1,0 +1,112 @@
+"""Pallas TPU kernel for the Mamba-2 SSD chunked scan (forward).
+
+TPU adaptation of the SSD algorithm (arXiv:2405.21060): the chunk loop is a
+sequential grid dimension with the inter-chunk SSM state [N, P] held in VMEM
+scratch — the quadratic intra-chunk term and the state update are MXU
+matmuls ([L,L] and [N,L]x[L,P] with L, N, P multiples of 64/128).  Unlike
+the CUDA scan implementations there is no warp-level prefix scan: the state
+recurrence across chunks is carried by grid order, which is the natural
+systolic mapping on TPU.
+
+Grid: (B, H, S/L), chunk dim innermost.  The decay matrices are built
+in-register from a cumulative sum of dt*a — they never touch HBM (this is
+what the pure-jnp chunked path cannot avoid, and why it is memory-bound in
+the roofline table).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(a_ref, x_ref, dt_ref, b_ref, c_ref, y_ref, state_ref,
+                state_scr, *, l: int, num_chunks: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    a = -jnp.exp(a_ref[0].astype(jnp.float32))  # scalar
+    dt = dt_ref[0, 0, 0].astype(jnp.float32)  # [L]
+    xb = x_ref[0, 0, 0].astype(jnp.float32)  # [L, P]
+    bb = b_ref[0, 0, 0].astype(jnp.float32)  # [L, N]
+    cb = c_ref[0, 0, 0].astype(jnp.float32)  # [L, N]
+
+    da = dt * a  # [L]
+    cum = jnp.cumsum(da)  # [L]
+    # intra-chunk decay matrix exp(cum_i - cum_j) on the lower triangle
+    diff = cum[:, None] - cum[None, :]
+    tril = (
+        jax.lax.broadcasted_iota(jnp.int32, (l, l), 0)
+        >= jax.lax.broadcasted_iota(jnp.int32, (l, l), 1)
+    )
+    decay = jnp.where(tril, jnp.exp(diff), 0.0)  # [L, L]
+
+    scores = jax.lax.dot_general(
+        cb, bb, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )  # [L, L] = C B^T
+    xdt = xb * dt[:, None]  # [L, P]
+    y_diag = jax.lax.dot_general(
+        scores * decay, xdt, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [L, P]
+
+    state = state_scr[...]  # [N, P]
+    y_off = jax.lax.dot_general(
+        cb, state, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    ) * jnp.exp(cum)[:, None]  # [L, P]
+
+    y_ref[0, 0, 0] = (y_diag + y_off).astype(y_ref.dtype)
+
+    decay_last = jnp.exp(cum[-1] - cum)  # [L]
+    inc = jax.lax.dot_general(
+        bb, xdt * decay_last[:, None], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [N, P] = B^T (x dt decay)
+    new_state = state * jnp.exp(cum[-1]) + inc
+    state_scr[...] = new_state
+    state_ref[0, 0] = new_state
+
+
+def ssd_scan_fwd(x, dt, a_log, bmat, cmat, *, chunk: int = 128,
+                 interpret: bool = False):
+    """x: [B,H,S,P]; dt: [B,H,S]; a_log: [H]; bmat/cmat: [B,H,S,N]
+    (head-major layout, S a multiple of ``chunk`` — ops.py pads).
+
+    Returns (y [B,H,S,P], final_state [B,H,N,P])."""
+    b, h, s, p = x.shape
+    n = bmat.shape[-1]
+    l = min(chunk, s)
+    assert s % l == 0
+    nc = s // l
+    grid = (b, h, nc)
+
+    kernel = functools.partial(_ssd_kernel, l=l, num_chunks=nc)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda b_, h_, c: (h_,)),
+            pl.BlockSpec((1, 1, 1, l, p), lambda b_, h_, c: (b_, h_, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, l), lambda b_, h_, c: (b_, h_, c, 0)),
+            pl.BlockSpec((1, 1, 1, l, n), lambda b_, h_, c: (b_, h_, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, l, n), lambda b_, h_, c: (b_, h_, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, l, p), lambda b_, h_, c: (b_, h_, c, 0, 0)),
+            pl.BlockSpec((1, 1, n, p), lambda b_, h_, c: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, h, nc, l, p), x.dtype),
+            jax.ShapeDtypeStruct((b, h, n, p), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
+        interpret=interpret,
+    )(a_log, x.reshape(b, h, nc, l, p), dt.reshape(b, h, nc, l),
+      bmat.reshape(b, h, nc, l, n), cmat.reshape(b, h, nc, l, n))
+    return y.reshape(b, h, s, p), state

@@ -1,0 +1,44 @@
+"""jit'd wrapper: model layout <-> kernel layout, group expansion, padding."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan(x, dt, a_log, bmat, cmat, *, chunk: int = 128,
+             interpret: bool | None = None):
+    """Model layout: x [B,S,H,P]; dt [B,S,H] (post-softplus); a_log [H];
+    bmat/cmat [B,S,G,N] (G groups, H % G == 0).
+
+    Returns (y [B,S,H,P], final_state [B,H,N,P]).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, s, h, p = x.shape
+    g = bmat.shape[2]
+    reps = h // g
+    # per-head B/C (on real TPU the group sharing would stay in the index
+    # map; the expansion here keeps the kernel simple)
+    bh = jnp.repeat(bmat, reps, axis=2)  # [B,S,H,N]
+    ch = jnp.repeat(cmat, reps, axis=2)
+
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))  # dt=0 => identity step
+        bh = jnp.pad(bh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        ch = jnp.pad(ch, ((0, 0), (0, pad), (0, 0), (0, 0)))
+
+    xt = jnp.transpose(x, (0, 2, 1, 3))  # [B,H,S,P]
+    dtt = jnp.transpose(dt, (0, 2, 1))
+    bt = jnp.transpose(bh, (0, 2, 1, 3))
+    ct = jnp.transpose(ch, (0, 2, 1, 3))
+    y, state = ssd_scan_fwd(xt, dtt, a_log, bt, ct, chunk=chunk,
+                            interpret=interpret)
+    y = jnp.transpose(y, (0, 2, 1, 3))[:, :s]
+    return y, state

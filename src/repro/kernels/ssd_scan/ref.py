@@ -1,0 +1,41 @@
+"""Sequential-recurrence oracle for the SSD kernel.
+
+This is the *definitional* SSM semantics (one step per token), so it
+independently validates both the chunked-SSD algorithm in repro.models.ssm
+and the Pallas kernel:
+
+    h_t = exp(dt_t * a) * h_{t-1} + dt_t * B_t (outer) x_t
+    y_t = C_t . h_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_sequential_ref(x, dt, a_log, bmat, cmat, initial_state=None):
+    """x: [B,S,H,P]; dt: [B,S,H] (post-softplus); a_log: [H];
+    bmat/cmat: [B,S,H,N] (per-head).  Returns (y [B,S,H,P], state [B,H,N,P]).
+    """
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    a = -jnp.exp(a_log.astype(jnp.float32))  # [H]
+    if initial_state is None:
+        initial_state = jnp.zeros((b, h, n, p), jnp.float32)
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp  # [B,H,P], [B,H], [B,H,N], [B,H,N]
+        da = jnp.exp(dtt * a)  # [B,H]
+        inc = jnp.einsum("bhn,bhp->bhnp", bt, xt * dtt[..., None])
+        state = state * da[..., None, None] + inc
+        y = jnp.einsum("bhn,bhnp->bhp", ct, state)
+        return state, y
+
+    xs = (
+        jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(bmat.astype(jnp.float32), 1, 0),
+        jnp.moveaxis(cmat.astype(jnp.float32), 1, 0),
+    )
+    state, ys = jax.lax.scan(step, initial_state, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), state

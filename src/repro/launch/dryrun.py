@@ -1,0 +1,216 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before any jax import (device count locks on
+# first backend init).  Tests may shrink the fake-device pool:
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count=" + os.environ["REPRO_DRYRUN_DEVICES"]
+    )
+
+# Multi-pod dry-run: .lower().compile() every (arch x input-shape x mesh)
+# cell on placeholder devices, prove memory fit, and extract roofline terms.
+#
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all --mesh both
+#   PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x22b \
+#       --shape train_4k --mesh single --override act_seq_resid=model
+#
+# Failures here (sharding mismatch, OOM at compile, unsupported collective)
+# are bugs in the system — the run exits nonzero.
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import SHAPES, get_config, all_arch_names, shape_applicable
+from repro.configs.base import TrainConfig
+from repro.launch.mesh import dp_size, make_production_mesh, mesh_desc
+from repro.launch.roofline import analyze_compiled, format_table, model_flops
+from repro.models.model import build_model
+from repro.optim.adamw import abstract_train_state, train_state_axes
+from repro.sharding.partition import make_rules, use_rules
+from repro.train.step import make_train_step, pick_microbatches
+
+
+def lower_cell(cfg, shape, mesh, *, overrides=None, tcfg=None):
+    """Build + lower + compile one (arch x shape x mesh) cell.
+
+    Returns (compiled, lowered, model, info_dict)."""
+    tcfg = tcfg or TrainConfig()
+    model = build_model(cfg)
+    rules = make_rules(cfg, mesh, shape, overrides=overrides)
+    info: dict = {}
+
+    with use_rules(rules):
+        if shape.kind == "train":
+            mb = pick_microbatches(
+                shape.global_batch, dp_size(mesh),
+                cfg.microbatches.get(shape.name, 1),
+            )
+            info["microbatches"] = mb
+            step = make_train_step(model, tcfg, microbatches=mb)
+            mom = jnp.bfloat16 if tcfg.moment_dtype == "bfloat16" else jnp.float32
+            state_abs = abstract_train_state(model.abstract_params(), mom)
+            state_sh = rules.tree_shardings(train_state_axes(model.param_axes()))
+            batch_abs = model.batch_specs(shape)
+            batch_sh = {
+                k: rules.sharding(model.batch_axes()[k]) for k in batch_abs
+            }
+            lowered = jax.jit(
+                step, in_shardings=(state_sh, batch_sh),
+                out_shardings=(state_sh, None),
+                donate_argnums=(0,),  # state buffers update in place
+            ).lower(state_abs, batch_abs)
+        elif shape.kind == "prefill":
+            params_abs = model.abstract_params()
+            params_sh = rules.tree_shardings(model.param_axes())
+            batch_abs = model.batch_specs(shape)
+            batch_sh = {k: rules.sharding(model.batch_axes()[k]) for k in batch_abs}
+            cache_sh = rules.tree_shardings(model.cache_axes())
+
+            def prefill(params, batch):
+                return model.prefill(params, batch, max_len=shape.seq_len)
+
+            lowered = jax.jit(
+                prefill, in_shardings=(params_sh, batch_sh),
+                out_shardings=(cache_sh, None),
+            ).lower(params_abs, batch_abs)
+        else:  # decode
+            params_abs = model.abstract_params()
+            params_sh = rules.tree_shardings(model.param_axes())
+            cache_abs = model.cache_specs(shape.global_batch, shape.seq_len)
+            cache_sh = rules.tree_shardings(model.cache_axes())
+            tok_abs = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+            tok_sh = rules.sharding(("act_batch",))
+            idx_abs = jax.ShapeDtypeStruct((), jnp.int32)
+            idx_sh = rules.sharding(())
+
+            lowered = jax.jit(
+                model.decode_step,
+                in_shardings=(params_sh, cache_sh, tok_sh, idx_sh),
+                out_shardings=(cache_sh, None),
+                donate_argnums=(1,),  # KV/SSM caches update in place
+            ).lower(params_abs, cache_abs, tok_abs, idx_abs)
+
+        compiled = lowered.compile()
+    return compiled, lowered, model, info
+
+
+def run_cell(arch: str, shape_name: str, mesh, *, overrides=None, verbose=True,
+             cfg_overrides=None, microbatches=None, tcfg=None):
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    if microbatches:
+        cfg = cfg.replace(microbatches={**cfg.microbatches, shape_name: microbatches})
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_desc(mesh),
+                "status": "skipped", "reason": reason}
+    t0 = time.time()
+    compiled, lowered, model, info = lower_cell(cfg, shape, mesh, overrides=overrides,
+                                                tcfg=tcfg)
+    rl = analyze_compiled(
+        compiled, arch=arch, shape=shape, mesh=mesh,
+        model_flops_global=model_flops(model, shape),
+    )
+    row = rl.row()
+    row.update({"status": "ok", "compile_s": round(time.time() - t0, 2), **info})
+    if verbose:
+        ma = compiled.memory_analysis()
+        print(f"[{arch} x {shape_name} x {mesh_desc(mesh)}] "
+              f"compile={row['compile_s']}s dominant={rl.dominant} "
+              f"compute={rl.compute_s:.3e}s memory={rl.memory_s:.3e}s "
+              f"coll={rl.collective_s:.3e}s frac={rl.roofline_fraction:.3f} "
+              f"fits_hbm={rl.fits_hbm}")
+        print(f"  memory_analysis: args={row['arg_bytes_dev']/2**30:.2f}GiB "
+              f"temp={row['temp_bytes_dev']/2**30:.2f}GiB "
+              f"out={row['out_bytes_dev']/2**30:.2f}GiB  "
+              f"collectives={row['coll_by_kind']}")
+        del ma
+    return row
+
+
+def main(argv=None):
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", default="all")
+    p.add_argument("--shape", default="all")
+    p.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    p.add_argument("--out", default="experiments/dryrun.json")
+    p.add_argument("--override", action="append", default=[],
+                   help="rule override key=axis (axis: model|data|pod|none, "
+                        "a+b for tuples)")
+    p.add_argument("--set", action="append", default=[], dest="sets",
+                   help="ModelConfig override field=value (hillclimb knob)")
+    p.add_argument("--mb", type=int, default=None,
+                   help="microbatches override for the given shape")
+    p.add_argument("--moments", default="float32",
+                   help="Adam mu/nu dtype (float32 | bfloat16)")
+    p.add_argument("--fail-fast", action="store_true")
+    args = p.parse_args(argv)
+
+    archs = all_arch_names() if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    overrides = {}
+    for item in args.override:
+        k, v = item.split("=")
+        overrides[k] = None if v == "none" else (tuple(v.split("+")) if "+" in v else v)
+    cfg_overrides = {}
+    for item in args.sets:
+        k, v = item.split("=", 1)
+        for cast in (int, float):
+            try:
+                v = cast(v)
+                break
+            except ValueError:
+                continue
+        if v in ("true", "True"):
+            v = True
+        if v in ("false", "False"):
+            v = False
+        cfg_overrides[k] = v
+
+    rows, failures = [], []
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    for multi in meshes:
+        mesh = make_production_mesh(multi_pod=multi)
+        for arch in archs:
+            for shape_name in shapes:
+                try:
+                    row = run_cell(arch, shape_name, mesh,
+                                   overrides=overrides or None,
+                                   cfg_overrides=cfg_overrides or None,
+                                   microbatches=args.mb,
+                                   tcfg=TrainConfig(moment_dtype=args.moments))
+                except Exception as e:  # noqa: BLE001 - report and continue
+                    row = {"arch": arch, "shape": shape_name,
+                           "mesh": mesh_desc(mesh), "status": "FAILED",
+                           "error": f"{type(e).__name__}: {e}"}
+                    failures.append(row)
+                    print(f"[{arch} x {shape_name} x {mesh_desc(mesh)}] FAILED:")
+                    traceback.print_exc()
+                    if args.fail_fast:
+                        raise
+                rows.append(row)
+                with open(args.out, "w") as f:
+                    json.dump(rows, f, indent=1)
+
+    ok_rows = [r for r in rows if r.get("status") == "ok"]
+    print("\n" + format_table(ok_rows))
+    skipped = [r for r in rows if r.get("status") == "skipped"]
+    for r in skipped:
+        print(f"skipped: {r['arch']} x {r['shape']} x {r['mesh']} — {r['reason']}")
+    print(f"\n{len(ok_rows)} ok, {len(skipped)} skipped, {len(failures)} failed "
+          f"-> {args.out}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,328 @@
+"""Grouped-query attention: full / causal / sliding-window, train + decode.
+
+Three execution paths:
+  * naive SDPA      — materializes [.., Sq, Skv] scores (small seqs, oracle)
+  * blocked SDPA    — online-softmax over KV blocks (``cfg.attn_block_kv``):
+                      flash-style memory footprint in pure jnp, used for the
+                      32k shapes; optional compile-time causal block skipping
+  * Pallas kernel   — ``repro.kernels.flash_attention`` (TPU target; opt-in)
+
+Decode maintains either a full KV cache (one slot per absolute position) or a
+ring buffer of ``window`` slots for sliding-window attention; ring-slot
+positions are reconstructed arithmetically from the decode index, so no
+position side-table is needed.
+
+Convention: train/prefill ``positions`` are **numpy** arrays (static ->
+enables compile-time block culling and constant rope tables); decode
+positions are traced scalars derived from the cache index.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.layers import accum_dtype, dense, dense_decl, rope
+from repro.models.params import ParamDecl
+from repro.sharding.partition import constrain
+
+NEG_INF = -2.0e38
+
+
+def attn_decl(cfg, *, kv_dim: int | None = None) -> dict:
+    d = cfg.d_model
+    hd = cfg.head_dim
+    kd = kv_dim or d
+    return {
+        "wq": dense_decl(d, (cfg.num_heads, hd), "embed", ("q_heads", "head_dim"), bias=cfg.qkv_bias),
+        "wk": dense_decl(kd, (cfg.num_kv_heads, hd), "embed", ("kv_heads", "kv_head_dim"), bias=cfg.qkv_bias),
+        "wv": dense_decl(kd, (cfg.num_kv_heads, hd), "embed", ("kv_heads", "kv_head_dim"), bias=cfg.qkv_bias),
+        "wo": {
+            "w": ParamDecl((cfg.num_heads, hd, d), ("q_heads", "head_dim", "embed"), init="normal")
+        },
+    }
+
+
+def _out_proj(params, o, accum=jnp.float32):
+    w = params["wo"]["w"]
+    y = jax.lax.dot_general(
+        o, w.astype(o.dtype), (((o.ndim - 2, o.ndim - 1), (0, 1)), ((), ())),
+        preferred_element_type=accum,
+    )
+    return y.astype(o.dtype)
+
+
+def _mask(q_pos, kv_pos, *, causal: bool, window: int | None, kv_valid=None):
+    """Boolean [Sq, Skv] mask from position vectors."""
+    qp = jnp.asarray(q_pos)[:, None]
+    kp = jnp.asarray(kv_pos)[None, :]
+    m = jnp.ones((qp.shape[0], kp.shape[1]), bool)
+    if causal:
+        m &= kp <= qp
+    if window is not None:
+        m &= kp > qp - window
+    if kv_valid is not None:
+        m &= jnp.asarray(kv_valid)[None, :]
+    return m
+
+
+def _sdpa_naive(q, k, v, mask, scale):
+    """q: [B,Sq,Kh,G,D]; k/v: [B,Skv,Kh,D]; mask: [Sq,Skv]."""
+    scores = jnp.einsum(
+        "bqkgd,bskd->bkgqs", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v,
+                   preferred_element_type=jnp.float32).astype(v.dtype)
+    return o
+
+
+def _sdpa_blocked(q, k, v, *, q_pos, kv_pos, causal, window, kv_valid, scale,
+                  block_kv: int, skip_blocks: bool, block_q: int | None = None):
+    """Online-softmax tiled over BOTH q and KV blocks (flash-style memory:
+    O(block_q * block_kv) live scores instead of O(Sq * Skv)).
+
+    With static (numpy) positions the q/kv block loops are python loops and
+    fully-masked (q-block, kv-block) pairs are culled at compile time —
+    causality halves the pair count, SWA reduces it to a band.
+    """
+    B, Sq, Kh, G, D = q.shape
+    Skv = k.shape[1]
+    static_pos = isinstance(q_pos, np.ndarray) and isinstance(kv_pos, np.ndarray)
+    bq = min(block_q or block_kv, Sq)
+    nqb = -(-Sq // bq)
+    pad_q = nqb * bq - Sq
+    nkb = -(-Skv // block_kv)
+    pad_k = nkb * block_kv - Skv
+
+    if kv_valid is None:
+        kv_valid = np.ones((Skv,), bool) if static_pos else jnp.ones((Skv,), bool)
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        mod = np if static_pos else jnp
+        kv_pos = mod.pad(mod.asarray(kv_pos), (0, pad_k), constant_values=2**30)
+        kv_valid = mod.pad(mod.asarray(kv_valid), (0, pad_k))
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0), (0, 0)))
+        mod = np if static_pos else jnp
+        q_pos = mod.pad(mod.asarray(q_pos), (0, pad_q), constant_values=2**30)
+    qf = q.astype(jnp.float32)
+    kv_pos_j = jnp.asarray(kv_pos)
+    kv_valid_j = jnp.asarray(kv_valid)
+
+    def pair(q_blk, q_pos_blk, m, l, acc, kb_idx):
+        kb = jax.lax.dynamic_slice_in_dim(k, kb_idx * block_kv, block_kv, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(v, kb_idx * block_kv, block_kv, axis=1)
+        pb = jax.lax.dynamic_slice(kv_pos_j, (kb_idx * block_kv,), (block_kv,))
+        valb = jax.lax.dynamic_slice(kv_valid_j, (kb_idx * block_kv,), (block_kv,))
+        s = jnp.einsum("bqkgd,bskd->bqkgs", q_blk, kb.astype(jnp.float32)) * scale
+        msk = _mask(q_pos_blk, pb, causal=causal, window=window, kv_valid=valb)
+        s = jnp.where(msk[None, :, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        corr = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bqkgs,bskd->bqkgd", p, vb.astype(jnp.float32)
+        )
+        return m_new, l_new, acc_new
+
+    kv_pos_np = np.asarray(kv_pos) if static_pos else None
+    q_pos_np = np.asarray(q_pos) if static_pos else None
+    out_blocks = []
+    for qi in range(nqb):
+        q_blk = qf[:, qi * bq:(qi + 1) * bq]
+        q_pos_blk = (
+            q_pos_np[qi * bq:(qi + 1) * bq] if static_pos
+            else jax.lax.dynamic_slice(jnp.asarray(q_pos), (qi * bq,), (bq,))
+        )
+        m = jnp.full((B, bq, Kh, G), NEG_INF, jnp.float32)
+        l = jnp.zeros((B, bq, Kh, G), jnp.float32)
+        acc = jnp.zeros((B, bq, Kh, G, D), jnp.float32)
+        if skip_blocks and static_pos:
+            real_q = q_pos_blk[q_pos_blk < 2**30]
+            q_lo = int(real_q.min()) if real_q.size else 0
+            q_hi = int(real_q.max()) if real_q.size else 2**30
+            for kb_idx in range(nkb):
+                blk_pos = kv_pos_np[kb_idx * block_kv:(kb_idx + 1) * block_kv]
+                real = blk_pos[blk_pos < 2**30]
+                if real.size == 0:
+                    continue
+                if causal and int(real.min()) > q_hi:
+                    continue  # future block for every query in this q block
+                if window is not None and int(real.max()) <= q_lo - window:
+                    continue  # outside the sliding window for every query
+                m, l, acc = pair(q_blk, q_pos_blk, m, l, acc, kb_idx)
+        else:
+            def body(carry, kb_idx):
+                return pair(q_blk, q_pos_blk, *carry, kb_idx), None
+
+            (m, l, acc), _ = jax.lax.scan(body, (m, l, acc), jnp.arange(nkb))
+        out_blocks.append(acc / jnp.maximum(l[..., None], 1e-30))
+    out = jnp.concatenate(out_blocks, axis=1)[:, :Sq]
+    return out.astype(v.dtype)
+
+
+def multi_head_attention(
+    q, k, v, *, q_pos, kv_pos, causal=True, window=None, kv_valid=None,
+    block_kv=0, skip_blocks=True, flash=False,
+):
+    """q: [B,Sq,Hq,D]; k/v: [B,Skv,Hkv,D]; positions int32 [Sq]/[Skv]."""
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / (D ** 0.5)
+    qg = q.reshape(B, Sq, Hkv, G, D)
+
+    if flash and Sq > 1 and kv_valid is None and isinstance(q_pos, np.ndarray):
+        from repro.kernels.flash_attention import ops as fa_ops
+
+        return fa_ops.flash_attention(
+            q, k, v, causal=causal, window=window, q_offset=int(q_pos[0]) if q_pos.size else 0,
+        )
+
+    if block_kv and Sq > 1 and k.shape[1] > block_kv:
+        o = _sdpa_blocked(
+            qg, k, v, q_pos=q_pos, kv_pos=kv_pos, causal=causal, window=window,
+            kv_valid=kv_valid, scale=scale, block_kv=block_kv, skip_blocks=skip_blocks,
+        )
+    else:
+        mask = _mask(q_pos, kv_pos, causal=causal, window=window, kv_valid=kv_valid)
+        o = _sdpa_naive(qg, k, v, mask, scale)
+    return o.reshape(B, Sq, Hq, D)
+
+
+# ----------------------------------------------------------------------
+# Full attention block (projections + rope + cache management)
+# ----------------------------------------------------------------------
+
+
+def init_cache_spec(cfg, batch: int, max_len: int, dtype):
+    """Abstract KV-cache entry for ONE layer (leading layer dim added by the
+    caller via stacking)."""
+    c = min(max_len, cfg.attention_window) if cfg.attention_window else max_len
+    kv = (batch, c, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "k": jax.ShapeDtypeStruct(kv, dtype),
+        "v": jax.ShapeDtypeStruct(kv, dtype),
+    }
+
+
+CACHE_AXES = {
+    "k": ("cache_batch", "cache_seq", "cache_kv", "cache_hd"),
+    "v": ("cache_batch", "cache_seq", "cache_kv", "cache_hd"),
+}
+
+
+def attention_block(
+    params, x, cfg, *, positions, cache=None, index=None,
+    window=None, causal=True, use_rope=True, kv_x=None, kv_valid=None,
+    cross=False, cache_len=None,
+):
+    """Returns (y, new_cache).
+
+    * train/prefill: ``cache is None`` -> self-attention over x; a fresh cache
+      holding the (window-truncated, ring-arranged) K/V is returned.
+    * decode: ``cache`` given, ``index`` is the absolute position of the new
+      token; Sq == 1.
+    * cross-attention (``cross=True``): ``kv_x`` is the encoder output (its
+      K/V are cached once at prefill; decode reads the cache position-free).
+    """
+    q = dense(params["wq"], x)  # [B,Sq,Hq,hd]
+
+    if cross and cache is not None:
+        # cross-attention decode: read-only cache, no new K/V projection
+        kc, vc = cache["k"], cache["v"]
+        kv_pos = jnp.arange(kc.shape[1], dtype=jnp.int32)
+        o = multi_head_attention(
+            q, kc, vc,
+            q_pos=jnp.zeros((q.shape[1],), jnp.int32), kv_pos=kv_pos,
+            causal=False, window=None, kv_valid=kv_valid,
+        )
+        y = _out_proj(params, o, accum_dtype(cfg))
+        return constrain(y, ("act_batch", "act_seq", "act_embed")), cache
+
+    src = kv_x if kv_x is not None else x
+    k = dense(params["wk"], src)
+    v = dense(params["wv"], src)
+    q = constrain(q, ("act_batch", "act_seq", "act_heads", None))
+    k = constrain(k, ("act_batch", "act_seq", "act_kv", None))
+    v = constrain(v, ("act_batch", "act_seq", "act_kv", None))
+
+    if use_rope and kv_x is None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+    if cache is None:
+        if kv_x is None:
+            kv_pos = positions
+            is_causal = causal
+        else:
+            kv_pos = np.arange(k.shape[1], dtype=np.int32)
+            is_causal = False
+        o = multi_head_attention(
+            q, k, v, q_pos=positions, kv_pos=kv_pos,
+            causal=is_causal, window=window, kv_valid=kv_valid,
+            block_kv=cfg.attn_block_kv, flash=cfg.use_flash_kernel,
+        )
+        new_cache = _build_cache(k, v, window, cache_len)
+    else:
+        o, new_cache = _decode_attend(q, k, v, cache, index, window)
+    y = _out_proj(params, o, accum_dtype(cfg))
+    y = constrain(y, ("act_batch", "act_seq", "act_embed"))
+    return y, new_cache
+
+
+def _build_cache(k, v, window, cache_len=None):
+    """Prefill -> cache with target capacity C = min(cache_len, window).
+
+    Slot invariant (both full and ring caches): slot s holds position p with
+    p % C == s, taking the greatest such p already seen.  Positions below
+    S <= C land at slot p directly; truncation keeps the last C positions via
+    a roll so the invariant survives decode-time wraparound.
+    """
+    S = k.shape[1]
+    c = cache_len if cache_len is not None else S
+    if window is not None:
+        c = min(c, window)
+    if S < c:
+        pad = ((0, 0), (0, c - S), (0, 0), (0, 0))
+        return {"k": jnp.pad(k, pad), "v": jnp.pad(v, pad)}
+    if S == c:
+        return {"k": k, "v": v}
+    if window is None:
+        raise ValueError(f"cannot truncate full-attention cache {S} -> {c}")
+    k_t, v_t = k[:, S - c:], v[:, S - c:]
+    shift = (S - c) % c
+    k_t = jnp.roll(k_t, shift, axis=1)
+    v_t = jnp.roll(v_t, shift, axis=1)
+    return {"k": k_t, "v": v_t}
+
+
+def _decode_attend(q, k_new, v_new, cache, index, window):
+    """Single-token decode against a full or ring cache.
+
+    index: int32 scalar, absolute position of the incoming token.
+    """
+    kc, vc = cache["k"], cache["v"]
+    C = kc.shape[1]
+    slot = index % C if window is not None else index
+    kc = jax.lax.dynamic_update_slice_in_dim(kc, k_new.astype(kc.dtype), slot, axis=1)
+    vc = jax.lax.dynamic_update_slice_in_dim(vc, v_new.astype(vc.dtype), slot, axis=1)
+
+    slots = jnp.arange(C, dtype=jnp.int32)
+    if window is not None:
+        # position stored in slot s: greatest p <= index with p % C == s
+        kv_pos = index - ((index - slots) % C)
+        kv_valid = kv_pos >= 0
+    else:
+        kv_pos = slots
+        kv_valid = slots <= index
+    q_pos = jnp.full((q.shape[1],), index, jnp.int32)
+    o = multi_head_attention(
+        q, kc, vc, q_pos=q_pos, kv_pos=kv_pos, causal=True,
+        window=window, kv_valid=kv_valid, block_kv=0,
+    )
+    return o, {"k": kc, "v": vc}

@@ -1,0 +1,144 @@
+"""Griffin / RecurrentGemma temporal blocks: RG-LRU recurrence (arXiv:2402.19427).
+
+Recurrent block:   x -> [gelu(W_gate x)] ⊙ [RG-LRU(conv1d(W_in x))] -> W_out
+RG-LRU:            r_t = σ(W_a x_t + b_a);  i_t = σ(W_x x_t + b_x)
+                   a_t = exp(-c · softplus(Λ) · r_t),  c = 8
+                   h_t = a_t h_{t-1} + sqrt(1 - a_t²) · (i_t ⊙ x_t)
+
+The gate matrices are block-diagonal (one block per head, as in the released
+RecurrentGemma), which is also what lets the LRU width shard cleanly on the
+"model" axis (blocks never mix across shards).  The sequence recurrence is a
+`jax.lax.associative_scan` in fp32; decode is a single fused step — O(1)
+state, which is what makes ``long_500k`` runnable for the hybrid family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import accum_dtype, dense, dense_decl
+from repro.models.params import ParamDecl
+from repro.sharding.partition import constrain
+
+RG_C = 8.0
+
+
+def griffin_rec_decl(cfg) -> dict:
+    d = cfg.d_model
+    lru = cfg.lru_width
+    g = cfg.num_heads  # one gate block per head (recurrentgemma convention)
+    bw = lru // g
+    w = cfg.conv_width
+    return {
+        "w_gate": dense_decl(d, (lru,), "embed", ("lru",)),
+        "w_in": dense_decl(d, (lru,), "embed", ("lru",)),
+        "conv_w": ParamDecl((w, lru), ("conv", "lru"), init="conv"),
+        "conv_b": ParamDecl((lru,), ("lru",), init="zeros", dtype=jnp.float32),
+        "rg_a_w": ParamDecl((g, bw, bw), ("lru_heads", None, None), init="normal"),
+        "rg_a_b": ParamDecl((g, bw), ("lru_heads", None), init="zeros", dtype=jnp.float32),
+        "rg_x_w": ParamDecl((g, bw, bw), ("lru_heads", None, None), init="normal"),
+        "rg_x_b": ParamDecl((g, bw), ("lru_heads", None), init="zeros", dtype=jnp.float32),
+        "lam": ParamDecl((g, bw), ("lru_heads", None), init="rglru_lambda", dtype=jnp.float32),
+        "w_out": dense_decl(lru, (d,), "lru", ("embed",)),
+    }
+
+
+def _conv_linear(x, w, b):
+    """Depthwise causal conv, no activation. x: [B,S,C]; w: [W,C]."""
+    width, c = w.shape
+    y = jax.lax.conv_general_dilated(
+        x, w[:, None, :].astype(x.dtype), (1,), [(width - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"), feature_group_count=c,
+    )
+    return (y.astype(jnp.float32) + b).astype(x.dtype)
+
+
+def _conv_linear_step(x_new, conv_state, w, b):
+    full = jnp.concatenate([conv_state, x_new], axis=1)
+    y = jnp.einsum("bwc,wc->bc", full.astype(jnp.float32), w.astype(jnp.float32)) + b
+    return y[:, None].astype(x_new.dtype), full[:, 1:]
+
+
+def _rg_gates(params, xg):
+    """xg: [B,S,G,bw] -> (a [B,S,G,bw] f32, gated_input f32)."""
+    xf = xg.astype(jnp.float32)
+    r = jax.nn.sigmoid(
+        jnp.einsum("bsgi,gij->bsgj", xf, params["rg_a_w"].astype(jnp.float32))
+        + params["rg_a_b"]
+    )
+    i = jax.nn.sigmoid(
+        jnp.einsum("bsgi,gij->bsgj", xf, params["rg_x_w"].astype(jnp.float32))
+        + params["rg_x_b"]
+    )
+    log_a = -RG_C * jax.nn.softplus(params["lam"]) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+    return a, b
+
+
+def rglru_scan(params, x, h0=None):
+    """x: [B,S,lru] -> (h_seq [B,S,lru], h_last [B,lru] f32)."""
+    bsz, s, lru = x.shape
+    g, bw = params["lam"].shape
+    xg = x.reshape(bsz, s, g, bw)
+    a, b = _rg_gates(params, xg)
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.reshape(bsz, g, bw).astype(jnp.float32))
+
+    def combine(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    a_sc, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    del a_sc
+    h_seq = h.reshape(bsz, s, lru)
+    return h_seq.astype(x.dtype), h[:, -1].reshape(bsz, lru)
+
+
+def rglru_step(params, x, h0):
+    """x: [B,1,lru]; h0: [B,lru] f32."""
+    bsz, _, lru = x.shape
+    g, bw = params["lam"].shape
+    xg = x.reshape(bsz, 1, g, bw)
+    a, b = _rg_gates(params, xg)
+    h = a[:, 0] * h0.reshape(bsz, g, bw).astype(jnp.float32) + b[:, 0]
+    return h.reshape(bsz, 1, lru).astype(x.dtype), h.reshape(bsz, lru)
+
+
+def griffin_rec_state_spec(cfg, batch: int, dtype):
+    return {
+        "lru": jax.ShapeDtypeStruct((batch, cfg.lru_width), jnp.float32),
+        "conv": jax.ShapeDtypeStruct((batch, cfg.conv_width - 1, cfg.lru_width), dtype),
+    }
+
+
+GRIFFIN_REC_STATE_AXES = {
+    "lru": ("cache_batch", "act_lru"),
+    "conv": ("cache_batch", None, "act_lru"),
+}
+
+
+def griffin_rec_block(params, x, cfg, *, state=None):
+    """x: [B,S,d_model] -> (y, new_state).  state given => S==1 decode."""
+    gate = jax.nn.gelu(dense(params["w_gate"], x).astype(jnp.float32)).astype(x.dtype)
+    u = dense(params["w_in"], x)
+    u = constrain(u, ("act_batch", "act_seq", "act_lru"))
+    if state is None:
+        uc = _conv_linear(u, params["conv_w"], params["conv_b"])
+        h, h_last = rglru_scan(params, uc)
+        w = cfg.conv_width
+        new_state = {"lru": h_last, "conv": _rec_tail(u, w - 1)}
+    else:
+        uc, conv_new = _conv_linear_step(u, state["conv"], params["conv_w"], params["conv_b"])
+        h, h_last = rglru_step(params, uc, state["lru"])
+        new_state = {"lru": h_last, "conv": conv_new}
+    y = dense(params["w_out"], (gate * h), accum=accum_dtype(cfg))
+    return constrain(y, ("act_batch", "act_seq", "act_embed")), new_state
+
+
+def _rec_tail(x, k):
+    s = x.shape[1]
+    if s >= k:
+        return x[:, s - k:]
+    return jnp.pad(x, ((0, 0), (k - s, 0), (0, 0)))

@@ -1,0 +1,238 @@
+"""Mamba-2 block: state-space duality (SSD) with chunked scan.
+
+Reference: "Transformers are SSMs" (arXiv:2405.21060).  The SSD algorithm
+splits the sequence into chunks of length L:
+
+  * intra-chunk: quadratic attention-like term  (C B^T ⊙ decay) @ (dt·x)
+    — dense einsums, MXU-friendly;
+  * inter-chunk: a linear recurrence over per-chunk states
+    S_c = S_{c-1} · exp(Σ dA_c) + S_c^local, done with lax.scan over chunks.
+
+TP sharding: the inner dim (heads × headdim) is sharded on "model"
+("ssm_inner"/"ssm_heads"); B and C projections (ngroups=1) are replicated;
+out_proj is row-parallel (XLA inserts the all-reduce).
+
+Decode carries state {ssm: [B,H,N,P], conv_*: [B,W-1,C]} — O(1) per token,
+which is what makes the ``long_500k`` cell runnable for this family.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import accum_dtype, dense, dense_decl, norm_decl, apply_norm, rmsnorm_gated
+from repro.models.params import ParamDecl
+from repro.sharding.partition import constrain
+
+
+def mamba2_decl(cfg) -> dict:
+    d = cfg.d_model
+    di = cfg.ssm_d_inner
+    h = cfg.ssm_heads
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    w = cfg.conv_width
+    return {
+        "norm": norm_decl(cfg),
+        "wz": dense_decl(d, (di,), "embed", ("ssm_inner",)),
+        "wx": dense_decl(d, (di,), "embed", ("ssm_inner",)),
+        "wb": dense_decl(d, (g * n,), "embed", (None,)),
+        "wc": dense_decl(d, (g * n,), "embed", (None,)),
+        "wdt": dense_decl(d, (h,), "embed", ("ssm_heads",)),
+        "conv_x": ParamDecl((w, di), ("conv", "ssm_inner"), init="conv"),
+        "conv_x_b": ParamDecl((di,), ("ssm_inner",), init="zeros", dtype=jnp.float32),
+        "conv_b": ParamDecl((w, g * n), ("conv", None), init="conv"),
+        "conv_b_b": ParamDecl((g * n,), (None,), init="zeros", dtype=jnp.float32),
+        "conv_c": ParamDecl((w, g * n), ("conv", None), init="conv"),
+        "conv_c_b": ParamDecl((g * n,), (None,), init="zeros", dtype=jnp.float32),
+        "A_log": ParamDecl((h,), ("ssm_heads",), init="ssm_a_log", dtype=jnp.float32),
+        "D": ParamDecl((h,), ("ssm_heads",), init="ones", dtype=jnp.float32),
+        "dt_bias": ParamDecl((h,), ("ssm_heads",), init="ssm_dt_bias", dtype=jnp.float32),
+        "out_norm": {"scale": ParamDecl((di,), ("ssm_inner",), init="ones", dtype=jnp.float32)},
+        "out_proj": dense_decl(di, (d,), "ssm_inner", ("embed",)),
+    }
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal 1D conv. x: [B,S,C]; w: [W,C]; b: [C]."""
+    width, c = w.shape
+    y = jax.lax.conv_general_dilated(
+        x, w[:, None, :].astype(x.dtype),
+        window_strides=(1,), padding=[(width - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=c,
+    )
+    return jax.nn.silu(y.astype(jnp.float32) + b).astype(x.dtype)
+
+
+def _conv_step(x_new, conv_state, w, b):
+    """x_new: [B,1,C]; conv_state: [B,W-1,C] (previous raw inputs)."""
+    full = jnp.concatenate([conv_state, x_new], axis=1)  # [B,W,C]
+    y = jnp.einsum("bwc,wc->bc", full.astype(jnp.float32), w.astype(jnp.float32)) + b
+    y = jax.nn.silu(y)[:, None].astype(x_new.dtype)
+    return y, full[:, 1:]
+
+
+def ssd_chunked(x, dt, a_log, bmat, cmat, chunk, initial_state=None):
+    """SSD over chunks.
+
+    x: [B,S,H,P]; dt: [B,S,H] (post-softplus); a_log: [H];
+    bmat/cmat: [B,S,G,N].  Returns (y [B,S,H,P], final_state [B,H,N,P]).
+    """
+    b, s, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    hg = h // g
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = s + pad
+    nc = sp // chunk
+    l = chunk
+
+    xr = x.reshape(b, nc, l, g, hg, p)
+    dtr = dt.reshape(b, nc, l, g, hg).astype(jnp.float32)
+    br = bmat.reshape(b, nc, l, g, n).astype(jnp.float32)
+    cr = cmat.reshape(b, nc, l, g, n).astype(jnp.float32)
+    a = -jnp.exp(a_log.astype(jnp.float32)).reshape(g, hg)
+
+    dA = dtr * a  # [b,nc,l,g,hg], negative
+    cum = jnp.cumsum(dA, axis=2)  # inclusive within-chunk
+
+    # decay matrix L[b,c,g,e,i,j] = exp(cum_i - cum_j) for j <= i
+    cum_t = jnp.moveaxis(cum, 2, -1)  # [b,nc,g,hg,l]
+    diff = cum_t[..., :, None] - cum_t[..., None, :]
+    tril = jnp.tril(jnp.ones((l, l), bool))
+    ldec = jnp.where(tril, jnp.exp(diff), 0.0)  # [b,nc,g,hg,l,l]
+
+    xdt = (xr.astype(jnp.float32) * dtr[..., None])  # [b,nc,l,g,hg,p]
+
+    cb = jnp.einsum("bcign,bcjgn->bcgij", cr, br)  # [b,nc,g,l,l]
+    y_diag = jnp.einsum("bcgij,bcgeij,bcjgep->bcigep", cb, ldec, xdt)
+
+    # per-chunk local final states
+    decay_last = jnp.exp(cum_t[..., -1:] - cum_t)  # [b,nc,g,hg,l]
+    s_local = jnp.einsum("bcjgn,bcgej,bcjgep->bcgenp", br, decay_last, xdt)
+
+    chunk_decay = jnp.exp(cum_t[..., -1])  # [b,nc,g,hg]
+
+    if initial_state is None:
+        state0 = jnp.zeros((b, g, hg, n, p), jnp.float32)
+    else:
+        state0 = initial_state.reshape(b, g, hg, n, p).astype(jnp.float32)
+
+    def scan_fn(state, inp):
+        cd, sl = inp  # cd: [b,g,hg]; sl: [b,g,hg,n,p]
+        new = state * cd[..., None, None] + sl
+        return new, state  # emit the state *entering* this chunk
+
+    cd_sc = jnp.moveaxis(chunk_decay, 1, 0)  # [nc,b,g,hg]
+    sl_sc = jnp.moveaxis(s_local, 1, 0)  # [nc,b,g,hg,n,p]
+    final_state, states_prev = jax.lax.scan(scan_fn, state0, (cd_sc, sl_sc))
+    states_prev = jnp.moveaxis(states_prev, 0, 1)  # [b,nc,g,hg,n,p]
+
+    y_off = jnp.einsum("bcign,bcgenp->bcigep", cr, states_prev) * jnp.exp(cum)[..., None]
+    y = (y_diag + y_off).reshape(b, sp, h, p)[:, :s]
+    return y.astype(x.dtype), final_state.reshape(b, h, n, p)
+
+
+def ssd_step(state, x, dt, a_log, bvec, cvec):
+    """One decode step.  state: [B,H,N,P]; x: [B,H,P]; dt: [B,H];
+    bvec/cvec: [B,G,N].  Returns (y [B,H,P], new_state)."""
+    b_, h, n, p = state.shape
+    g = bvec.shape[1]
+    hg = h // g
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    dtf = dt.astype(jnp.float32)
+    da = jnp.exp(dtf * a)  # [B,H]
+    xf = x.astype(jnp.float32).reshape(b_, g, hg, p)
+    bb = bvec.astype(jnp.float32)
+    inc = jnp.einsum("bgn,bgep->bgenp", bb, xf * dtf.reshape(b_, g, hg)[..., None])
+    new_state = state.reshape(b_, g, hg, n, p) * da.reshape(b_, g, hg)[..., None, None] + inc
+    y = jnp.einsum("bgn,bgenp->bgep", cvec.astype(jnp.float32), new_state)
+    return y.reshape(b_, h, p).astype(x.dtype), new_state.reshape(b_, h, n, p)
+
+
+# ----------------------------------------------------------------------
+# Full block
+# ----------------------------------------------------------------------
+
+
+def mamba2_state_spec(cfg, batch: int, dtype):
+    di = cfg.ssm_d_inner
+    gn = cfg.ssm_groups * cfg.ssm_state
+    w = cfg.conv_width
+    return {
+        "ssm": jax.ShapeDtypeStruct((batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_headdim), jnp.float32),
+        "conv_x": jax.ShapeDtypeStruct((batch, w - 1, di), dtype),
+        "conv_b": jax.ShapeDtypeStruct((batch, w - 1, gn), dtype),
+        "conv_c": jax.ShapeDtypeStruct((batch, w - 1, gn), dtype),
+    }
+
+
+MAMBA2_STATE_AXES = {
+    "ssm": ("cache_batch", "ssm_heads", None, None),
+    "conv_x": ("cache_batch", None, "ssm_inner"),
+    "conv_b": ("cache_batch", None, None),
+    "conv_c": ("cache_batch", None, None),
+}
+
+
+def mamba2_block(params, x, cfg, *, state=None):
+    """x: [B,S,d_model] -> (y, new_state).  state given => S==1 decode."""
+    b, s, _ = x.shape
+    h, p = cfg.ssm_heads, cfg.ssm_headdim
+    g, n = cfg.ssm_groups, cfg.ssm_state
+
+    z = dense(params["wz"], x)
+    xin = dense(params["wx"], x)
+    braw = dense(params["wb"], x)
+    craw = dense(params["wc"], x)
+    dt_raw = dense(params["wdt"], x)
+    xin = constrain(xin, ("act_batch", "act_seq", "act_ssm"))
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+
+    if state is None:
+        xc = _causal_conv(xin, params["conv_x"], params["conv_x_b"])
+        bc = _causal_conv(braw, params["conv_b"], params["conv_b_b"])
+        cc = _causal_conv(craw, params["conv_c"], params["conv_c_b"])
+        y, final = ssd_chunked(
+            xc.reshape(b, s, h, p), dt, params["A_log"],
+            bc.reshape(b, s, g, n), cc.reshape(b, s, g, n), cfg.ssm_chunk,
+        )
+        w = cfg.conv_width
+        new_state = {
+            "ssm": final,
+            "conv_x": _tail(xin, w - 1),
+            "conv_b": _tail(braw, w - 1),
+            "conv_c": _tail(craw, w - 1),
+        }
+    else:
+        xc, cx = _conv_step(xin, state["conv_x"], params["conv_x"], params["conv_x_b"])
+        bc, cb = _conv_step(braw, state["conv_b"], params["conv_b"], params["conv_b_b"])
+        cc, ccs = _conv_step(craw, state["conv_c"], params["conv_c"], params["conv_c_b"])
+        y1, ssm = ssd_step(
+            state["ssm"], xc[:, 0].reshape(b, h, p), dt[:, 0],
+            params["A_log"], bc[:, 0].reshape(b, g, n), cc[:, 0].reshape(b, g, n),
+        )
+        y = y1[:, None]
+        xc_seq = xc  # [B,1,di]
+        new_state = {"ssm": ssm, "conv_x": cx, "conv_b": cb, "conv_c": ccs}
+
+    # D skip on the *conv-activated* input stream
+    xc_full = xc if state is not None else xc  # noqa: same name either path
+    d_skip = params["D"].reshape(h, 1) * xc_full.reshape(b, -1, h, p).astype(jnp.float32)
+    y = (y.reshape(b, -1, h, p).astype(jnp.float32) + d_skip).reshape(b, -1, h * p)
+    y = rmsnorm_gated(params["out_norm"], y.astype(x.dtype), z, cfg.norm_eps)
+    y = constrain(y, ("act_batch", "act_seq", "act_ssm"))
+    out = dense(params["out_proj"], y, accum=accum_dtype(cfg))
+    return constrain(out, ("act_batch", "act_seq", "act_embed")), new_state
+
+
+def _tail(x, k):
+    """Last k positions along axis 1, left-padded with zeros if S < k."""
+    s = x.shape[1]
+    if s >= k:
+        return x[:, s - k:]
+    return jnp.pad(x, ((0, 0), (k - s, 0), (0, 0)))

@@ -1,0 +1,272 @@
+"""Decoder-only LM stack, generic over layer families.
+
+The stack is a ``jax.lax.scan`` over *units* of stacked layer parameters, so
+compile time is independent of depth (88-layer mistral-large compiles as fast
+as 2 layers).  A unit is:
+
+  * dense / moe / ssm families: one layer;
+  * hybrid (griffin): one super-block following ``cfg.block_pattern``
+    (e.g. ("rec","rec","attn")); layers that don't fill a whole super-block
+    form a separately-scanned "tail" (recurrentgemma-9b: 12x(r,r,a) + 2r).
+
+Three modes share one code path: "train" (no caches), "prefill" (caches
+collected as scan outputs) and "decode" (caches threaded through the scan).
+Remat (``cfg.remat``) wraps the unit body for training.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import apply_mlp, apply_norm, mlp_decl, norm_decl
+from repro.models.params import stack_decls
+from repro.sharding.partition import constrain
+
+# ----------------------------------------------------------------------
+# Structure
+# ----------------------------------------------------------------------
+
+
+def unit_kinds(cfg) -> tuple[str, ...]:
+    if cfg.family in ("dense", "vlm"):
+        return ("dense",)
+    if cfg.family == "moe":
+        return ("moe",)
+    if cfg.family == "ssm":
+        return ("ssm",)
+    if cfg.family == "hybrid":
+        return tuple(cfg.block_pattern)
+    raise ValueError(cfg.family)
+
+
+def scan_counts(cfg) -> tuple[int, int]:
+    """(number of scanned units, number of remainder tail layers)."""
+    k = len(unit_kinds(cfg))
+    return cfg.num_layers // k, cfg.num_layers % k
+
+
+def layer_decl(cfg, kind: str) -> dict:
+    if kind == "ssm":
+        return {"mamba": ssm_mod.mamba2_decl(cfg)}
+    decl = {"ln1": norm_decl(cfg), "ln2": norm_decl(cfg)}
+    if kind == "rec":
+        decl["rec"] = rglru_mod.griffin_rec_decl(cfg)
+        decl["mlp"] = mlp_decl(cfg)
+    elif kind in ("dense", "attn"):
+        decl["attn"] = attn_mod.attn_decl(cfg)
+        decl["mlp"] = mlp_decl(cfg)
+    elif kind == "moe":
+        decl["attn"] = attn_mod.attn_decl(cfg)
+        decl["moe"] = moe_mod.moe_decl(cfg)
+    else:
+        raise ValueError(kind)
+    return decl
+
+
+def unit_decl(cfg) -> dict:
+    kinds = unit_kinds(cfg)
+    if len(kinds) == 1:
+        return layer_decl(cfg, kinds[0])
+    return {f"sub{i}": layer_decl(cfg, k) for i, k in enumerate(kinds)}
+
+
+def stack_decl(cfg) -> dict:
+    """Decl for the whole stack: scanned units + optional tail layers."""
+    nb, rem = scan_counts(cfg)
+    decl = {"units": stack_decls(unit_decl(cfg), nb)}
+    if rem:
+        # tail = one pseudo-unit of `rem` sub-layers, scanned once (length-1
+        # stack keeps the params/caches structurally uniform with `units`)
+        kinds = unit_kinds(cfg)[:rem]
+        tail = {f"sub{i}": layer_decl(cfg, k) for i, k in enumerate(kinds)}
+        decl["tail"] = stack_decls(tail, 1)
+    return decl
+
+
+# ----------------------------------------------------------------------
+# Cache specs
+# ----------------------------------------------------------------------
+
+
+def layer_cache_spec(cfg, kind: str, batch: int, max_len: int, dtype):
+    if kind == "ssm":
+        return ssm_mod.mamba2_state_spec(cfg, batch, dtype)
+    if kind == "rec":
+        return rglru_mod.griffin_rec_state_spec(cfg, batch, dtype)
+    return attn_mod.init_cache_spec(cfg, batch, max_len, dtype)
+
+
+def layer_cache_axes(kind: str):
+    if kind == "ssm":
+        return ssm_mod.MAMBA2_STATE_AXES
+    if kind == "rec":
+        return rglru_mod.GRIFFIN_REC_STATE_AXES
+    return attn_mod.CACHE_AXES
+
+
+def _stack_spec(spec, n):
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n,) + s.shape, s.dtype), spec
+    )
+
+
+def _stack_axes(axes, n):
+    is_axes = lambda x: isinstance(x, tuple) and all(a is None or isinstance(a, str) for a in x)
+    return jax.tree.map(lambda a: ("layers",) + a, axes, is_leaf=is_axes)
+
+
+def stack_cache_spec(cfg, batch: int, max_len: int, dtype):
+    kinds = unit_kinds(cfg)
+    nb, rem = scan_counts(cfg)
+    if len(kinds) == 1:
+        unit = layer_cache_spec(cfg, kinds[0], batch, max_len, dtype)
+    else:
+        unit = {
+            f"sub{i}": layer_cache_spec(cfg, k, batch, max_len, dtype)
+            for i, k in enumerate(kinds)
+        }
+    spec = {"units": _stack_spec(unit, nb)}
+    if rem:
+        tail = {
+            f"sub{i}": layer_cache_spec(cfg, k, batch, max_len, dtype)
+            for i, k in enumerate(kinds[:rem])
+        }
+        spec["tail"] = _stack_spec(tail, 1)
+    return spec
+
+
+def stack_cache_axes(cfg):
+    kinds = unit_kinds(cfg)
+    nb, rem = scan_counts(cfg)
+    if len(kinds) == 1:
+        unit = layer_cache_axes(kinds[0])
+    else:
+        unit = {f"sub{i}": layer_cache_axes(k) for i, k in enumerate(kinds)}
+    axes = {"units": _stack_axes(unit, nb)}
+    if rem:
+        tail = {f"sub{i}": layer_cache_axes(k) for i, k in enumerate(kinds[:rem])}
+        axes["tail"] = _stack_axes(tail, 1)
+    return axes
+
+
+# ----------------------------------------------------------------------
+# Apply
+# ----------------------------------------------------------------------
+
+
+def apply_layer(params, x, cfg, kind, *, positions, cache, index, cache_len=None):
+    """One layer. Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind == "ssm":
+        h = apply_norm(params["mamba"]["norm"], x, cfg.norm_eps)
+        y, new_cache = ssm_mod.mamba2_block(params["mamba"], h, cfg, state=cache)
+        return x + y, new_cache, aux
+
+    h = apply_norm(params["ln1"], x, cfg.norm_eps)
+    if kind == "rec":
+        y, new_cache = rglru_mod.griffin_rec_block(params["rec"], h, cfg, state=cache)
+    else:
+        window = cfg.attention_window
+        y, new_cache = attn_mod.attention_block(
+            params["attn"], h, cfg, positions=positions, cache=cache,
+            index=index, window=window, causal=cfg.causal, use_rope=cfg.use_rope,
+            cache_len=cache_len,
+        )
+    x = x + y
+    x = constrain(x, ("act_batch", "act_seq_resid", "act_embed"))
+
+    h = apply_norm(params["ln2"], x, cfg.norm_eps)
+    if kind == "moe":
+        y, aux = moe_mod.moe_block(params["moe"], h, cfg)
+    else:
+        y = apply_mlp(params["mlp"], h, cfg)
+    x = x + y
+    x = constrain(x, ("act_batch", "act_seq_resid", "act_embed"))
+    return x, new_cache, aux
+
+
+def apply_unit(params, x, cfg, kinds, *, positions, cache, index, cache_len=None):
+    aux = jnp.zeros((), jnp.float32)
+    if len(kinds) == 1:
+        return apply_layer(params, x, cfg, kinds[0], positions=positions,
+                           cache=cache, index=index, cache_len=cache_len)
+    new_cache = {}
+    for i, kind in enumerate(kinds):
+        sub = f"sub{i}"
+        x, c, a = apply_layer(
+            params[sub], x, cfg, kind, positions=positions,
+            cache=None if cache is None else cache[sub], index=index,
+            cache_len=cache_len,
+        )
+        new_cache[sub] = c
+        aux = aux + a
+    return x, new_cache, aux
+
+
+_REMAT_POLICIES = {
+    "none": None,
+    "full": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+}
+
+
+def apply_stack(params, x, cfg, *, positions, caches=None, index=None, mode="train",
+                cache_len=None):
+    """Run the whole stack.  Returns (x, new_caches_or_None, aux)."""
+    kinds = unit_kinds(cfg)
+    nb, rem = scan_counts(cfg)
+
+    def run(stack_params, stack_caches, x, aux, sub_kinds):
+        if mode == "train":
+            def body(carry, p):
+                xc, auxc = carry
+                xo, _, a = apply_unit(p, xc, cfg, sub_kinds, positions=positions,
+                                      cache=None, index=index, cache_len=cache_len)
+                return (xo, auxc + a), None
+
+            if cfg.remat != "none":
+                policy = _REMAT_POLICIES[cfg.remat]
+                body = jax.checkpoint(body, policy=policy, prevent_cse=False)
+            (x, aux), _ = jax.lax.scan(body, (x, aux), stack_params)
+            return x, None, aux
+        if mode == "prefill":
+            def body(carry, p):
+                xc, auxc = carry
+                xo, cache_out, a = apply_unit(p, xc, cfg, sub_kinds, positions=positions,
+                                              cache=None, index=index,
+                                              cache_len=cache_len)
+                return (xo, auxc + a), cache_out
+
+            (x, aux), caches_out = jax.lax.scan(body, (x, aux), stack_params)
+            return x, caches_out, aux
+        # decode
+        def body(carry, inp):
+            xc, auxc = carry
+            p, c = inp
+            xo, cache_out, a = apply_unit(p, xc, cfg, sub_kinds, positions=positions,
+                                          cache=c, index=index, cache_len=cache_len)
+            return (xo, auxc + a), cache_out
+
+        (x, aux), caches_out = jax.lax.scan(body, (x, aux), (stack_params, stack_caches))
+        return x, caches_out, aux
+
+    aux = jnp.zeros((), jnp.float32)
+    unit_caches = None if caches is None else caches.get("units")
+    x, new_unit_caches, aux = run(params["units"], unit_caches, x, aux, kinds)
+
+    new_caches = None
+    if mode != "train":
+        new_caches = {"units": new_unit_caches}
+    if rem:
+        tail_caches = None if caches is None else caches.get("tail")
+        x, new_tail, aux = run(params["tail"], tail_caches, x, aux, kinds[:rem])
+        if mode != "train":
+            new_caches["tail"] = new_tail
+    return x, new_caches, aux

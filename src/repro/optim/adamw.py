@@ -1,0 +1,114 @@
+"""Sharded AdamW with fp32 master weights, global-norm clip and LR schedule.
+
+TrainState layout (every leaf sharded like its parameter under the FSDP/TP
+rules, so optimizer memory is fully ZeRO-sharded):
+
+    {"params": bf16, "master": f32, "mu": f32, "nu": f32, "step": i32}
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+def lr_schedule(tcfg: TrainConfig, step):
+    """Linear warmup -> cosine decay to 10%."""
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else jnp.float32(step)
+    warm = jnp.minimum(step / jnp.maximum(tcfg.warmup_steps, 1), 1.0)
+    prog = jnp.clip(
+        (step - tcfg.warmup_steps) / jnp.maximum(tcfg.total_steps - tcfg.warmup_steps, 1),
+        0.0, 1.0,
+    )
+    cos = 0.1 + 0.45 * (1.0 + jnp.cos(jnp.pi * prog))
+    return tcfg.learning_rate * warm * cos
+
+
+def init_train_state(params, moment_dtype=jnp.float32):
+    """moment_dtype=bfloat16 halves mu/nu memory (8-bit-Adam-style tradeoff;
+    master weights always stay fp32)."""
+    f32 = lambda p: p.astype(jnp.float32)
+    # .copy() forces distinct device buffers — identical zeros constants can
+    # otherwise alias, which trips donation ("donate the same buffer twice")
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype).copy()
+    return {
+        "params": params,
+        "master": jax.tree.map(f32, params),
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def abstract_train_state(abstract_parms, moment_dtype=jnp.float32):
+    f32 = lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32)
+    mom = lambda p: jax.ShapeDtypeStruct(p.shape, moment_dtype)
+    return {
+        "params": abstract_parms,
+        "master": jax.tree.map(f32, abstract_parms),
+        "mu": jax.tree.map(mom, abstract_parms),
+        "nu": jax.tree.map(mom, abstract_parms),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+
+
+def train_state_axes(param_axes):
+    """Logical axes for the whole TrainState (master/mu/nu shard like params)."""
+    return {
+        "params": param_axes,
+        "master": param_axes,
+        "mu": param_axes,
+        "nu": param_axes,
+        "step": (),
+    }
+
+
+def global_norm(tree):
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_step(state, grads, tcfg: TrainConfig):
+    """One AdamW update.  grads: fp32 tree shaped like params."""
+    step = state["step"] + 1
+    lr = lr_schedule(tcfg, step)
+
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, tcfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+    b1, b2, eps, wd = tcfg.beta1, tcfg.beta2, tcfg.eps, tcfg.weight_decay
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32) * scale
+        mdt = m.dtype
+        m = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        v = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        mh = m / bc1
+        vh = v / bc2
+        new_master = master - lr * (mh / (jnp.sqrt(vh) + eps) + wd * master)
+        return m.astype(mdt), v.astype(mdt), new_master
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state["mu"])
+    flat_v = treedef.flatten_up_to(state["nu"])
+    flat_w = treedef.flatten_up_to(state["master"])
+    flat_p = treedef.flatten_up_to(state["params"])
+
+    new_m, new_v, new_w, new_p = [], [], [], []
+    for g, m, v, w, p in zip(flat_g, flat_m, flat_v, flat_w, flat_p):
+        m2, v2, w2 = upd(g, m, v, w)
+        new_m.append(m2)
+        new_v.append(v2)
+        new_w.append(w2)
+        new_p.append(w2.astype(p.dtype))
+
+    new_state = {
+        "params": jax.tree.unflatten(treedef, new_p),
+        "master": jax.tree.unflatten(treedef, new_w),
+        "mu": jax.tree.unflatten(treedef, new_m),
+        "nu": jax.tree.unflatten(treedef, new_v),
+        "step": step,
+    }
+    return new_state, {"grad_norm": gnorm, "lr": lr}

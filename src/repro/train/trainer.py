@@ -1,0 +1,182 @@
+"""Trainer loop: traced (the paper's instrumentation as a first-class
+feature), fault-tolerant, straggler-aware.
+
+Every phase the paper's Extrae would see in an MPI application has its
+analogue here, emitted through ``repro.core``:
+
+  * states/phases: data_load / train_step / checkpoint / compile
+  * counters: per-step HLO FLOPs+bytes (cost-analysis "PAPI"), rusage
+  * device-side collectives: the compiled step's schedule replayed onto the
+    measured step window (core.comm_replay)
+
+Fault tolerance: atomic async checkpoints every N steps with the data
+pipeline state inside; ``run()`` auto-resumes from the newest checkpoint;
+SIGTERM triggers a final checkpoint + clean stop (preemption drill).
+Straggler mitigation hook: per-step host timings feed
+``core.analysis.straggler_report``; flagged tasks are surfaced via the
+``on_straggler`` callback (at real scale: re-shard / evict the host).
+"""
+from __future__ import annotations
+
+import signal
+import time
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeSpec, TrainConfig
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core import events as ev
+from repro.core.counters import StepCounters
+from repro.core.hlo_comm import collective_summary, parse_collectives
+from repro.core.tracer import Tracer
+from repro.data.pipeline import TokenPipeline
+from repro.models.model import build_model
+from repro.optim.adamw import init_train_state
+from repro.train.step import make_train_step, pick_microbatches
+
+
+class Trainer:
+    def __init__(
+        self, cfg: ModelConfig, tcfg: TrainConfig, shape: ShapeSpec,
+        workdir: str | Path, *, tracer: Tracer | None = None,
+        mesh=None, rules=None, on_straggler=None,
+    ):
+        self.cfg, self.tcfg, self.shape = cfg, tcfg, shape
+        self.workdir = Path(workdir)
+        self.model = build_model(cfg)
+        self.pipeline = TokenPipeline(cfg, shape, seed=tcfg.seed)
+        self.ckpt = Checkpointer(self.workdir / "ckpt", keep=tcfg.keep_checkpoints)
+        self.tracer = tracer
+        self.mesh = mesh
+        self.rules = rules
+        self.on_straggler = on_straggler
+        self._stop = False
+        mb = pick_microbatches(shape.global_batch, 1, tcfg.microbatches)
+        # NOTE: no runtime donation — XLA CPU's Execute mishandles donated
+        # buffers intermittently ("donate the same buffer twice"); the
+        # dry-run keeps donation since it only compiles (launch/dryrun.py),
+        # which is where memory_analysis needs it. On TPU this would be
+        # donate_argnums=(0,).
+        self._step_fn = jax.jit(make_train_step(self.model, tcfg, microbatches=mb))
+        self._counters: StepCounters | None = None
+        self._step_times: list[float] = []
+        self.history: list[dict] = []
+
+    # ------------------------------------------------------------------
+    def _emit(self, fn, *a, **kw):
+        if self.tracer is not None and self.tracer.active:
+            return fn(*a, **kw)
+        import contextlib
+
+        return contextlib.nullcontext()
+
+    def install_preemption_handler(self):
+        def handler(signum, frame):
+            self._stop = True
+
+        signal.signal(signal.SIGTERM, handler)
+        signal.signal(signal.SIGINT, handler)
+
+    # ------------------------------------------------------------------
+    def init_or_resume(self):
+        params = self.model.init(jax.random.PRNGKey(self.tcfg.seed))
+        state = init_train_state(params)
+        restored = self.ckpt.restore_latest(state)
+        if restored is not None:
+            step, state, extra = restored
+            self.pipeline.load_state_dict(extra["pipeline"])
+            start = int(extra.get("step", step))
+            if self.tracer:
+                self.tracer.emit(ev.EV_STEP_NUMBER, start)
+            return state, start
+        return state, 0
+
+    def _compile_trace(self, state, batch):
+        """Lower once to capture the collective schedule + cost counters —
+        the tracer's 'MPI interception' for the compiled step."""
+        t0 = time.perf_counter_ns()
+        if self.tracer:
+            with self.tracer.phase(ev.PHASE_COMPILE):
+                lowered = self._step_fn.lower(state, batch)
+                compiled = lowered.compile()
+        else:
+            lowered = self._step_fn.lower(state, batch)
+            compiled = lowered.compile()
+        ops = parse_collectives(compiled.as_text())
+        coll = collective_summary(ops)["total_operand_bytes"]
+        self._counters = StepCounters.from_compiled(compiled, coll_bytes=coll)
+        self.compile_time_s = (time.perf_counter_ns() - t0) / 1e9
+        self.collective_ops = ops
+        return compiled
+
+    # ------------------------------------------------------------------
+    def run(self, num_steps: int | None = None) -> list[dict]:
+        num_steps = num_steps or self.tcfg.total_steps
+        state, start = self.init_or_resume()
+        compiled = None
+        step = start
+        while step < num_steps and not self._stop:
+            if self.tracer:
+                with self.tracer.state(ev.STATE_IO), self.tracer.phase(ev.PHASE_DATA):
+                    batch = self.pipeline.next_batch()
+            else:
+                batch = self.pipeline.next_batch()
+            batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+            if compiled is None:
+                compiled = self._compile_trace(state, batch)
+
+            t0 = time.perf_counter()
+            if self.tracer:
+                with self.tracer.phase(ev.PHASE_STEP, step=step):
+                    state, metrics = self._step_fn(state, batch)
+                    jax.block_until_ready(metrics["loss"])
+                if self._counters:
+                    self._counters.emit(self.tracer)
+            else:
+                state, metrics = self._step_fn(state, batch)
+                jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            self._step_times.append(dt)
+            rec = {k: float(v) for k, v in metrics.items()}
+            rec.update(step=step, time_s=dt)
+            self.history.append(rec)
+            step += 1
+
+            if step % self.tcfg.checkpoint_every == 0 or self._stop or step == num_steps:
+                self._checkpoint(state, step)
+            self._straggler_check(step)
+        if self._stop:  # preemption: final consistent checkpoint
+            self._checkpoint(state, step)
+        self.ckpt.wait()
+        self.final_state = state
+        return self.history
+
+    def _checkpoint(self, state, step):
+        extra = {"step": step, "pipeline": self.pipeline.state_dict()}
+        if self.tracer:
+            with self.tracer.state(ev.STATE_IO), self.tracer.phase(ev.PHASE_CKPT):
+                if self.tcfg.async_checkpoint:
+                    self.ckpt.save_async(step, state, extra)
+                else:
+                    self.ckpt.save(step, state, extra)
+        else:
+            if self.tcfg.async_checkpoint:
+                self.ckpt.save_async(step, state, extra)
+            else:
+                self.ckpt.save(step, state, extra)
+
+    def _straggler_check(self, step, window: int = 20):
+        """Single-host analogue of the per-task straggler scan: flag steps
+        whose duration exceeds threshold x rolling median (GC pauses, data
+        stalls, slow hosts at scale)."""
+        if len(self._step_times) < 5 or step % 10:
+            return
+        times = np.array(self._step_times[-window:])
+        med = float(np.median(times))
+        if med > 0 and times[-1] > self.tcfg.straggler_threshold * med:
+            if self.on_straggler is not None:
+                self.on_straggler(step, times[-1], med)
+            if self.tracer:
+                self.tracer.emit(ev.EV_STEP_NUMBER, step)  # mark for analysis

@@ -1,0 +1,37 @@
+"""Shared test helpers: synthetic batches for any arch/shape."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+
+def synth_batch(cfg: ModelConfig, shape: ShapeSpec, seed: int = 0) -> dict:
+    """Concrete random batch matching model.batch_specs(shape)."""
+    rng = np.random.default_rng(seed)
+    b, s = shape.global_batch, shape.seq_len
+    v = cfg.vocab_size
+
+    if shape.kind == "decode":
+        return {"tokens": jnp.asarray(rng.integers(0, v, (b,)), jnp.int32)}
+
+    s_text = s - (cfg.num_patches if cfg.family == "vlm" else 0)
+    batch = {"tokens": jnp.asarray(rng.integers(0, v, (b, s_text)), jnp.int32)}
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jnp.asarray(
+            rng.normal(size=(b, cfg.num_patches, cfg.vision_dim)), jnp.float32
+        )
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(b, cfg.encoder_seq, cfg.d_model)), jnp.float32
+        )
+    if shape.kind == "train":
+        batch["targets"] = jnp.asarray(rng.integers(0, v, (b, s_text)), jnp.int32)
+        batch["loss_mask"] = jnp.ones((b, s_text), jnp.float32)
+    return batch
+
+
+def tiny_shape(kind: str = "train", seq: int = 32, batch: int = 2) -> ShapeSpec:
+    return ShapeSpec(f"tiny_{kind}", kind, seq, batch)

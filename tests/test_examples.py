@@ -1,0 +1,48 @@
+"""Examples must run end-to-end (subprocess-isolated; the fast ones)."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+ROOT = "/root/repo"
+
+
+def _run(script, args=(), timeout=560):
+    env = {**os.environ, "PYTHONPATH": f"{ROOT}/src"}
+    return subprocess.run(
+        [sys.executable, f"{ROOT}/examples/{script}", *args],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=timeout,
+    )
+
+
+def test_quickstart():
+    r = _run("quickstart.py")
+    assert r.returncode == 0, (r.stdout + r.stderr)[-3000:]
+    assert "paraver:" in r.stdout
+    assert "Time fractions" in r.stdout
+    assert "custom events: 3" in r.stdout
+
+
+def test_serve_traced():
+    r = _run("serve_traced.py")
+    assert r.returncode == 0, (r.stdout + r.stderr)[-3000:]
+    assert "generated shape: (8, 48)" in r.stdout
+    assert "prefill" in r.stdout and "decode_step" in r.stdout
+
+
+def test_train_e2e_short():
+    r = _run("train_e2e.py", ["--steps", "40"])
+    assert r.returncode == 0, (r.stdout + r.stderr)[-3000:]
+    assert "LEARNED" in r.stdout
+    assert "checkpoints:" in r.stdout
+
+
+def test_analyze_trace_works_on_distributed_output():
+    # generate (or reuse) the distributed trace, then parse+analyze it
+    if not os.path.exists(f"{ROOT}/examples/out/distributed.prv"):
+        r = _run("distributed_trace.py", timeout=560)
+        assert r.returncode == 0, (r.stdout + r.stderr)[-3000:]
+    r = _run("analyze_trace.py")
+    assert r.returncode == 0, (r.stdout + r.stderr)[-3000:]
+    assert "[Fig 1]" in r.stdout and "[what-if]" in r.stdout

@@ -1,0 +1,56 @@
+"""Folding (paper future-work): synthetic sampler events fold onto the
+normalized step axis at the right positions."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import events as ev
+from repro.core.folding import fold
+from repro.core.tracer import Tracer
+
+
+def _trace(n_steps=20, step_ns=1_000_000):
+    tracer = Tracer("fold").init()
+    base = tracer.t0
+    fid_a = tracer.sample_func_id("attention (attention.py:1)")
+    fid_b = tracer.sample_func_id("mlp (layers.py:1)")
+    for s in range(n_steps):
+        b = base + s * step_ns
+        tracer.inject_event(0, 0, b, ev.EV_PHASE, ev.PHASE_STEP)
+        # one sample at 25% (attention), one at 75% (mlp) of every step
+        tracer.inject_event(0, 0, b + step_ns // 4, ev.EV_SAMPLE_FUNC, fid_a)
+        tracer.inject_event(0, 0, b + 3 * step_ns // 4, ev.EV_SAMPLE_FUNC, fid_b)
+        tracer.inject_event(0, 0, b + step_ns, ev.EV_PHASE, ev.PHASE_END)
+    trace = tracer.finish()
+    trace.t_end = n_steps * step_ns
+    return trace
+
+
+def test_fold_localizes_samples():
+    trace = _trace()
+    prof = fold(trace, num_bins=20)
+    assert prof.num_instances == 20
+    assert prof.num_samples == 40
+    # attention samples concentrate in bin 5 (25%), mlp in bin 15 (75%)
+    att = prof.per_function["attention (attention.py:1)"]
+    mlp = prof.per_function["mlp (layers.py:1)"]
+    assert att.argmax() == 5 and att[5] == 20
+    assert mlp.argmax() == 15 and mlp[15] == 20
+    # density = per-function sum
+    np.testing.assert_array_equal(prof.bins, att + mlp)
+    assert prof.mean_duration_ns == 1_000_000
+
+
+def test_fold_top_functions():
+    trace = _trace()
+    prof = fold(trace)
+    top = prof.top_functions(2)
+    assert {t[0] for t in top} == {"attention (attention.py:1)", "mlp (layers.py:1)"}
+    assert all(abs(frac - 0.5) < 1e-9 for _, frac in top)
+
+
+def test_fold_empty_region():
+    tracer = Tracer().init()
+    trace = tracer.finish()
+    prof = fold(trace)
+    assert prof.num_instances == 0 and prof.num_samples == 0

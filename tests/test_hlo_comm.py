@@ -1,0 +1,109 @@
+"""HLO collective extraction: synthetic HLO lines + a real compiled module
+(8 fake devices in a subprocess so XLA_FLAGS doesn't leak into this process).
+"""
+from __future__ import annotations
+
+import subprocess
+import sys
+import textwrap
+
+from repro.core.hlo_comm import collective_summary, parse_collectives
+
+SYNTH = """\
+HloModule test
+ENTRY %main {
+  %p0 = bf16[512,64]{1,0} parameter(0)
+  %ar = f32[512,64]{1,0} all-reduce(%p0), channel_id=1, replica_groups={{0,4},{1,5},{2,6},{3,7}}, use_global_device_ids=true, to_apply=%add
+  %ag = bf16[1024,64]{1,0} all-gather(%p0), channel_id=2, replica_groups=[4,2]<=[8], dimensions={0}
+  %rs = bf16[256,64]{1,0} reduce-scatter(%p0), channel_id=3, replica_groups={{0,1}}, dimensions={0}, to_apply=%add
+  %a2a = bf16[512,64]{1,0} all-to-all(%p0), channel_id=4, replica_groups={{0,1,2,3}}, dimensions={0}
+  %cp = bf16[512,64]{1,0} collective-permute(%p0), channel_id=5, source_target_pairs={{0,1},{1,2},{2,3},{3,0}}
+  %ags = (bf16[512,64]{1,0}, bf16[1024,64]{1,0}) all-gather-start(%p0), channel_id=6, replica_groups={{0,1}}, dimensions={0}
+  %agd = bf16[1024,64]{1,0} all-gather-done(%ags)
+}
+"""
+
+
+def test_parse_synthetic():
+    ops = {o.name: o for o in parse_collectives(SYNTH, total_devices=8)}
+    assert set(ops) == {"ar", "ag", "rs", "a2a", "cp", "ags"}
+
+    ar = ops["ar"]
+    assert ar.kind == "all-reduce"
+    assert ar.result_bytes == 512 * 64 * 4
+    assert ar.operand_bytes == ar.result_bytes
+    assert ar.group_size == 2 and ar.num_groups == 4
+
+    ag = ops["ag"]
+    assert ag.kind == "all-gather"
+    assert ag.group_size == 2 and ag.num_groups == 4  # [4,2]<=[8]
+    assert ag.operand_bytes == 1024 * 64 * 2 // 2
+
+    rs = ops["rs"]
+    assert rs.operand_bytes == 256 * 64 * 2 * 2  # result x group
+
+    cp = ops["cp"]
+    assert cp.source_target_pairs == ((0, 1), (1, 2), (2, 3), (3, 0))
+    assert cp.wire_bytes_per_device() == cp.operand_bytes
+
+    # async start counted once (result = last tuple element), done skipped
+    ags = ops["ags"]
+    assert ags.kind == "all-gather"
+    assert ags.result_bytes == 1024 * 64 * 2
+
+
+def test_cost_model_factors():
+    ops = {o.name: o for o in parse_collectives(SYNTH, total_devices=8)}
+    ar = ops["ar"]
+    assert ar.wire_bytes_per_device() == 2 * 0.5 * ar.operand_bytes  # n=2
+    a2a = ops["a2a"]
+    assert a2a.wire_bytes_per_device() == 0.75 * a2a.operand_bytes  # n=4
+
+
+def test_summary():
+    ops = parse_collectives(SYNTH, total_devices=8)
+    s = collective_summary(ops)
+    assert s["count"] == 6
+    assert s["by_kind"]["all-reduce"]["count"] == 1
+    assert s["total_operand_bytes"] > 0
+    assert s["total_wire_bytes_per_device"] > 0
+
+
+_REAL = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P, NamedSharding
+    from repro.core.hlo_comm import parse_collectives, collective_summary
+
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+    def f(x, w):
+        y = jnp.einsum("bd,df->bf", x, w, preferred_element_type=jnp.float32)
+        return jnp.sum(y)
+
+    xs = jax.ShapeDtypeStruct((32, 256), jnp.bfloat16)
+    ws = jax.ShapeDtypeStruct((256, 512), jnp.bfloat16)
+    c = jax.jit(jax.grad(f, argnums=1), in_shardings=(
+        NamedSharding(mesh, P("data", "model")),
+        NamedSharding(mesh, P("model", None)),
+    )).lower(xs, ws).compile()
+    ops = parse_collectives(c.as_text(), total_devices=8)
+    assert ops, "expected at least one collective in sharded grad"
+    kinds = {o.kind for o in ops}
+    assert "all-reduce" in kinds, kinds
+    s = collective_summary(ops)
+    assert s["total_operand_bytes"] > 0
+    print("OK", sorted(kinds), s["count"])
+""")
+
+
+def test_parse_real_compiled_module():
+    r = subprocess.run(
+        [sys.executable, "-c", _REAL], capture_output=True, text=True,
+        env={**__import__("os").environ, "PYTHONPATH": "src"}, cwd="/root/repo",
+        timeout=300,
+    )
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert r.stdout.startswith("OK")

@@ -1,0 +1,41 @@
+"""Launcher CLIs (launch/train.py, launch/serve.py) run end-to-end,
+including the traced+sampled path with the Folding profile."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+ROOT = "/root/repo"
+
+
+def _run(mod, args, timeout=560):
+    env = {**os.environ, "PYTHONPATH": f"{ROOT}/src"}
+    return subprocess.run(
+        [sys.executable, "-m", mod, *args], capture_output=True, text=True,
+        env=env, cwd=ROOT, timeout=timeout,
+    )
+
+
+def test_train_cli(tmp_path):
+    r = _run("repro.launch.train",
+             ["--arch", "mamba2-370m", "--steps", "12", "--batch", "4",
+              "--seq", "32", "--workdir", str(tmp_path), "--trace",
+              "--sample-hz", "200", "--checkpoint-every", "6"])
+    assert r.returncode == 0, (r.stdout + r.stderr)[-3000:]
+    assert "loss" in r.stdout
+    assert "checkpoints: [6, 12]" in r.stdout
+    assert "trace:" in r.stdout
+    assert "folded profile over 12 steps" in r.stdout
+    assert (tmp_path / "trace.prv").exists()
+    assert (tmp_path / "trace.chrome.json").exists()
+
+
+def test_serve_cli(tmp_path):
+    r = _run("repro.launch.serve",
+             ["--arch", "recurrentgemma-9b", "--requests", "2",
+              "--prompt-len", "16", "--gen", "8", "--trace",
+              "--out", str(tmp_path)])
+    assert r.returncode == 0, (r.stdout + r.stderr)[-3000:]
+    assert "tok/s" in r.stdout
+    assert (tmp_path / "serve.prv").exists()

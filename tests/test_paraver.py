@@ -1,0 +1,123 @@
+"""Paraver writer/parser: exact round-trip, including hypothesis-generated
+traces (property: parse(write(trace)) == trace up to record ordering)."""
+from __future__ import annotations
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import events as ev
+from repro.core.chrome_trace import write_chrome_trace
+from repro.core.paraver import parse_prv, write_prv
+from repro.core.records import (
+    COMM_DTYPE, EVENT_DTYPE, STATE_DTYPE, EventType, Trace, sort_trace,
+)
+from repro.core.tracer import Tracer
+
+
+def _mk_trace(ntasks, threads_per_task, states, events, comms, t_end):
+    return sort_trace(Trace(
+        app_name="t",
+        num_tasks=ntasks,
+        threads_per_task=threads_per_task,
+        node_of_task=[t % max(1, ntasks // 2 + 1) for t in range(ntasks)],
+        states=np.array(states, STATE_DTYPE) if states else np.empty(0, STATE_DTYPE),
+        events=np.array(events, EVENT_DTYPE) if events else np.empty(0, EVENT_DTYPE),
+        comms=np.array(comms, COMM_DTYPE) if comms else np.empty(0, COMM_DTYPE),
+        event_types={
+            ev.EV_PHASE: EventType(ev.EV_PHASE, "Trainer phase", dict(ev.PHASE_LABELS)),
+            84210: EventType(84210, "Vector length"),
+        },
+        t_end=t_end,
+    ))
+
+
+def test_roundtrip_simple(tmp_path):
+    trace = _mk_trace(
+        2, [2, 1],
+        states=[(0, 0, 0, 100, 1), (0, 1, 10, 60, 9), (1, 0, 0, 100, 1)],
+        events=[(0, 0, 5, ev.EV_PHASE, 1), (0, 0, 90, ev.EV_PHASE, 0),
+                (1, 0, 50, 84210, 4096)],
+        comms=[(0, 0, 1, 0, 10, 12, 40, 42, 8192, 3)],
+        t_end=100,
+    )
+    paths = write_prv(trace, tmp_path / "t")
+    assert paths["prv"].exists() and paths["pcf"].exists() and paths["row"].exists()
+    back = parse_prv(paths["prv"])
+    assert back.num_tasks == 2
+    assert back.threads_per_task == [2, 1]
+    assert back.t_end == 100
+    np.testing.assert_array_equal(back.states, trace.states)
+    np.testing.assert_array_equal(back.events, trace.events)
+    np.testing.assert_array_equal(back.comms, trace.comms)
+    assert back.event_types[84210].desc == "Vector length"
+    assert back.event_types[ev.EV_PHASE].values[1] == "train_step"
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.data())
+def test_roundtrip_property(data, tmp_path_factory):
+    ntasks = data.draw(st.integers(1, 5))
+    threads = data.draw(st.lists(st.integers(1, 3), min_size=ntasks, max_size=ntasks))
+    t_end = data.draw(st.integers(10, 10**9))
+
+    def endpoint():
+        task = data.draw(st.integers(0, ntasks - 1))
+        thread = data.draw(st.integers(0, threads[task] - 1))
+        return task, thread
+
+    states = []
+    for _ in range(data.draw(st.integers(0, 10))):
+        task, thread = endpoint()
+        b = data.draw(st.integers(0, t_end - 1))
+        e = data.draw(st.integers(b, t_end))
+        states.append((task, thread, b, e, data.draw(st.sampled_from(list(ev.STATE_LABELS)))))
+    events = []
+    for _ in range(data.draw(st.integers(0, 10))):
+        task, thread = endpoint()
+        events.append((task, thread, data.draw(st.integers(0, t_end)),
+                       data.draw(st.integers(1, 2**31)), data.draw(st.integers(0, 2**40))))
+    comms = []
+    for _ in range(data.draw(st.integers(0, 6))):
+        s_task, s_thread = endpoint()
+        r_task, r_thread = endpoint()
+        ls = data.draw(st.integers(0, t_end - 1))
+        comms.append((s_task, s_thread, r_task, r_thread,
+                      ls, ls + 1, ls + 2, ls + 3,
+                      data.draw(st.integers(1, 2**40)), data.draw(st.integers(0, 99))))
+
+    trace = _mk_trace(ntasks, threads, states, events, comms, t_end)
+    out = tmp_path_factory.mktemp("prv") / "t"
+    back = parse_prv(write_prv(trace, out)["prv"])
+    assert back.num_tasks == trace.num_tasks
+    assert back.threads_per_task == trace.threads_per_task
+    assert back.node_of_task == trace.node_of_task
+    np.testing.assert_array_equal(back.states, trace.states)
+    np.testing.assert_array_equal(back.events, trace.events)
+    np.testing.assert_array_equal(back.comms, trace.comms)
+
+
+def test_header_format(tmp_path):
+    trace = _mk_trace(3, [1, 1, 1], [], [(0, 0, 1, 84210, 1)], [], 1000)
+    prv = write_prv(trace, tmp_path / "h")["prv"]
+    header = prv.read_text().splitlines()[0]
+    assert header.startswith("#Paraver (")
+    body = header.split("):", 1)[1]
+    assert body.split(":")[0] == "1000"  # ftime
+    assert ":1:" in body  # one application
+
+
+def test_chrome_trace_export(tmp_path):
+    tracer = Tracer("chrome").init()
+    with tracer.phase(ev.PHASE_STEP, step=0):
+        tracer.emit(84210, 5)
+    tracer.comm(src=(0, 0), dst=(0, 0), send_ns=tracer.t0 + 10,
+                recv_ns=tracer.t0 + 20, size=64)
+    trace = tracer.finish()
+    p = write_chrome_trace(trace, tmp_path / "t.json")
+    import json
+
+    data = json.loads(p.read_text())
+    phases = [e for e in data["traceEvents"] if e["ph"] in ("B", "E")]
+    assert len(phases) >= 2
+    flows = [e for e in data["traceEvents"] if e["ph"] in ("s", "f")]
+    assert len(flows) == 2

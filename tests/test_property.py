@@ -1,0 +1,155 @@
+"""Hypothesis property tests on system invariants."""
+from __future__ import annotations
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import events as ev
+from repro.core.analysis import bandwidth_timeline, connectivity, time_fractions
+from repro.core.hlo_comm import CollectiveOp
+from repro.core.records import COMM_DTYPE, EVENT_DTYPE, STATE_DTYPE, Trace, sort_trace
+from repro.core.tracer import Tracer
+from repro.train.step import pick_microbatches
+
+
+# ----------------------------------------------------------------------
+# tracer invariants
+# ----------------------------------------------------------------------
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(1, 2**40)), max_size=50))
+def test_tracer_preserves_all_events(pairs):
+    tracer = Tracer().init()
+    for code_off, val in pairs:
+        tracer.emit(ev.USER_EVENT_BASE + code_off, val)
+    trace = tracer.finish()
+    user = trace.events[trace.events["type"] >= ev.USER_EVENT_BASE]
+    assert len(user) == len(pairs)  # no event is ever dropped
+    # multiset of (type, value) preserved
+    got = sorted((int(t), int(v)) for t, v in zip(user["type"], user["value"]))
+    want = sorted((ev.USER_EVENT_BASE + c, v) for c, v in pairs)
+    assert got == want
+    assert np.all(np.diff(trace.events["time"]) >= 0)  # sorted timeline
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.sampled_from(sorted(ev.STATE_LABELS)), min_size=1, max_size=8))
+def test_state_nesting_is_well_formed(stack_states):
+    tracer = Tracer().init()
+
+    def nest(states):
+        if not states:
+            return
+        with tracer.state(states[0]):
+            nest(states[1:])
+
+    nest(stack_states)
+    trace = tracer.finish()
+    st_ = trace.states
+    assert np.all(st_["end"] >= st_["begin"])
+    # total state-time of thread 0 == makespan (states partition the timeline)
+    t0 = st_[(st_["task"] == 0) & (st_["thread"] == 0)]
+    covered = int((t0["end"] - t0["begin"]).sum())
+    assert abs(covered - trace.t_end) <= len(t0) + 1  # rounding slack
+
+
+# ----------------------------------------------------------------------
+# analysis conservation laws
+# ----------------------------------------------------------------------
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_bandwidth_conserves_bytes_and_connectivity_counts(data):
+    n = data.draw(st.integers(2, 6))
+    t_end = 1_000_000
+    msgs = data.draw(st.lists(
+        st.tuples(st.integers(0, n - 1), st.integers(0, n - 1),
+                  st.integers(0, t_end - 2), st.integers(1, 2**24)),
+        min_size=1, max_size=30))
+    comms = []
+    for src, dst, t0, size in msgs:
+        t1 = data.draw(st.integers(t0 + 1, t_end))
+        comms.append((src, 0, dst, 0, t0, t0, t1, t1, size, 0))
+    trace = sort_trace(Trace(
+        app_name="p", num_tasks=n, threads_per_task=[1] * n,
+        node_of_task=list(range(n)),
+        states=np.empty(0, STATE_DTYPE), events=np.empty(0, EVENT_DTYPE),
+        comms=np.array(comms, COMM_DTYPE), event_types={}, t_end=t_end,
+    ))
+    counts, sizes = connectivity(trace)
+    assert counts.sum() == len(msgs)
+    assert sizes.sum() == sum(m[3] for m in msgs)
+    centers, series, peak = bandwidth_timeline(trace, buckets=50, by="task")
+    width = centers[1] - centers[0]
+    total = series.sum() * width / 1e9 * 1e6
+    assert abs(total - sizes.sum()) / max(sizes.sum(), 1) < 0.05
+
+
+@settings(max_examples=25, deadline=None)
+@given(data=st.data())
+def test_time_fractions_bounded_and_complete(data):
+    """Non-overlapping routine intervals => per-task fractions in [0,1] and
+    their sum <= 1."""
+    t_end = 1_000_000
+    tracer = Tracer().init()
+    base = tracer.t0
+    cursor = 0
+    n_int = data.draw(st.integers(1, 12))
+    for _ in range(n_int):
+        gap = data.draw(st.integers(0, 20_000))
+        dur = data.draw(st.integers(1, 50_000))
+        if cursor + gap + dur >= t_end:
+            break
+        val = data.draw(st.sampled_from(list(ev.COLL_IDS.values())))
+        tracer.inject_event(0, 0, base + cursor + gap, ev.EV_COLLECTIVE, val)
+        tracer.inject_event(0, 0, base + cursor + gap + dur, ev.EV_COLLECTIVE, 0)
+        cursor += gap + dur
+    trace = tracer.finish()
+    trace.t_end = t_end
+    fr = time_fractions(trace, ev.EV_COLLECTIVE)
+    total = sum(v["mean"] * trace.num_tasks for v in fr.values())
+    for v in fr.values():
+        assert 0.0 <= v["mean"] <= 1.0 + 1e-9
+    assert total <= 1.0 + 1e-6
+
+
+# ----------------------------------------------------------------------
+# collective cost model invariants
+# ----------------------------------------------------------------------
+
+
+@settings(max_examples=50, deadline=None)
+@given(kind=st.sampled_from(["all-reduce", "all-gather", "reduce-scatter", "all-to-all"]),
+       group=st.integers(1, 512), bytes_=st.integers(1, 2**32))
+def test_wire_bytes_bounds(kind, group, bytes_):
+    if kind == "all-gather":
+        op = CollectiveOp("x", kind, bytes_ * group, bytes_, group, 1)
+    elif kind == "reduce-scatter":
+        op = CollectiveOp("x", kind, bytes_, bytes_ * group, group, 1)
+    else:
+        op = CollectiveOp("x", kind, bytes_, bytes_, group, 1)
+    w = op.wire_bytes_per_device()
+    assert w >= 0
+    factor = 2.0 if kind == "all-reduce" else 1.0
+    assert w <= factor * op.operand_bytes * (1 if kind != "all-gather" else group)
+    if group == 1:
+        assert w == 0.0  # single-participant collectives move nothing
+
+
+# ----------------------------------------------------------------------
+# microbatch picker
+# ----------------------------------------------------------------------
+
+
+@settings(max_examples=60, deadline=None)
+@given(b_log=st.integers(0, 10), dp_log=st.integers(0, 6), desired=st.integers(1, 64))
+def test_pick_microbatches_invariants(b_log, dp_log, desired):
+    b, dp = 2 ** b_log, 2 ** dp_log
+    m = pick_microbatches(b, dp, desired)
+    assert 1 <= m <= max(desired, 1)
+    assert b % m == 0
+    if (b // m) % dp != 0:
+        # only allowed when even m=1 cannot satisfy dp-divisibility
+        assert b % dp != 0

@@ -1,0 +1,52 @@
+"""Dynamic collective instrumentation (shard_map wrappers + io_callback),
+run in a subprocess with 4 fake devices."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro import core as xtrace
+    from repro.core import events as ev
+    from repro.sharding.collectives import traced_psum, traced_ppermute
+
+    mesh = jax.make_mesh((4,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+    tracer = xtrace.init("collectives")
+
+    def f(v):
+        s = traced_psum(v, "x")
+        r = traced_ppermute(s, "x", [(i, (i + 1) % 4) for i in range(4)])
+        return r
+
+    g = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("x"), out_specs=P("x"),
+                              check_vma=False))
+    out = g(jnp.arange(8.0))
+    jax.block_until_ready(out)
+    trace = xtrace.finish()
+    coll = trace.events[trace.events["type"] == ev.EV_COLLECTIVE]
+    # 4 devices x 2 collectives x (enter + exit)
+    assert len(coll) == 16, len(coll)
+    vals = set(int(v) for v in coll["value"])
+    assert ev.COLL_ALL_REDUCE in vals and ev.COLL_PERMUTE in vals
+    assert trace.num_tasks == 4  # events attributed per device index
+    # the math is untouched by instrumentation: psum is elementwise across
+    # shards ([0+2+4+6, 1+3+5+7] on every device); ppermute rotates
+    # identical shards -> tiled result
+    np.testing.assert_allclose(np.asarray(out), np.tile([12.0, 16.0], 4))
+    print("OK", len(coll))
+""")
+
+
+def test_traced_collectives_subprocess():
+    r = subprocess.run(
+        [sys.executable, "-c", SCRIPT], capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": "src"}, cwd="/root/repo", timeout=420,
+    )
+    assert r.returncode == 0, (r.stdout + r.stderr)[-3000:]
+    assert r.stdout.startswith("OK")

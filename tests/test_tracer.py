@@ -1,0 +1,136 @@
+"""Tracer unit tests: API parity with the paper's listings + state stacking,
+user functions, comm records, sampler, counters."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import events as ev
+from repro.core.counters import StepCounters, rusage_counters
+from repro.core.tracer import Tracer
+
+
+def test_listing1_listing2_api():
+    """Paper Listings 1-2: init / user_function / register / emit / finish."""
+    tracer = Tracer("axpy-bench").init()
+    code = 84210
+    tracer.register(code, "Vector length")
+
+    @tracer.user_function
+    def axpy(a, x, y):
+        tracer.emit(code, len(x))
+        return a * x + y
+
+    for _ in range(3):
+        axpy(2.0, np.ones(8), np.zeros(8))
+    trace = tracer.finish()
+
+    assert trace.num_tasks == 1
+    user = trace.events[trace.events["type"] == ev.EV_USER_FUNC]
+    assert len(user) == 6  # 3 enters + 3 exits
+    assert list(user["value"][:2]) == [1, 0]
+    vec = trace.events[trace.events["type"] == code]
+    assert len(vec) == 3 and set(vec["value"]) == {8}
+    assert trace.event_types[code].desc == "Vector length"
+    # monotonically ordered after sort
+    assert np.all(np.diff(trace.events["time"]) >= 0)
+
+
+def test_state_stacking():
+    tracer = Tracer().init()
+    with tracer.state(ev.STATE_IO):
+        with tracer.state(ev.STATE_GROUP_COMM):
+            time.sleep(0.001)
+        time.sleep(0.001)
+    trace = tracer.finish()
+    st = trace.states
+    assert set(st["state"]) >= {ev.STATE_RUNNING, ev.STATE_IO, ev.STATE_GROUP_COMM}
+    # intervals are well-formed and non-negative
+    assert np.all(st["end"] >= st["begin"])
+    # the GROUP_COMM interval nests inside an IO interval's span
+    io = st[st["state"] == ev.STATE_IO]
+    gc = st[st["state"] == ev.STATE_GROUP_COMM]
+    assert io["begin"].min() <= gc["begin"].min()
+    assert gc["end"].max() <= io["end"].max() + 1
+
+
+def test_user_function_context_manager():
+    tracer = Tracer().init()
+    with tracer.user_function(name="ssd_chunk"):
+        pass
+    trace = tracer.finish()
+    et = trace.event_types[ev.EV_USER_FUNC]
+    assert "ssd_chunk" in et.values.values()
+
+
+def test_custom_task_identity_listing3():
+    """Paper Listing 3: remapping task ids for custom runtimes."""
+    tracer = Tracer(mode="single").init()
+    tracer.set_task_id_fn(lambda: 3)
+    tracer.set_num_tasks_fn(lambda: 8)
+    tracer.emit(ev.EV_STEP_NUMBER, 1)
+    trace = tracer.finish()
+    assert trace.num_tasks == 8
+    assert trace.events[trace.events["type"] == ev.EV_STEP_NUMBER]["task"][0] == 3
+
+
+def test_comm_records_and_injection():
+    tracer = Tracer().init()
+    tracer.comm(src=(0, 0), dst=(3, 1), send_ns=time.perf_counter_ns(),
+                recv_ns=time.perf_counter_ns() + 500, size=4096, tag=7)
+    tracer.inject_event(5, 2, time.perf_counter_ns(), ev.EV_COLLECTIVE,
+                        ev.COLL_ALL_REDUCE)
+    trace = tracer.finish()
+    assert trace.num_tasks >= 6
+    assert trace.threads_per_task[5] >= 3
+    c = trace.comms[0]
+    assert (c["stask"], c["rtask"], c["size"], c["tag"]) == (0, 3, 4096, 7)
+    assert c["precv"] >= c["psend"]
+
+
+def test_phase_context_and_counters():
+    tracer = Tracer().init()
+    ctr = StepCounters(flops_per_step=123, bytes_per_step=456, coll_bytes_per_step=789)
+    for step in range(3):
+        with tracer.phase(ev.PHASE_STEP, step=step):
+            ctr.emit(tracer, include_rusage=False)
+    trace = tracer.finish()
+    ph = trace.events[trace.events["type"] == ev.EV_PHASE]
+    assert len(ph) == 6
+    fl = trace.events[trace.events["type"] == ev.EV_CTR_FLOPS]
+    assert len(fl) == 3 and set(fl["value"]) == {123}
+
+
+def test_rusage_counters_present():
+    pairs = dict(rusage_counters())
+    assert pairs[ev.EV_CTR_RSS] > 0
+    assert pairs[ev.EV_CTR_UTIME] >= 0
+
+
+def test_sampler_collects_samples():
+    tracer = Tracer().init()
+    s = tracer.start_sampler(period_s=0.002, jitter_s=0.0005)
+    deadline = time.time() + 0.25
+    x = 0.0
+    while time.time() < deadline:
+        x += sum(i * i for i in range(200))
+    trace = tracer.finish()
+    samples = trace.events[trace.events["type"] == ev.EV_SAMPLE_FUNC]
+    assert s.samples > 10
+    assert len(samples) == s.samples
+    # sampled function names registered in the event-type table
+    assert len(trace.event_types[ev.EV_SAMPLE_FUNC].values) > 1
+
+
+def test_emit_overhead_is_sub_10us():
+    """Paper claim: tracing is low-overhead.  Hard gate at 10us/event on CPU;
+    the real number (measured in benchmarks) is well under 1.5us."""
+    tracer = Tracer().init()
+    n = 20_000
+    t0 = time.perf_counter_ns()
+    for i in range(n):
+        tracer.emit(ev.EV_STEP_NUMBER, i)
+    dt = (time.perf_counter_ns() - t0) / n
+    tracer.finish()
+    assert dt < 10_000, f"emit overhead {dt:.0f} ns/event"

@@ -1,0 +1,62 @@
+"""Dimemas-style what-if replay: analytic checks on a constructed trace."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.core import events as ev
+from repro.core.tracer import Tracer
+from repro.core.whatif import bandwidth_sweep, roofline_whatif, simulate_bandwidth
+
+
+def _trace(comm_fraction=0.5, nranks=2, span=1_000_000):
+    tracer = Tracer("wi").init()
+    base = tracer.t0
+    for r in range(nranks):
+        tracer.inject_state(r, 0, base, base + span, ev.STATE_RUNNING)
+        c0 = base + int(span * (1 - comm_fraction))
+        tracer.inject_event(r, 0, c0, ev.EV_COLLECTIVE, ev.COLL_ALL_REDUCE)
+        tracer.inject_event(r, 0, base + span, ev.EV_COLLECTIVE, ev.COLL_END)
+    trace = tracer.finish()
+    trace.t_end = span
+    return trace
+
+
+def test_infinite_bandwidth_limit():
+    """50% comm -> at bw->inf only latency (10% share) remains of comm."""
+    trace = _trace(comm_fraction=0.5)
+    res = simulate_bandwidth(trace, 1e9)
+    # predicted = 0.5 (compute) + 0.5*0.1 (latency floor) = 0.55 of base
+    assert res.speedup == pytest.approx(1 / 0.55, rel=0.02)
+
+
+def test_identity_factor_is_noop():
+    trace = _trace()
+    res = simulate_bandwidth(trace, 1.0)
+    assert res.speedup == pytest.approx(1.0, rel=1e-6)
+    assert res.predicted_comm_ns == pytest.approx(res.base_comm_ns, rel=1e-6)
+
+
+def test_halving_bandwidth_slows():
+    trace = _trace(comm_fraction=0.5)
+    res = simulate_bandwidth(trace, 0.5)
+    assert res.speedup < 1.0
+
+
+def test_sweep_monotone_and_flat_when_compute_bound():
+    comm_heavy = bandwidth_sweep(_trace(comm_fraction=0.8))
+    vals = [comm_heavy[f] for f in sorted(comm_heavy)]
+    assert vals == sorted(vals)  # monotone in bandwidth
+    compute_bound = bandwidth_sweep(_trace(comm_fraction=0.02))
+    assert max(compute_bound.values()) < 1.05  # flat curve: not comm-bound
+
+
+def test_roofline_whatif_bound_shift():
+    # collective-dominant cell: 2x links halve the bound until memory binds
+    r = roofline_whatif(compute_s=1.0, memory_s=2.0, collective_s=6.0,
+                        bandwidth_factor=10.0)
+    assert r["bound_shifts_to"] == "memory"
+    assert r["speedup"] == pytest.approx(3.0)
+    # memory-dominant cell: faster links change nothing
+    r2 = roofline_whatif(1.0, 5.0, 2.0, bandwidth_factor=100.0)
+    assert r2["speedup"] == 1.0
