@@ -1,0 +1,17 @@
+PYTHONPATH := src
+
+.PHONY: smoke test bench serve-bench
+
+# fail-fast wiring that catches API drift (e.g. cost_analysis format
+# changes) at collection/first-failure time
+smoke:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -x -q
+
+test:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -q
+
+bench:
+	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run
+
+serve-bench:
+	PYTHONPATH=$(PYTHONPATH) python benchmarks/bench_serve.py

@@ -20,6 +20,7 @@ def main() -> None:
     import bench_figures
     import bench_paraver_io
     import bench_kernels
+    import bench_serve
 
     print("name,us_per_call,derived")
     sections = [
@@ -27,6 +28,7 @@ def main() -> None:
         ("paper figures 1-5 (traced distributed workload)", bench_figures),
         ("paraver trace IO", bench_paraver_io),
         ("pallas kernels (interpret mode)", bench_kernels),
+        ("serving: fixed batch vs continuous batching", bench_serve),
     ]
     failures = 0
     for title, mod in sections:

@@ -1,8 +1,11 @@
-"""Serve a small model with batched requests, traced end-to-end.
+"""Serve a small model with continuous batching, traced end-to-end.
 
-Prefill + 48 decode steps over a batch of 8 requests through the
-ServeEngine; the trace shows prefill/decode user-function regions and a
-tokens-decoded counter, analyzed with the same tooling as training traces.
+8 variable-arrival requests flow through a 4-slot continuous-batching
+engine (sliding-window arch => ring KV caches); the trace records every
+scheduler decision (queue depth, slot occupancy, admit/retire, per-request
+TTFT/TPOT) plus prefill/decode user-function regions, and is streamed to
+disk mid-run (EV_FLUSH-bracketed segments) then segment-merged into one
+Paraver trace — analyzed with the same tooling as training traces.
 
     PYTHONPATH=src python examples/serve_traced.py
 """
@@ -18,7 +21,7 @@ from repro import core as xtrace
 from repro.core import events as ev
 from repro.configs import get_config, reduced
 from repro.models.model import build_model
-from repro.serve.engine import ServeEngine
+from repro.serve.engine import ContinuousServeEngine
 
 OUT = pathlib.Path(__file__).resolve().parent / "out"
 
@@ -31,19 +34,35 @@ def main():
     params = model.init(jax.random.PRNGKey(0))
 
     tracer = xtrace.init("serve")
-    engine = ServeEngine(cfg, params, max_len=128, tracer=tracer)
+    engine = ContinuousServeEngine(
+        cfg, params, num_slots=4, max_len=128, tracer=tracer,
+        flush_every=24, flush_base=OUT / "serve",
+    )
 
-    prompts = np.random.default_rng(0).integers(0, cfg.vocab_size, (8, 32)).astype(np.int32)
-    out = engine.generate(prompts, num_tokens=48, temperature=0.0)
-    stats = engine.throughput_stats(prompts, num_tokens=48)
+    prompts = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (8, 32)).astype(np.int32)
+    reqs = [engine.submit(prompts[i], 48) for i in range(8)]
+    results = engine.run()
+    out = np.stack([results[r.rid] for r in reqs])
+    stats = engine.throughput_stats()
 
+    segments = list(tracer.segments)
     trace = xtrace.finish()
-    paths = xtrace.write_prv(trace, OUT / "serve")
+    paths = xtrace.write_prv(trace, OUT / "serve", segments=segments)
     print(trace.summary())
-    print(f"paraver: {paths['prv']}")
+    print(f"paraver: {paths['prv']} (merged {len(segments)} flushed segments)")
     print(f"generated shape: {out.shape}; throughput {stats['tok_per_s']:.1f} tok/s (CPU)")
-    print("\nTime fractions per serving region:")
-    for name, st in xtrace.time_fractions(trace, ev.EV_USER_FUNC).items():
+    print(f"host syncs: {stats['host_syncs']} for {stats['tokens_decoded']} tokens "
+          f"over {stats['iterations']} decode iterations")
+    for r in reqs[:3]:
+        print(f"  req {r.rid}: ttft {r.ttft_ns() / 1e6:7.1f} ms   "
+              f"tpot {r.tpot_ns() / 1e6:6.1f} ms")
+
+    # analysis runs on the merged trace (reparse the .prv: flushed segments
+    # are on disk, not in the in-memory Trace)
+    merged = xtrace.parse_prv(paths["prv"])
+    print("\nTime fractions per serving region (merged trace):")
+    for name, st in xtrace.time_fractions(merged, ev.EV_USER_FUNC).items():
         print(f"  {name:12s} {st['mean'] * 100:6.2f}%")
 
 

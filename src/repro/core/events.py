@@ -38,13 +38,16 @@ STATE_LABELS = {
 }
 
 # ---- tracer/runtime phases ----
-EV_PHASE = 40000001  # trainer phase; values below
+EV_PHASE = 40000001  # trainer/server phase; values below
 PHASE_END = 0
 PHASE_STEP = 1
 PHASE_DATA = 2
 PHASE_CKPT = 3
 PHASE_COMPILE = 4
 PHASE_EVAL = 5
+PHASE_PREFILL = 6  # serve: prefill of one admitted request
+PHASE_DECODE = 7  # serve: one batched decode iteration over the slot pool
+PHASE_ADMIT = 8  # serve: scheduler admission window
 PHASE_LABELS = {
     PHASE_END: "End",
     PHASE_STEP: "train_step",
@@ -52,6 +55,9 @@ PHASE_LABELS = {
     PHASE_CKPT: "checkpoint",
     PHASE_COMPILE: "compile",
     PHASE_EVAL: "eval",
+    PHASE_PREFILL: "serve_prefill",
+    PHASE_DECODE: "serve_decode",
+    PHASE_ADMIT: "serve_admit",
 }
 
 EV_FLUSH = 40000003  # tracer buffer flush (begin=1/end=0)
@@ -93,6 +99,25 @@ CTR_LABELS = {
     EV_CTR_UTIME: "User time (us)",
     EV_CTR_STIME: "System time (us)",
     EV_CTR_MINFLT: "Minor page faults",
+}
+
+# ---- serving engine (continuous batching; paper Listing 4 discipline:
+# every scheduler decision is bracketed/stamped with punctual events) ----
+EV_QUEUE_DEPTH = 42200001  # counter: requests waiting for a slot
+EV_SLOTS_ACTIVE = 42200002  # counter: occupied decode slots
+EV_TOKENS_TOTAL = 42200003  # counter: cumulative tokens decoded this run
+EV_REQ_TTFT_US = 42200010  # per-request time-to-first-token (us), at retire
+EV_REQ_TPOT_US = 42200011  # per-request mean time-per-output-token (us)
+EV_REQ_ADMIT = 40000060  # value = request id + 1 when a request enters a slot
+EV_REQ_RETIRE = 40000061  # value = request id + 1 when it completes
+EV_SLOT_BASE = 40000100  # per-slot occupancy: code = base + slot,
+                         # value = request id + 1 (0 = slot empty)
+SERVE_CTR_LABELS = {
+    EV_QUEUE_DEPTH: "Serve queue depth (requests)",
+    EV_SLOTS_ACTIVE: "Serve slots active",
+    EV_TOKENS_TOTAL: "Serve tokens decoded (cumulative)",
+    EV_REQ_TTFT_US: "Request time-to-first-token (us)",
+    EV_REQ_TPOT_US: "Request mean time-per-output-token (us)",
 }
 
 # ---- sampler ----

@@ -36,6 +36,7 @@ _COMP_HEADER_RE = re.compile(
     r"^(?:ENTRY\s+)?%?(?P<name>[\w\.\-]+)\s+\(.*\)\s*->\s*.+\{\s*$"
 )
 _CONST_RE = re.compile(r"=\s*[su]\d+\[\]\s+constant\((\d+)\)")
+_KNOWN_TRIPS_RE = re.compile(r'known_trip_count[^}]*?"n"\s*:\s*"?(\d+)')
 _CALLED_RE = re.compile(r"(?:to_apply|calls|body|condition|branch_computations)=\{?%?([\w\.\-]+(?:,\s*%?[\w\.\-]+)*)\}?")
 _DOT_DIMS_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
 
@@ -99,7 +100,11 @@ def parse_module(text: str):
     return comps, entry
 
 
-def _trip_count(comps, cond_name: str) -> int:
+def _trip_count(comps, cond_name: str, while_line: str = "") -> int:
+    # newer XLA annotates the while instruction itself; trust it first
+    m = _KNOWN_TRIPS_RE.search(while_line)
+    if m:
+        return int(m.group(1))
     cond = comps.get(cond_name)
     if cond is None:
         return 1
@@ -132,7 +137,7 @@ def computation_multipliers(comps, entry: str) -> dict[str, float]:
                 cm = re.search(r"condition=%?([\w\.\-]+)", ins.line)
                 body = bm.group(1) if bm else None
                 cond = cm.group(1) if cm else None
-                trips = _trip_count(comps, cond) if cond else 1
+                trips = _trip_count(comps, cond, ins.line) if cond else 1
                 if body:
                     visit(body, m * trips)
                 if cond:
@@ -161,14 +166,62 @@ def _dims_product(type_str: str) -> float:
     return total
 
 
+def _operand_str(ins: Instr) -> str:
+    """The balanced-paren operand list of an instruction.  Operands may carry
+    explicit tuple types (``while((s32[], ...) %t)``) so a ``[^)]*`` regex
+    truncates — scan parens instead."""
+    i = ins.line.find(ins.op + "(")
+    if i < 0:
+        return ""
+    i += len(ins.op)
+    depth, j = 0, i
+    while j < len(ins.line):
+        ch = ins.line[j]
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        j += 1
+    return ins.line[i + 1: j]
+
+
+def _split_operands(s: str) -> list[str]:
+    """Split an operand list on top-level commas only (shape dims and tuple
+    types contain commas of their own)."""
+    parts, cur, depth = [], [], 0
+    for ch in s:
+        if ch in "([{":
+            depth += 1
+        elif ch in ")]}":
+            depth -= 1
+        if ch == "," and depth == 0:
+            parts.append("".join(cur))
+            cur = []
+        else:
+            cur.append(ch)
+    parts.append("".join(cur))
+    return [p.strip() for p in parts if p.strip()]
+
+
+def _operand_name(tok: str) -> str:
+    """Instruction name from one operand token.  Newer HLO writes operands
+    with an explicit type prefix (``f32[4,32]{1,0} %multiply.3``); older HLO
+    writes bare names (``%x``) — the name is always the last token."""
+    tok = re.sub(r"/\*.*?\*/", "", tok).strip()
+    if not tok:
+        return ""
+    return tok.split()[-1].lstrip("%")
+
+
 def _dot_flops(ins: Instr, shapes: dict[str, str]) -> float:
     result_elems = _dims_product(ins.type_str)
     mm = _DOT_DIMS_RE.search(ins.line)
-    # lhs operand name = first operand in parens
-    ops = re.search(r"\b" + re.escape(ins.op) + r"\(([^)]*)\)", ins.line)
+    operands = _split_operands(_operand_str(ins))
     contract = 1.0
-    if mm and ops:
-        lhs_name = ops.group(1).split(",")[0].strip().lstrip("%")
+    if mm and operands:
+        lhs_name = _operand_name(operands[0])
         lhs_type = shapes.get(lhs_name, "")
         sm = _SHAPE_RE.search(lhs_type)
         if sm and sm.group("dims"):
@@ -182,12 +235,10 @@ def _dot_flops(ins: Instr, shapes: dict[str, str]) -> float:
 
 def _conv_flops(ins: Instr, shapes: dict[str, str]) -> float:
     result_elems = _dims_product(ins.type_str)
-    ops = re.search(r"convolution\(([^)]*)\)", ins.line)
+    parts = [_operand_name(p) for p in _split_operands(_operand_str(ins))]
     rhs_elems = 1.0
-    if ops:
-        parts = [p.strip().lstrip("%") for p in ops.group(1).split(",")]
-        if len(parts) >= 2:
-            rhs_elems = _dims_product(shapes.get(parts[1], ""))
+    if len(parts) >= 2:
+        rhs_elems = _dims_product(shapes.get(parts[1], ""))
     fg = re.search(r"feature_group_count=(\d+)", ins.line)
     groups = int(fg.group(1)) if fg else 1
     # per output element: prod(kernel)/out_channels MACs (grouped conv aware)
@@ -200,15 +251,7 @@ def _conv_flops(ins: Instr, shapes: dict[str, str]) -> float:
 
 
 def _operand_names(ins: Instr) -> list[str]:
-    ops = re.search(r"\b" + re.escape(ins.op) + r"\(([^)]*)\)", ins.line)
-    if not ops:
-        return []
-    names = []
-    for p in ops.group(1).split(","):
-        p = p.strip()
-        p = re.sub(r"/\*.*?\*/", "", p).strip()  # strip /*index=N*/ comments
-        names.append(p.lstrip("%"))
-    return names
+    return [_operand_name(p) for p in _split_operands(_operand_str(ins))]
 
 
 def _operand_bytes(ins: Instr, shapes: dict[str, str]) -> float:
@@ -327,7 +370,7 @@ def analyze_hlo(text: str, total_devices: int | None = None) -> HloCost:
             if op == "while":
                 cm = re.search(r"condition=%?([\w\.\-]+)", ins.line)
                 if cm:
-                    trips[ins.name] = _trip_count(comps, cm.group(1))
+                    trips[ins.name] = _trip_count(comps, cm.group(1), ins.line)
             base = op[:-6] if op.endswith("-start") else op
             if base in COLLECTIVE_KINDS and not op.endswith("-done"):
                 parsed = parse_collectives(ins.line, total_devices)

@@ -14,6 +14,7 @@ Paraver traces in-language.
 """
 from __future__ import annotations
 
+import heapq
 import time as _time
 from pathlib import Path
 
@@ -40,8 +41,52 @@ def _cpu_offsets(trace: Trace) -> list[int]:
     return off
 
 
-def write_prv(trace: Trace, path: str | Path) -> dict[str, Path]:
-    """Write trace to <path>.prv/.pcf/.row; returns the three paths."""
+def _record_lines(states, events, comms, offsets) -> list[tuple[int, str]]:
+    """Format record arrays to sorted ``(time_key, prv_line)`` pairs."""
+
+    def cpu(task, thread):
+        return offsets[task] + thread + 1
+
+    lines: list[tuple[int, str]] = []
+    for r in states:
+        lines.append(
+            (int(r["begin"]),
+             f"1:{cpu(r['task'], r['thread'])}:1:{r['task'] + 1}:{r['thread'] + 1}:"
+             f"{r['begin']}:{r['end']}:{r['state']}")
+        )
+    for r in events:
+        lines.append(
+            (int(r["time"]),
+             f"2:{cpu(r['task'], r['thread'])}:1:{r['task'] + 1}:{r['thread'] + 1}:"
+             f"{r['time']}:{r['type']}:{r['value']}")
+        )
+    for r in comms:
+        lines.append(
+            (int(r["lsend"]),
+             f"3:{cpu(r['stask'], r['sthread'])}:1:{r['stask'] + 1}:{r['sthread'] + 1}:"
+             f"{r['lsend']}:{r['psend']}:"
+             f"{cpu(r['rtask'], r['rthread'])}:1:{r['rtask'] + 1}:{r['rthread'] + 1}:"
+             f"{r['lrecv']}:{r['precv']}:{r['size']}:{r['tag']}")
+        )
+    lines.sort(key=lambda x: x[0])
+    return lines
+
+
+def write_prv(trace: Trace, path: str | Path, *,
+              segments: list[str | Path] | None = None) -> dict[str, Path]:
+    """Write trace to <path>.prv/.pcf/.row; returns the three paths.
+
+    ``segments`` are mid-run flush files produced by ``Tracer.flush`` (npz
+    with states/events/comms arrays, timestamps already on the trace
+    timebase).  They are merged with the final trace's records by timestamp.
+    In the common case — segments' key ranges don't overlap, which holds
+    whenever no record is retro-injected across a flush boundary — segments
+    are written sequentially with only ONE segment's records in memory at a
+    time (peak footprint = one flush window, not the whole run); overlapping
+    segments fall back to a full k-way heap merge.  Resource-model metadata
+    (task/thread/node structure, t_end, event types) always comes from
+    ``trace``.
+    """
     path = Path(path)
     base = path.with_suffix("") if path.suffix == ".prv" else path
     prv, pcf, row = base.with_suffix(".prv"), base.with_suffix(".pcf"), base.with_suffix(".row")
@@ -63,40 +108,70 @@ def write_prv(trace: Trace, path: str | Path) -> dict[str, Path]:
     )
     header = f"#Paraver ({date}):{trace.t_end}:{nodes_str}:1:{appl_str}\n"
 
-    def cpu(task, thread):
-        return offsets[task] + thread + 1
-
-    lines: list[tuple[int, str]] = []
-    for r in trace.states:
-        lines.append(
-            (int(r["begin"]),
-             f"1:{cpu(r['task'], r['thread'])}:1:{r['task'] + 1}:{r['thread'] + 1}:"
-             f"{r['begin']}:{r['end']}:{r['state']}")
-        )
-    for r in trace.events:
-        lines.append(
-            (int(r["time"]),
-             f"2:{cpu(r['task'], r['thread'])}:1:{r['task'] + 1}:{r['thread'] + 1}:"
-             f"{r['time']}:{r['type']}:{r['value']}")
-        )
-    for r in trace.comms:
-        lines.append(
-            (int(r["lsend"]),
-             f"3:{cpu(r['stask'], r['sthread'])}:1:{r['stask'] + 1}:{r['sthread'] + 1}:"
-             f"{r['lsend']}:{r['psend']}:"
-             f"{cpu(r['rtask'], r['rthread'])}:1:{r['rtask'] + 1}:{r['rthread'] + 1}:"
-             f"{r['lrecv']}:{r['precv']}:{r['size']}:{r['tag']}")
-        )
-    lines.sort(key=lambda x: x[0])
+    final_lines = _record_lines(trace.states, trace.events, trace.comms, offsets)
     with open(prv, "w") as f:
         f.write(header)
-        f.write("\n".join(s for _, s in lines))
-        if lines:
-            f.write("\n")
+        if segments:
+            _write_merged(f, list(segments), final_lines, offsets)
+        else:
+            for _, s in final_lines:
+                f.write(s)
+                f.write("\n")
 
     _write_pcf(trace, pcf)
     _write_row(trace, row, offsets)
     return {"prv": prv, "pcf": pcf, "row": row}
+
+
+def _segment_lines(seg_path, offsets) -> list[tuple[int, str]]:
+    with np.load(seg_path) as z:
+        return _record_lines(z["states"], z["events"], z["comms"], offsets)
+
+
+def _segment_key_range(seg_path) -> tuple[int, int] | None:
+    with np.load(seg_path) as z:
+        if "key_range" in z.files:  # stamped by Tracer.flush
+            lo, hi = z["key_range"]
+            return int(lo), int(hi)
+        keys = [z[n][f] for n, f in (("states", "begin"), ("events", "time"),
+                                     ("comms", "lsend")) if len(z[n])]
+        if not keys:
+            return None
+        return (min(int(k.min()) for k in keys), max(int(k.max()) for k in keys))
+
+
+def _write_merged(f, segments, final_lines, offsets):
+    """Merge flushed segments with the final trace's lines into ``f``.
+
+    Segments are internally sorted; when their key ranges are also pairwise
+    ordered (no retro-injected records across flush boundaries) each segment
+    is loaded, interleaved with the final lines up to its max key, written,
+    and released — one segment in memory at a time.  Otherwise fall back to
+    a full heap merge of every stream.
+    """
+    ranges = [_segment_key_range(s) for s in segments]
+    live = [(s, r) for s, r in zip(segments, ranges) if r is not None]
+    sequential = all(live[i][1][1] <= live[i + 1][1][0]
+                     for i in range(len(live) - 1))
+    if not sequential:
+        streams = [_segment_lines(s, offsets) for s, _ in live] + [final_lines]
+        for _, line in heapq.merge(*streams, key=lambda x: x[0]):
+            f.write(line)
+            f.write("\n")
+        return
+    fi = 0
+    for seg, (_, hi) in live:
+        cut = fi
+        while cut < len(final_lines) and final_lines[cut][0] <= hi:
+            cut += 1
+        for _, line in heapq.merge(_segment_lines(seg, offsets),
+                                   final_lines[fi:cut], key=lambda x: x[0]):
+            f.write(line)
+            f.write("\n")
+        fi = cut
+    for _, line in final_lines[fi:]:
+        f.write(line)
+        f.write("\n")
 
 
 def _write_pcf(trace: Trace, path: Path):

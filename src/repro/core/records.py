@@ -66,6 +66,15 @@ class RecordBuffer:
     def view(self) -> np.ndarray:
         return self._arr[: self._n]
 
+    def take(self) -> np.ndarray:
+        """Copy out all completed records and reset the buffer (capacity is
+        kept).  Single-drainer discipline: call from the thread that owns the
+        buffer, or between iterations when no appender is running."""
+        n = self._n
+        out = self._arr[:n].copy()
+        self._n = 0
+        return out
+
 
 @dataclasses.dataclass
 class EventType:

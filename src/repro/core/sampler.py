@@ -26,6 +26,9 @@ class StackSampler:
         self.jitter_s = min(jitter_s, period_s * 0.9)
         self.target = target_thread_ident or threading.main_thread().ident
         self._stop = threading.Event()
+        self._paused = threading.Event()
+        self._parked = threading.Event()
+        self._interrupt = threading.Event()  # cuts the inter-sample sleep short
         self._thread: threading.Thread | None = None
         self.samples = 0
 
@@ -37,16 +40,40 @@ class StackSampler:
 
     def stop(self):
         self._stop.set()
+        self._paused.clear()
+        self._interrupt.set()
         if self._thread is not None:
             self._thread.join(timeout=2.0)
+
+    def pause(self):
+        """Park the sampler thread (no emits) until :meth:`resume`.  Used by
+        ``Tracer.flush`` so the buffer drain never races a sample append.
+        The inter-sample sleep is interrupted, so the park acknowledgement
+        arrives promptly regardless of ``period_s``."""
+        if self._thread is None or not self._thread.is_alive():
+            return
+        self._paused.set()
+        self._interrupt.set()
+        self._parked.wait(timeout=2.0)
+
+    def resume(self):
+        self._parked.clear()
+        self._paused.clear()
 
     def _run(self):
         rng = random.Random(0xE47)
         while not self._stop.is_set():
             delay = self.period_s + rng.uniform(-self.jitter_s, self.jitter_s)
-            self._stop.wait(delay)
+            self._interrupt.wait(delay)
+            self._interrupt.clear()
             if self._stop.is_set():
                 break
+            if self._paused.is_set():
+                self._parked.set()
+                while self._paused.is_set() and not self._stop.is_set():
+                    time.sleep(0.0005)
+                self._parked.clear()
+                continue
             frame = sys._current_frames().get(self.target)
             if frame is None:
                 continue

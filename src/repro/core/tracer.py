@@ -20,6 +20,7 @@ import contextlib
 import functools
 import threading
 import time
+from pathlib import Path
 from typing import Callable
 
 import numpy as np
@@ -63,15 +64,18 @@ class Tracer:
         self._sampler = None
         self._extra_tasks: set[int] = set()
         self._extra_threads: dict[int, int] = {}  # task -> max thread id seen
+        self.segments: list[Path] = []  # streamed-out record segments
         self._register_builtin_types()
 
     # ------------------------------------------------------------------
     # lifecycle
     # ------------------------------------------------------------------
-    def init(self, mode: str | None = None):
+    def init(self, mode: str | None = None, *, t0_ns: int | None = None):
+        """``t0_ns`` pins the timebase origin (deterministic replay/tests);
+        default is the current monotonic clock."""
         if mode is not None:
             self.pm.set_mode(mode)
-        self.t0 = _now()
+        self.t0 = _now() if t0_ns is None else int(t0_ns)
         self._active = True
         self._open_state(ev.STATE_RUNNING)
         # anchor the base state exactly at t0 so states partition the
@@ -79,15 +83,71 @@ class Tracer:
         self._tb().open_begin = self.t0
         return self
 
-    def finish(self) -> Trace:
+    def finish(self, *, t_end_ns: int | None = None) -> Trace:
         if not self._active:
             raise RuntimeError("tracer not active")
         if self._sampler is not None:
             self._sampler.stop()
             self._sampler = None
-        self.t_end = _now()
+        self.t_end = _now() if t_end_ns is None else int(t_end_ns)
         self._active = False
         return self._build_trace()
+
+    def flush(self, base: str | Path, *, emit_marker: bool = True) -> Path | None:
+        """Segment full :class:`RecordBuffer`s to disk mid-run.
+
+        Drains every completed record into ``<base>.seg####.npz`` (timestamps
+        already normalized to the trace timebase) and resets the buffers, so a
+        long-running serve loop never holds the whole trace in RAM.  Per the
+        paper's Extrae discipline the I/O window is bracketed by ``EV_FLUSH``
+        (begin lands in the drained segment, end opens the next one); pass
+        ``emit_marker=False`` for marker-free segmentation (exact equivalence
+        with an unflushed run).  The currently-open state intervals are NOT
+        drained — they complete in a later segment or at ``finish()``.
+
+        Single-drainer discipline: call between loop iterations from the
+        thread driving the run.  The built-in stack sampler is paused for the
+        duration of the drain; any OTHER thread emitting concurrently must be
+        quiesced by the caller — a record appended while its buffer is being
+        drained can be lost.  Returns the segment path, or None if every
+        buffer was empty.
+        """
+        if not self._active:
+            raise RuntimeError("tracer not active")
+        if emit_marker:
+            self.emit(ev.EV_FLUSH, 1)
+        sampler = self._sampler
+        if sampler is not None:
+            sampler.pause()
+        try:
+            with self._lock:
+                buffers = list(self._buffers.items())
+            states = [tb.states.take() for _, tb in buffers]
+            events = [tb.events.take() for _, tb in buffers]
+            comms = [tb.comms.take() for _, tb in buffers]
+        finally:
+            if sampler is not None:
+                sampler.resume()
+        st = np.concatenate(states) if states else np.empty(0, STATE_DTYPE)
+        evs = np.concatenate(events) if events else np.empty(0, EVENT_DTYPE)
+        cm = np.concatenate(comms) if comms else np.empty(0, COMM_DTYPE)
+        if not (len(st) or len(evs) or len(cm)):
+            return None
+        for arr, fields in ((st, ("begin", "end")), (evs, ("time",)),
+                            (cm, ("lsend", "psend", "lrecv", "precv"))):
+            for f in fields:
+                arr[f] -= self.t0
+        keys = [a[f] for a, f in ((st, "begin"), (evs, "time"), (cm, "lsend"))
+                if len(a)]
+        key_range = np.array([min(int(k.min()) for k in keys),
+                              max(int(k.max()) for k in keys)], np.int64)
+        seg = Path(f"{base}.seg{len(self.segments):04d}.npz")
+        seg.parent.mkdir(parents=True, exist_ok=True)
+        np.savez(seg, states=st, events=evs, comms=cm, key_range=key_range)
+        self.segments.append(seg)
+        if emit_marker:
+            self.emit(ev.EV_FLUSH, 0)
+        return seg
 
     @property
     def active(self) -> bool:

@@ -3,10 +3,12 @@
 A FUNCTION, not a module-level constant — importing this module never
 touches jax device state (the LD_PRELOAD-ordering lesson from the paper,
 section 3.1, transposed to JAX: device count locks on first backend init).
+Mesh construction itself goes through :mod:`repro.compat` so the shape/axis
+format tracks whatever the installed jax accepts.
 """
 from __future__ import annotations
 
-import jax
+from repro.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -14,22 +16,14 @@ def make_production_mesh(*, multi_pod: bool = False):
     (DCN-crossing data-parallel) axis."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_debug_mesh(data: int = 2, model: int = 4, pod: int | None = None):
     """Small mesh for subprocess tests (8 fake devices)."""
     if pod:
-        return jax.make_mesh(
-            (pod, data, model), ("pod", "data", "model"),
-            axis_types=(jax.sharding.AxisType.Auto,) * 3,
-        )
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+        return make_mesh((pod, data, model), ("pod", "data", "model"))
+    return make_mesh((data, model), ("data", "model"))
 
 
 def mesh_desc(mesh) -> str:

@@ -1,7 +1,13 @@
 """Serving launcher CLI.
 
     PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x22b \\
-        --requests 16 --prompt-len 32 --gen 64 --trace
+        --requests 16 --prompt-len 32 --gen 64 --trace --flush-every 16
+
+Default mode is the continuous-batching engine (``--mode continuous``):
+requests are queued with staggered prompt lengths and flow through a
+fixed slot pool; ``--mode static`` keeps the legacy rectangular-batch
+path.  With ``--trace --flush-every N`` the trace is streamed to disk
+mid-run and segment-merged into the final ``.prv``.
 """
 from __future__ import annotations
 
@@ -15,48 +21,80 @@ import numpy as np
 from repro import core as xtrace
 from repro.configs import all_arch_names, get_config, reduced
 from repro.models.model import build_model
-from repro.serve.engine import ServeEngine
+from repro.serve.engine import ContinuousServeEngine, ServeEngine
+
+
+def _request_extras(cfg, rng, n):
+    extras = {}
+    if cfg.family == "vlm":
+        extras["patch_embeds"] = rng.standard_normal(
+            (n, cfg.num_patches, cfg.vision_dim)).astype(np.float32)
+    if cfg.family == "encdec":
+        extras["frames"] = rng.standard_normal(
+            (n, cfg.encoder_seq, cfg.d_model)).astype(np.float32)
+    return extras
 
 
 def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--arch", default="granite-8b", choices=all_arch_names())
+    p.add_argument("--mode", default="continuous", choices=["continuous", "static"])
     p.add_argument("--requests", type=int, default=8)
+    p.add_argument("--slots", type=int, default=4)
     p.add_argument("--prompt-len", type=int, default=32)
     p.add_argument("--gen", type=int, default=32)
     p.add_argument("--temperature", type=float, default=0.0)
     p.add_argument("--trace", action="store_true")
+    p.add_argument("--flush-every", type=int, default=0,
+                   help="stream the trace to disk every N decode iterations")
     p.add_argument("--out", default="runs/serve")
     args = p.parse_args(argv)
+    if args.flush_every and not args.trace:
+        p.error("--flush-every streams the trace and requires --trace")
 
     cfg = reduced(get_config(args.arch))
-    if cfg.family == "encdec":
-        print("[serve] enc-dec serving requires frames input; using decoder-only path")
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
+    out = pathlib.Path(args.out)
 
     tracer = xtrace.init(f"serve-{args.arch}") if args.trace else None
-    engine = ServeEngine(cfg, params, max_len=args.prompt_len + args.gen,
-                         tracer=tracer)
-    prompts = np.random.default_rng(0).integers(
+    rng = np.random.default_rng(0)
+    prompts = rng.integers(
         0, cfg.vocab_size, (args.requests, args.prompt_len)).astype(np.int32)
-    extras = {}
-    if cfg.family == "vlm":
-        extras["patch_embeds"] = np.random.default_rng(1).standard_normal(
-            (args.requests, cfg.num_patches, cfg.vision_dim)).astype(np.float32)
-    if cfg.family == "encdec":
-        extras["frames"] = np.random.default_rng(1).standard_normal(
-            (args.requests, cfg.encoder_seq, cfg.d_model)).astype(np.float32)
+    extras = _request_extras(cfg, np.random.default_rng(1), args.requests)
+    max_len = args.prompt_len + cfg.num_patches + args.gen
 
-    stats = engine.throughput_stats(prompts, num_tokens=args.gen, extras=extras)
-    print(f"[serve] {args.arch}: {stats['tokens']} tokens in {stats['seconds']:.2f}s "
-          f"= {stats['tok_per_s']:.1f} tok/s (CPU smoke scale)")
+    if args.mode == "static":
+        engine = ServeEngine(cfg, params, max_len=max_len, tracer=tracer)
+        stats = engine.throughput_stats(prompts, num_tokens=args.gen,
+                                        extras=extras, temperature=args.temperature)
+    else:
+        if args.flush_every:
+            out.mkdir(parents=True, exist_ok=True)
+        engine = ContinuousServeEngine(
+            cfg, params, num_slots=min(args.slots, args.requests), max_len=max_len,
+            tracer=tracer, temperature=args.temperature,
+            flush_every=args.flush_every,
+            flush_base=out / "serve" if args.flush_every else None,
+        )
+        # staggered prompt lengths exercise variable-length admission
+        for i in range(args.requests):
+            plen = max(1, args.prompt_len - (i % 4))
+            ex = {k: v[i] for k, v in extras.items()}
+            engine.submit(prompts[i, :plen], args.gen, extras=ex)
+        engine.run()
+        stats = engine.throughput_stats()
+
+    print(f"[serve] {args.arch} mode={args.mode}: {stats['tokens']} tokens in "
+          f"{stats['seconds']:.2f}s = {stats['tok_per_s']:.1f} tok/s "
+          f"(host syncs: {stats.get('host_syncs', '?')}; CPU smoke scale)")
     if tracer:
+        segments = list(tracer.segments)
         trace = xtrace.finish()
-        out = pathlib.Path(args.out)
         out.mkdir(parents=True, exist_ok=True)
-        paths = xtrace.write_prv(trace, out / "serve")
-        print(f"[serve] trace: {paths['prv']}  ({trace.summary()})")
+        paths = xtrace.write_prv(trace, out / "serve", segments=segments)
+        seg_note = f", merged {len(segments)} flushed segments" if segments else ""
+        print(f"[serve] trace: {paths['prv']}  ({trace.summary()}{seg_note})")
     return 0
 
 

@@ -53,25 +53,27 @@ def _out_proj(params, o, accum=jnp.float32):
 
 
 def _mask(q_pos, kv_pos, *, causal: bool, window: int | None, kv_valid=None):
-    """Boolean [Sq, Skv] mask from position vectors."""
-    qp = jnp.asarray(q_pos)[:, None]
-    kp = jnp.asarray(kv_pos)[None, :]
-    m = jnp.ones((qp.shape[0], kp.shape[1]), bool)
-    if causal:
-        m &= kp <= qp
+    """Boolean mask from position vectors: [Sq, Skv] for shared positions
+    ([Sq]/[Skv] inputs) or [B, Sq, Skv] for per-example positions
+    ([B, Sq]/[B, Skv] inputs — the batched-index decode path)."""
+    qp = jnp.asarray(q_pos)[..., :, None]
+    kp = jnp.asarray(kv_pos)[..., None, :]
+    m = (kp <= qp) if causal else jnp.broadcast_to(
+        jnp.ones((), bool), jnp.broadcast_shapes(qp.shape, kp.shape))
     if window is not None:
         m &= kp > qp - window
     if kv_valid is not None:
-        m &= jnp.asarray(kv_valid)[None, :]
+        m &= jnp.asarray(kv_valid)[..., None, :]
     return m
 
 
 def _sdpa_naive(q, k, v, mask, scale):
-    """q: [B,Sq,Kh,G,D]; k/v: [B,Skv,Kh,D]; mask: [Sq,Skv]."""
+    """q: [B,Sq,Kh,G,D]; k/v: [B,Skv,Kh,D]; mask: [Sq,Skv] or [B,Sq,Skv]."""
     scores = jnp.einsum(
         "bqkgd,bskd->bkgqs", q, k, preferred_element_type=jnp.float32
     ) * scale
-    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    m = mask if mask.ndim == 3 else mask[None]  # -> [B|1, Sq, Skv]
+    scores = jnp.where(m[:, None, None], scores, NEG_INF)
     p = jax.nn.softmax(scores.astype(jnp.float32), axis=-1)
     o = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(v.dtype), v,
                    preferred_element_type=jnp.float32).astype(v.dtype)
@@ -304,23 +306,39 @@ def _build_cache(k, v, window, cache_len=None):
 def _decode_attend(q, k_new, v_new, cache, index, window):
     """Single-token decode against a full or ring cache.
 
-    index: int32 scalar, absolute position of the incoming token.
+    index: int32 absolute position of the incoming token — a scalar (whole
+    batch in lockstep) or a [B] vector (continuous batching: every slot at
+    its own depth; cache writes become per-example one-hot selects and the
+    position masks gain a batch dim).
     """
     kc, vc = cache["k"], cache["v"]
     C = kc.shape[1]
-    slot = index % C if window is not None else index
-    kc = jax.lax.dynamic_update_slice_in_dim(kc, k_new.astype(kc.dtype), slot, axis=1)
-    vc = jax.lax.dynamic_update_slice_in_dim(vc, v_new.astype(vc.dtype), slot, axis=1)
-
+    index = jnp.asarray(index, jnp.int32)
     slots = jnp.arange(C, dtype=jnp.int32)
-    if window is not None:
-        # position stored in slot s: greatest p <= index with p % C == s
-        kv_pos = index - ((index - slots) % C)
-        kv_valid = kv_pos >= 0
+    if index.ndim == 0:
+        slot = index % C if window is not None else index
+        kc = jax.lax.dynamic_update_slice_in_dim(kc, k_new.astype(kc.dtype), slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(vc, v_new.astype(vc.dtype), slot, axis=1)
+        if window is not None:
+            # position stored in slot s: greatest p <= index with p % C == s
+            kv_pos = index - ((index - slots) % C)
+            kv_valid = kv_pos >= 0
+        else:
+            kv_pos = slots
+            kv_valid = slots <= index
+        q_pos = jnp.full((q.shape[1],), index, jnp.int32)
     else:
-        kv_pos = slots
-        kv_valid = slots <= index
-    q_pos = jnp.full((q.shape[1],), index, jnp.int32)
+        slot = index % C if window is not None else index  # [B]
+        hit = slots[None, :] == slot[:, None]  # [B, C] one-hot write mask
+        kc = jnp.where(hit[..., None, None], k_new.astype(kc.dtype), kc)
+        vc = jnp.where(hit[..., None, None], v_new.astype(vc.dtype), vc)
+        if window is not None:
+            kv_pos = index[:, None] - ((index[:, None] - slots[None, :]) % C)
+            kv_valid = kv_pos >= 0
+        else:
+            kv_pos = jnp.broadcast_to(slots[None, :], (index.shape[0], C))
+            kv_valid = slots[None, :] <= index[:, None]
+        q_pos = index[:, None]  # [B, Sq=1]
     o = multi_head_attention(
         q, kc, vc, q_pos=q_pos, kv_pos=kv_pos, causal=True,
         window=window, kv_valid=kv_valid, block_kv=0,

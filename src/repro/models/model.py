@@ -145,11 +145,13 @@ class DecoderLM(_Base):
         return caches, logits[:, -1]
 
     def decode_step(self, params, caches, tokens, index):
-        """tokens: [B] int32; index: scalar int32 absolute position."""
+        """tokens: [B] int32; index: int32 absolute position — scalar
+        (lockstep batch) or [B] (per-slot positions, continuous batching)."""
         cfg = self.cfg
         x = embed_tokens(params["embed"], tokens[:, None], self.dtype,
                          method=cfg.decode_embed_lookup)
-        positions = jnp.full((1,), index, jnp.int32)
+        index = jnp.asarray(index, jnp.int32)
+        positions = index[:, None] if index.ndim else jnp.full((1,), index, jnp.int32)
         x, new_caches, _ = tf_mod.apply_stack(
             params["stack"], x, cfg, positions=positions, caches=caches,
             index=index, mode="decode",
@@ -232,7 +234,8 @@ class EncDecLM(_Base):
 
     def decode_step(self, params, caches, tokens, index):
         cfg = self.cfg
-        positions = jnp.full((1,), index, jnp.int32)
+        index = jnp.asarray(index, jnp.int32)
+        positions = index[:, None] if index.ndim else jnp.full((1,), index, jnp.int32)
         x = encdec_mod.decoder_embed(params, tokens[:, None], positions, cfg, self.dtype)
         x, new_caches = encdec_mod.decode_stack(
             params, x, cfg, positions=positions, caches=caches, index=index,

@@ -1,0 +1,10 @@
+"""Serving stack: continuous-batching engine over a fixed-shape slot pool.
+
+    queue.py      — Request lifecycle + FIFO admission queue
+    scheduler.py  — slot pool bookkeeping, every decision traced
+    engine.py     — ContinuousServeEngine (slot-pooled caches, on-device
+                    sampling) + the legacy fixed-batch ServeEngine
+"""
+from repro.serve.engine import ContinuousServeEngine, ServeEngine  # noqa: F401
+from repro.serve.queue import Request, RequestQueue, RequestState  # noqa: F401
+from repro.serve.scheduler import Scheduler  # noqa: F401

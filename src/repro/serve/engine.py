@@ -1,12 +1,33 @@
-"""Batched serving engine: prefill + decode with KV/SSM caches, traced.
+"""Serving engines: continuous batching over a slot pool + legacy fixed batch.
 
-``generate`` runs a continuous decode loop over a fixed batch of requests
-(static-shape batching — the TPU-friendly discipline), emitting prefill /
-decode phase events and per-token user events through the tracer so served
-traffic is analyzable with exactly the same Paraver tooling as training.
+:class:`ContinuousServeEngine` (the production path) admits variable-length
+requests from a :class:`~repro.serve.queue.RequestQueue` into a fixed pool of
+``num_slots`` decode slots (static shapes throughout — cache buffers are
+allocated once and requests move through them, the TPU-friendly discipline).
+Each engine iteration interleaves:
+
+  1. *admission* — the scheduler pops queued requests into free slots; each
+     admitted request is prefilled at its own prompt length and its caches
+     are scattered into the pool at the slot index;
+  2. *decode* — ONE fused jit call advances every slot a token: a per-slot
+     ``vmap`` of the model's single-token decode (each slot carries its own
+     absolute position) plus on-device sampling, so the host loop performs a
+     single device sync per **iteration** (the batched token fetch), not per
+     token — the seed engine's loop performed two per token;
+  3. *retirement* — finished requests free their slots; per-request TTFT /
+     TPOT counters are stamped into the trace.
+
+Every scheduler decision emits tracer events (queue depth, slot occupancy,
+per-slot occupant, admit/retire markers) so served traffic is analyzable in
+Paraver exactly like training, and ``flush_every`` streams full record
+buffers to disk mid-run via ``Tracer.flush`` (EV_FLUSH-bracketed).
+
+:class:`ServeEngine` keeps the original fixed-batch ``generate`` API (all
+requests same length, lockstep decode) with sampling fused on device.
 """
 from __future__ import annotations
 
+import contextlib
 import time
 
 import jax
@@ -17,11 +38,315 @@ from repro.configs.base import ModelConfig
 from repro.core import events as ev
 from repro.core.tracer import Tracer
 from repro.models.model import build_model
+from repro.serve.queue import Request, RequestQueue, _now_ns
+from repro.serve.scheduler import Scheduler
 
-EV_TOKENS_DECODED = 84_001  # user event: tokens decoded so far
+EV_TOKENS_DECODED = 84_001  # user event: tokens decoded so far (one run)
+
+
+def _sample_logits(logits, key, temperature: float, vocab: int):
+    """Greedy or temperature sampling over the unpadded vocab, on device."""
+    lg = logits[..., :vocab]
+    if temperature <= 0.0:
+        return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, lg / temperature, axis=-1).astype(jnp.int32)
+
+
+class ContinuousServeEngine:
+    """Continuous-batching engine over a fixed-shape slot pool."""
+
+    def __init__(self, cfg: ModelConfig, params, *, num_slots: int, max_len: int,
+                 tracer: Tracer | None = None, temperature: float = 0.0,
+                 seed: int = 0, max_prefills_per_iter: int = 1,
+                 max_decode_burst: int = 8, flush_every: int = 0,
+                 flush_base=None):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.params = params
+        self.num_slots = int(num_slots)
+        self.capacity = int(max_len)
+        self.tracer = tracer
+        self.temperature = float(temperature)  # fixed per engine (jit-traced)
+        self.max_decode_burst = max(1, int(max_decode_burst))
+        self.flush_every = int(flush_every)
+        self.flush_base = flush_base
+        self._since_flush = 0  # decode iterations since the last trace flush
+        if flush_every and flush_base is None:
+            raise ValueError("flush_every requires flush_base")
+        if tracer is not None:
+            tracer.register(EV_TOKENS_DECODED, "Tokens decoded")
+            tracer.register(ev.EV_TOKENS_TOTAL,
+                            ev.SERVE_CTR_LABELS[ev.EV_TOKENS_TOTAL])
+            tracer.register(ev.EV_REQ_TTFT_US, ev.SERVE_CTR_LABELS[ev.EV_REQ_TTFT_US])
+            tracer.register(ev.EV_REQ_TPOT_US, ev.SERVE_CTR_LABELS[ev.EV_REQ_TPOT_US])
+
+        self.queue = RequestQueue()
+        self.scheduler = Scheduler(num_slots, self.queue, tracer=tracer,
+                                   max_prefills_per_iter=max_prefills_per_iter)
+
+        # --- device state: slot-pooled caches + per-slot token/position ---
+        specs = self.model.cache_specs(self.num_slots, self.capacity)
+        self._caches = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
+        self._tok = jnp.zeros((self.num_slots,), jnp.int32)
+        self._idx = jnp.zeros((self.num_slots,), jnp.int32)
+        self._active = np.zeros((self.num_slots,), bool)  # host-side mirror
+        self._active_dev = jnp.asarray(self._active)
+        self._active_dirty = False
+        self._key = jax.random.PRNGKey(seed)
+        self._dispatches = 0  # burst dispatch counter (drives the RNG stream)
+
+        self._prefill = jax.jit(self._prefill_impl)
+        # tok/idx buffers are NOT donated: the pipelined fetch of the previous
+        # burst's tokens may still reference them
+        self._admit = jax.jit(self._admit_impl, donate_argnums=(0,))
+        self._burst = jax.jit(self._burst_impl, donate_argnums=(1,),  # caches
+                              static_argnames=("steps",))
+
+        # --- run statistics ---
+        self.stats = {"iterations": 0, "prefills": 0, "tokens_decoded": 0,
+                      "host_syncs": 0, "decode_syncs": 0, "seconds": 0.0}
+
+    # ------------------------------------------------------------------
+    # jitted kernels
+    # ------------------------------------------------------------------
+    def _prefill_impl(self, params, batch, key):
+        """Prefill a group of same-shape requests ([k, L] tokens) ->
+        (caches for k slots, first sampled tokens [k]).  Sampling happens
+        on device."""
+        caches, last_logits = self.model.prefill(params, batch,
+                                                 max_len=self.capacity)
+        tok = _sample_logits(last_logits, key, self.temperature,
+                             self.cfg.vocab_size)
+        return caches, tok
+
+    def _admit_impl(self, pool, new, tok_buf, idx_buf, slots, first_toks, start_idxs):
+        """Scatter a prefilled group's caches into slots ``slots`` of the pool
+        and seed their token/position registers.  Cache leaves are
+        [layers, batch, ...] — batch is axis 1."""
+        pool = jax.tree.map(
+            lambda pl, nw: pl.at[:, slots].set(nw.astype(pl.dtype)),
+            pool, new,
+        )
+        return (pool, tok_buf.at[slots].set(first_toks),
+                idx_buf.at[slots].set(start_idxs))
+
+    def _burst_impl(self, params, caches, tok, idx, active, key, *, steps):
+        """``steps`` decode iterations over the whole pool in ONE executable
+        (amortizes the per-dispatch overhead): each step is a batched decode
+        with per-slot absolute positions (the model's vector-index path) +
+        on-device sampling; inactive slots are frozen (their token/index
+        don't advance).  Returns the [steps, num_slots] token block for a
+        single host fetch."""
+
+        def body(carry, k):
+            caches, tok, idx = carry
+            new_caches, logits = self.model.decode_step(params, caches, tok, idx)
+            sub = key if self.temperature <= 0.0 else jax.random.fold_in(key, k)
+            nxt = _sample_logits(logits, sub, self.temperature, self.cfg.vocab_size)
+            tok = jnp.where(active, nxt, tok)
+            idx = jnp.where(active, idx + 1, idx)
+            return (new_caches, tok, idx), tok
+
+        (caches, tok, idx), toks = jax.lax.scan(
+            body, (caches, tok, idx), jnp.arange(steps))
+        return caches, tok, idx, toks
+
+    # ------------------------------------------------------------------
+    # request intake
+    # ------------------------------------------------------------------
+    def _start_index(self, req: Request) -> int:
+        return req.prompt_len + (self.cfg.num_patches if self.cfg.family == "vlm" else 0)
+
+    def submit(self, prompt, max_new_tokens: int, *, extras: dict | None = None,
+               arrival_ns: int | None = None) -> Request:
+        # reject BEFORE enqueueing: a rejected request must not linger in the
+        # queue and get served anyway
+        if self.cfg.attention_window is None:
+            plen = int(np.asarray(prompt).shape[0])
+            patches = self.cfg.num_patches if self.cfg.family == "vlm" else 0
+            need = plen + patches + int(max_new_tokens) - 1
+            if need > self.capacity:
+                raise ValueError(
+                    f"prompt {plen} + {max_new_tokens} new tokens needs cache "
+                    f"capacity {need} > {self.capacity}")
+        req = self.queue.submit(prompt, max_new_tokens, extras=extras,
+                                arrival_ns=arrival_ns)
+        if self.tracer is not None:
+            self.tracer.emit(ev.EV_QUEUE_DEPTH, len(self.queue))
+        return req
+
+    # ------------------------------------------------------------------
+    # serving loop
+    # ------------------------------------------------------------------
+    def _prefill_groups(self, admissions: list[tuple[int, Request]]):
+        """Group same-shape admissions so they prefill as ONE batched jit
+        call (a length bucket); mixed lengths degrade to singleton groups."""
+        groups: dict[tuple, list[tuple[int, Request]]] = {}
+        for slot, req in admissions:
+            sig = (req.prompt_len,
+                   tuple(sorted((k, v.shape) for k, v in req.extras.items())))
+            groups.setdefault(sig, []).append((slot, req))
+        return list(groups.values())
+
+    def _do_prefill(self, members: list[tuple[int, Request]]):
+        tr = self.tracer
+        reqs = [r for _, r in members]
+        slots = [s for s, _ in members]
+        batch = {"tokens": jnp.asarray(np.stack([r.prompt for r in reqs]), jnp.int32)}
+        for k in reqs[0].extras:
+            batch[k] = jnp.asarray(np.stack([r.extras[k] for r in reqs]))
+        key = jax.random.fold_in(self._key, (1 << 20) + reqs[0].rid)
+        t_admit = _now_ns()
+        with (tr.phase(ev.PHASE_PREFILL) if tr else contextlib.nullcontext()), \
+                (tr.user_function(name="prefill") if tr else contextlib.nullcontext()):
+            new_caches, tok1 = self._prefill(self.params, batch, key)
+        self._caches, self._tok, self._idx = self._admit(
+            self._caches, new_caches, self._tok, self._idx,
+            jnp.asarray(slots, jnp.int32), tok1,
+            jnp.asarray([self._start_index(r) for r in reqs], jnp.int32),
+        )
+        firsts = np.asarray(tok1)  # TTFT: first tokens materialized here
+        self.stats["host_syncs"] += 1
+        self.stats["prefills"] += len(reqs)
+        t_first = _now_ns()
+        for (slot, req), first in zip(members, firsts):
+            req.t_admit_ns = t_admit
+            req.t_first_ns = t_first
+            req.tokens.append(int(first))
+            req.scheduled = 1
+            self.stats["tokens_decoded"] += 1
+            self._active[slot] = True
+            self._active_dirty = True
+            if len(req.tokens) >= req.max_new_tokens:
+                self._finish(req)
+
+    def _finish(self, req: Request):
+        req.t_done_ns = _now_ns()
+        self._active[req.slot] = False
+        self._active_dirty = True
+        req.extras.clear()  # prefill inputs (frames/patches) are dead weight now
+        if self.tracer is not None:
+            self.tracer.emit(ev.EV_REQ_TTFT_US, max(req.ttft_ns() // 1000, 0))
+            self.tracer.emit(ev.EV_REQ_TPOT_US, req.tpot_ns() // 1000)
+        self.scheduler.retire(req)
+
+    def _process_tokens(self, toks_dev, pairs):
+        """Record one decode burst's [steps, num_slots] token block.  Called
+        while the NEXT burst computes on device, so the blocking fetch
+        overlaps compute and host bookkeeping costs nothing on the critical
+        path."""
+        tr = self.tracer
+        toks = np.asarray(toks_dev)  # the ONE host sync of the burst
+        self.stats["host_syncs"] += 1
+        self.stats["decode_syncs"] += 1
+        for row in toks:
+            for slot, req in pairs:
+                if req.done or len(req.tokens) >= req.max_new_tokens:
+                    continue
+                req.tokens.append(int(row[slot]))
+                self.stats["tokens_decoded"] += 1
+                if len(req.tokens) >= req.max_new_tokens:
+                    self._finish(req)
+        self.stats["iterations"] += len(toks)
+        self._since_flush += len(toks)
+        if tr:
+            tr.emit(EV_TOKENS_DECODED, self.stats["tokens_decoded"])
+            tr.emit(ev.EV_TOKENS_TOTAL, self.stats["tokens_decoded"])
+            tr.emit(ev.EV_QUEUE_DEPTH, len(self.queue))
+            if self.flush_every and self._since_flush >= self.flush_every:
+                tr.flush(self.flush_base)
+                self._since_flush = 0
+
+    def run(self) -> dict[int, np.ndarray]:
+        """Serve until queue and slots drain.  Returns {rid: [new_tokens]}
+        for the requests completed by THIS call (the engine is reusable:
+        later waves don't re-report earlier ones).
+
+        The loop is pipelined and bursted: up to ``max_decode_burst`` decode
+        iterations run in one executable (the burst length is clamped to the
+        smallest remaining token budget among active slots, so no slot
+        decodes past its request), and burst i is dispatched before burst
+        i-1's tokens are fetched — the fetch blocks only on whatever device
+        time remains, and retirement/admission decisions lag the device by
+        one burst."""
+        tr = self.tracer
+        done0 = len(self.scheduler.completed)
+        pending = None  # ([steps, slots] token block, [(slot, req)]) in flight
+        t_run0 = time.perf_counter()
+        while pending is not None or not self.scheduler.drained():
+            if self.queue and tr:
+                with tr.phase(ev.PHASE_ADMIT):
+                    admissions = self.scheduler.admissions()
+            else:
+                admissions = self.scheduler.admissions()
+            for members in self._prefill_groups(admissions):
+                self._do_prefill(members)
+            dispatched = None
+            pairs = [(s, r) for s, r in self.scheduler.active() if self._active[s]]
+            if pairs:
+                # burst length: smallest remaining budget, bucketed UP to the
+                # next power of two (bounds distinct compiles of the scanned
+                # executable at log2(max_decode_burst)+1; overshoot rows are
+                # discarded at processing and their cache writes miss the
+                # one-hot slot test)
+                need = min(r.max_new_tokens - r.scheduled for _, r in pairs)
+                steps = 1
+                while steps < need:
+                    steps *= 2
+                steps = min(steps, self.max_decode_burst)
+                # greedy decode consumes no randomness — skip the fold_in
+                key = (self._key if self.temperature <= 0.0
+                       else jax.random.fold_in(self._key, self._dispatches))
+                self._dispatches += 1
+                if self._active_dirty:
+                    self._active_dev = jnp.asarray(self._active)
+                    self._active_dirty = False
+                with (tr.phase(ev.PHASE_DECODE) if tr else contextlib.nullcontext()), \
+                        (tr.user_function(name="decode_step") if tr
+                         else contextlib.nullcontext()):
+                    self._caches, self._tok, self._idx, toks = self._burst(
+                        self.params, self._caches, self._tok, self._idx,
+                        self._active_dev, key, steps=steps)
+                for slot, req in pairs:
+                    req.scheduled += steps
+                    if req.scheduled >= req.max_new_tokens:
+                        # fully scheduled: freeze the slot for the next burst
+                        # (it stays occupied until the tokens are processed)
+                        self._active[slot] = False
+                        self._active_dirty = True
+                dispatched = (toks, pairs)
+            if pending is not None:
+                self._process_tokens(*pending)  # overlaps the dispatched burst
+            pending = dispatched
+        self.stats["seconds"] += time.perf_counter() - t_run0
+        return {r.rid: np.asarray(r.tokens, np.int32)
+                for r in self.scheduler.completed[done0:]}
+
+    # ------------------------------------------------------------------
+    def serve_batch(self, prompts: np.ndarray, *, num_tokens: int,
+                    extras: dict | None = None) -> np.ndarray:
+        """Convenience: submit a rectangular batch and run to completion.
+        Returns [B, num_tokens] in submission order."""
+        reqs = []
+        for b in range(prompts.shape[0]):
+            ex = {k: v[b] for k, v in (extras or {}).items()}
+            reqs.append(self.submit(prompts[b], num_tokens, extras=ex))
+        out = self.run()
+        return np.stack([out[r.rid] for r in reqs])
+
+    def throughput_stats(self) -> dict:
+        total, dt = self.stats["tokens_decoded"], self.stats["seconds"]
+        return {**self.stats, "tokens": total,
+                "tok_per_s": total / dt if dt > 0 else float("nan")}
 
 
 class ServeEngine:
+    """Legacy fixed-batch engine: one rectangular batch, lockstep decode.
+
+    Kept for oracle tests and as the simplest serving path.  Sampling is
+    fused into the jitted decode step, so the loop performs one host sync
+    per token (the seed implementation sampled eagerly on host: two)."""
+
     def __init__(self, cfg: ModelConfig, params, *, max_len: int,
                  tracer: Tracer | None = None):
         self.cfg = cfg
@@ -29,18 +354,26 @@ class ServeEngine:
         self.params = params
         self.max_len = max_len
         self.tracer = tracer
+        self.host_syncs = 0
         if tracer is not None:
             tracer.register(EV_TOKENS_DECODED, "Tokens decoded")
         self._prefill = jax.jit(
             lambda p, b: self.model.prefill(p, b, max_len=max_len)
         )
-        self._decode = jax.jit(self.model.decode_step)
+        self._decode_sample = jax.jit(self._decode_sample_impl,
+                                      static_argnames=("temperature",))
+
+    def _decode_sample_impl(self, params, caches, tok, idx, key, *, temperature):
+        caches, logits = self.model.decode_step(params, caches, tok, idx)
+        nxt = _sample_logits(logits, key, temperature, self.cfg.vocab_size)
+        return caches, nxt
 
     def generate(self, prompts: np.ndarray, *, num_tokens: int,
                  extras: dict | None = None, temperature: float = 0.0,
                  seed: int = 0) -> np.ndarray:
         """prompts: [B, S] int32.  Returns [B, num_tokens] generated ids."""
         b, s = prompts.shape
+        start = s + (self.cfg.num_patches if self.cfg.family == "vlm" else 0)
         batch = {"tokens": jnp.asarray(prompts, jnp.int32), **(extras or {})}
         tr = self.tracer
         if tr:
@@ -52,31 +385,32 @@ class ServeEngine:
 
         key = jax.random.PRNGKey(seed)
         out = np.zeros((b, num_tokens), np.int32)
-        tok = self._sample(logits, key, temperature, 0)
+        tok = _sample_logits(logits, jax.random.fold_in(key, 0), temperature,
+                             self.cfg.vocab_size)
         out[:, 0] = np.asarray(tok)
+        self.host_syncs += 1
         for i in range(1, num_tokens):
-            idx = jnp.int32(s + i - 1)
+            idx = jnp.int32(start + i - 1)
+            sub = jax.random.fold_in(key, i)
             if tr:
                 with tr.user_function(name="decode_step"):
-                    caches, logits = self._decode(self.params, caches, tok, idx)
+                    caches, tok = self._decode_sample(
+                        self.params, caches, tok, idx, sub, temperature=temperature)
                 tr.emit(EV_TOKENS_DECODED, i)
             else:
-                caches, logits = self._decode(self.params, caches, tok, idx)
-            tok = self._sample(logits, key, temperature, i)
+                caches, tok = self._decode_sample(
+                    self.params, caches, tok, idx, sub, temperature=temperature)
             out[:, i] = np.asarray(tok)
+            self.host_syncs += 1
         return out
 
-    def _sample(self, logits, key, temperature, i):
-        v = self.cfg.vocab_size
-        logits = logits[:, :v]
-        if temperature <= 0.0:
-            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        sub = jax.random.fold_in(key, i)
-        return jax.random.categorical(sub, logits / temperature).astype(jnp.int32)
-
-    def throughput_stats(self, prompts, num_tokens: int, extras=None) -> dict:
+    def throughput_stats(self, prompts, num_tokens: int, extras=None,
+                         temperature: float = 0.0) -> dict:
+        syncs0 = self.host_syncs
         t0 = time.perf_counter()
-        self.generate(prompts, num_tokens=num_tokens, extras=extras)
+        self.generate(prompts, num_tokens=num_tokens, extras=extras,
+                      temperature=temperature)
         dt = time.perf_counter() - t0
         total = prompts.shape[0] * num_tokens
-        return {"tokens": total, "seconds": dt, "tok_per_s": total / dt}
+        return {"tokens": total, "seconds": dt, "tok_per_s": total / dt,
+                "host_syncs": self.host_syncs - syncs0}

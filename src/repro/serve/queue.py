@@ -1,0 +1,98 @@
+"""Request model + FIFO admission queue for the continuous-batching engine.
+
+A :class:`Request` is the unit the scheduler moves through
+
+    QUEUED -> ACTIVE (prefilled into a slot, decoding) -> DONE
+
+and carries its own latency bookkeeping (arrival / admission / first token /
+completion timestamps) so the engine can emit per-request TTFT / TPOT trace
+counters at retirement.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+
+import numpy as np
+
+
+class RequestState:
+    QUEUED = "queued"
+    ACTIVE = "active"
+    DONE = "done"
+
+
+def _now_ns() -> int:
+    return time.perf_counter_ns()
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # [L] int32 token ids
+    max_new_tokens: int
+    extras: dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
+    arrival_ns: int = -1
+
+    state: str = RequestState.QUEUED
+    slot: int = -1
+    tokens: list[int] = dataclasses.field(default_factory=list)
+    scheduled: int = 0  # tokens dispatched to device (>= len(tokens): in-flight)
+    t_admit_ns: int = -1
+    t_first_ns: int = -1
+    t_done_ns: int = -1
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def done(self) -> bool:
+        return self.state == RequestState.DONE
+
+    def ttft_ns(self) -> int:
+        """Time to first token, from arrival (queueing included)."""
+        if self.t_first_ns < 0 or self.arrival_ns < 0:
+            return -1
+        return self.t_first_ns - self.arrival_ns
+
+    def tpot_ns(self) -> int:
+        """Mean time per output token after the first."""
+        n = len(self.tokens)
+        if self.t_done_ns < 0 or self.t_first_ns < 0 or n < 2:
+            return 0
+        return (self.t_done_ns - self.t_first_ns) // (n - 1)
+
+
+class RequestQueue:
+    """FIFO of waiting requests; assigns monotonically increasing ids."""
+
+    def __init__(self):
+        self._q: collections.deque[Request] = collections.deque()
+        self._next_rid = 0
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int, *,
+               extras: dict | None = None, arrival_ns: int | None = None) -> Request:
+        prompt = np.asarray(prompt, np.int32)
+        if prompt.ndim != 1:
+            raise ValueError(f"prompt must be 1-D token ids, got {prompt.shape}")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        req = Request(
+            rid=self._next_rid, prompt=prompt, max_new_tokens=int(max_new_tokens),
+            extras=dict(extras or {}),
+            arrival_ns=_now_ns() if arrival_ns is None else int(arrival_ns),
+        )
+        self._next_rid += 1
+        self._q.append(req)
+        return req
+
+    def pop(self) -> Request | None:
+        return self._q.popleft() if self._q else None
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def __bool__(self) -> bool:
+        return bool(self._q)

@@ -1,0 +1,91 @@
+"""Slot-pool scheduler for continuous batching.
+
+The engine owns a fixed pool of ``num_slots`` decode slots (static shapes —
+the TPU-friendly discipline: cache buffers never change shape, requests move
+through them).  The scheduler decides, each engine iteration:
+
+  * which queued requests to admit into free slots (FIFO, bounded by
+    ``max_prefills_per_iter`` so admission can't starve in-flight decode);
+  * when a request is finished, returning its slot to the pool.
+
+Every decision is stamped into the trace (paper Listing 2/4 discipline):
+``EV_QUEUE_DEPTH`` / ``EV_SLOTS_ACTIVE`` counters, punctual
+``EV_REQ_ADMIT`` / ``EV_REQ_RETIRE`` markers, and a per-slot occupancy
+event type (``EV_SLOT_BASE + slot``: value = request id + 1, 0 when freed)
+so Paraver can render slot timelines exactly like task timelines.
+"""
+from __future__ import annotations
+
+from repro.core import events as ev
+from repro.serve.queue import Request, RequestQueue, RequestState
+
+
+class Scheduler:
+    def __init__(self, num_slots: int, queue: RequestQueue, *, tracer=None,
+                 max_prefills_per_iter: int = 1):
+        if num_slots < 1:
+            raise ValueError("num_slots must be >= 1")
+        self.num_slots = num_slots
+        self.queue = queue
+        self.tracer = tracer
+        self.max_prefills_per_iter = max(1, int(max_prefills_per_iter))
+        self.slots: list[Request | None] = [None] * num_slots
+        self.completed: list[Request] = []  # retirement order
+        if tracer is not None:
+            tracer.register(ev.EV_QUEUE_DEPTH, ev.SERVE_CTR_LABELS[ev.EV_QUEUE_DEPTH])
+            tracer.register(ev.EV_SLOTS_ACTIVE, ev.SERVE_CTR_LABELS[ev.EV_SLOTS_ACTIVE])
+            tracer.register(ev.EV_REQ_ADMIT, "Serve request admitted (rid+1)")
+            tracer.register(ev.EV_REQ_RETIRE, "Serve request retired (rid+1)")
+            for s in range(num_slots):
+                tracer.register(ev.EV_SLOT_BASE + s,
+                                f"Serve slot {s} occupant (rid+1)", {0: "empty"})
+
+    # ------------------------------------------------------------------
+    def _emit(self, code: int, value: int):
+        if self.tracer is not None:
+            self.tracer.emit(code, value)
+
+    def occupancy(self) -> int:
+        return sum(r is not None for r in self.slots)
+
+    def active(self) -> list[tuple[int, Request]]:
+        return [(s, r) for s, r in enumerate(self.slots) if r is not None]
+
+    def any_active(self) -> bool:
+        return any(r is not None for r in self.slots)
+
+    def drained(self) -> bool:
+        return not self.queue and not self.any_active()
+
+    # ------------------------------------------------------------------
+    def admissions(self) -> list[tuple[int, Request]]:
+        """Pop queued requests into free slots (FIFO), up to the per-iteration
+        prefill budget.  Returns [(slot, request)] for the engine to prefill."""
+        out: list[tuple[int, Request]] = []
+        for slot in range(self.num_slots):
+            if len(out) >= self.max_prefills_per_iter or not self.queue:
+                break
+            if self.slots[slot] is not None:
+                continue
+            req = self.queue.pop()
+            req.state = RequestState.ACTIVE
+            req.slot = slot
+            self.slots[slot] = req
+            out.append((slot, req))
+            self._emit(ev.EV_REQ_ADMIT, req.rid + 1)
+            self._emit(ev.EV_SLOT_BASE + slot, req.rid + 1)
+        if out:
+            self._emit(ev.EV_QUEUE_DEPTH, len(self.queue))
+            self._emit(ev.EV_SLOTS_ACTIVE, self.occupancy())
+        return out
+
+    def retire(self, req: Request):
+        """Return a finished request's slot to the pool."""
+        if self.slots[req.slot] is not req:
+            raise ValueError(f"request {req.rid} does not own slot {req.slot}")
+        self.slots[req.slot] = None
+        req.state = RequestState.DONE
+        self.completed.append(req)
+        self._emit(ev.EV_REQ_RETIRE, req.rid + 1)
+        self._emit(ev.EV_SLOT_BASE + req.slot, 0)
+        self._emit(ev.EV_SLOTS_ACTIVE, self.occupancy())

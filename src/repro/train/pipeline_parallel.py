@@ -72,9 +72,10 @@ def gpipe(fn, mesh, *, num_microbatches: int):
             jax.tree.map(lambda _: P("pipe"), staged_params),
             P(),
         )
-        return jax.shard_map(
+        from repro.compat import shard_map
+
+        return shard_map(
             worker, mesh=mesh, in_specs=in_specs, out_specs=P(),
-            check_vma=False,
         )(staged_params, xs)
 
     return apply

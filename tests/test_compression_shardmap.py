@@ -11,9 +11,10 @@ SCRIPT = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import PartitionSpec as P
+    from repro.compat import make_mesh, shard_map
     from repro.optim.compression import psum_compressed
 
-    mesh = jax.make_mesh((2,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((2,), ("pod",))
     rng = np.random.default_rng(0)
     g_local = jnp.asarray(rng.normal(size=(2, 64)), jnp.float32)  # per-pod grads
 
@@ -23,8 +24,8 @@ SCRIPT = textwrap.dedent("""
             out, e1 = psum_compressed({"g": g}, "pod", method=method,
                                       error_state=e0 if method == "int8_ef" else None)
             return out["g"], (e1 or e0)["g"]
-        return jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("pod"),
-                                     out_specs=(P("pod"), P("pod")), check_vma=False))
+        return jax.jit(shard_map(f, mesh=mesh, in_specs=P("pod"),
+                                 out_specs=(P("pod"), P("pod"))))
 
     exact, _ = reduce_with("none")(g_local)
     bf16, _ = reduce_with("bf16")(g_local)

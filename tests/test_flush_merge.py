@@ -1,0 +1,124 @@
+"""Streaming trace flush: mid-run segmentation to disk (Tracer.flush) and
+the segment-merging Paraver writer round-trip to an identical .prv."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import events as ev
+from repro.core.paraver import parse_prv, write_prv
+from repro.core.tracer import Tracer
+
+
+def _drive(tracer: Tracer, *, flush_base=None, flushes=()):
+    """Deterministic record stream (explicit timestamps on a pinned
+    timebase); flush after the record indices listed in ``flushes``."""
+    t0 = tracer.t0
+    tracer.register(84_210, "Custom", {1: "one"})
+    for i in range(30):
+        tracer.emit(84_210, i, time_ns=t0 + 100 + 10 * i)
+        if i % 3 == 0:
+            tracer.inject_event(1, 0, t0 + 105 + 10 * i, ev.EV_STEP_NUMBER, i)
+        if i % 5 == 0:
+            tracer.inject_state(1, 0, t0 + 100 + 10 * i, t0 + 104 + 10 * i,
+                                ev.STATE_IO)
+        if i % 7 == 0:
+            tracer.comm(src=(0, 0), dst=(1, 0), send_ns=t0 + 101 + 10 * i,
+                        recv_ns=t0 + 103 + 10 * i, size=64, tag=3)
+        if flush_base is not None and i in flushes:
+            tracer.flush(flush_base, emit_marker=False)
+    return tracer.finish(t_end_ns=t0 + 1000)
+
+
+def _prv_lines(prv_path):
+    header, *body = open(prv_path).read().splitlines()
+    return header.split("):", 1)[1], sorted(body)  # header modulo wall date
+
+
+def test_flush_then_merge_identical(tmp_path):
+    """Flushed-and-merged .prv == single-shot finish() .prv (modulo record
+    order), and both reparse to identical record arrays."""
+    tr_flush = Tracer("app").init(t0_ns=10_000)
+    trace_flushed = _drive(tr_flush, flush_base=tmp_path / "a", flushes=(7, 19, 28))
+    assert len(tr_flush.segments) == 3
+    pa = write_prv(trace_flushed, tmp_path / "a", segments=tr_flush.segments)
+
+    tr_solo = Tracer("app").init(t0_ns=99_000)  # different absolute timebase
+    trace_solo = _drive(tr_solo)
+    pb = write_prv(trace_solo, tmp_path / "b")
+
+    ha, la = _prv_lines(pa["prv"])
+    hb, lb = _prv_lines(pb["prv"])
+    assert ha == hb
+    assert la == lb
+    assert pa["pcf"].read_text() == pb["pcf"].read_text()
+
+    ta, tb = parse_prv(pa["prv"]), parse_prv(pb["prv"])
+    np.testing.assert_array_equal(ta.states, tb.states)
+    np.testing.assert_array_equal(ta.events, tb.events)
+    np.testing.assert_array_equal(ta.comms, tb.comms)
+
+
+def test_flush_drains_buffers_and_brackets_with_ev_flush(tmp_path):
+    tr = Tracer("app").init()
+    for i in range(10):
+        tr.emit(84_210, i)
+    seg = tr.flush(tmp_path / "t")
+    assert seg is not None and seg.exists()
+    with np.load(seg) as z:
+        # 10 user events + the EV_FLUSH begin marker land in the segment
+        assert len(z["events"]) == 11
+        assert z["events"]["type"][-1] == ev.EV_FLUSH
+        assert z["events"]["value"][-1] == 1
+    trace = tr.finish()
+    # post-flush buffer holds only the EV_FLUSH end marker
+    flush_evs = trace.events[trace.events["type"] == ev.EV_FLUSH]
+    assert list(flush_evs["value"]) == [0]
+    assert len(trace.events) == 1
+
+
+def test_flush_empty_returns_none(tmp_path):
+    tr = Tracer("app").init()
+    tr.emit(84_210, 1)
+    tr.flush(tmp_path / "t", emit_marker=False)  # marker-free: buffer now empty
+    assert tr.flush(tmp_path / "t", emit_marker=False) is None
+    assert len(tr.segments) == 1
+    tr.finish()
+
+
+def test_merge_with_overlapping_segments(tmp_path):
+    """Retro-injected records (comm replay anchors events in the past) make
+    segment key ranges overlap — the writer's heap-merge fallback must still
+    produce a globally time-sorted, complete .prv."""
+    tr = Tracer("app").init(t0_ns=0)
+    tr.register(84_212, "C")
+    for i in range(10):
+        tr.emit(84_212, i, time_ns=1000 + 10 * i)
+    tr.flush(tmp_path / "o", emit_marker=False)
+    # injected AFTER the first flush but timestamped BEFORE its records
+    tr.inject_event(0, 0, 500, 84_212, 99)
+    tr.emit(84_212, 10, time_ns=1200)
+    tr.flush(tmp_path / "o", emit_marker=False)
+    trace = tr.finish(t_end_ns=2000)
+    paths = write_prv(trace, tmp_path / "o", segments=tr.segments)
+    merged = parse_prv(paths["prv"])
+    got = merged.events[merged.events["type"] == 84_212]
+    assert sorted(got["value"]) == sorted(list(range(11)) + [99])
+    body = [ln for ln in open(paths["prv"]).read().splitlines()[1:] if ln]
+    times = [int(ln.split(":")[5]) for ln in body if ln.startswith("2")]
+    assert times == sorted(times)  # globally time-sorted despite overlap
+
+
+def test_merged_write_preserves_full_event_stream(tmp_path):
+    """Analysis over a reparsed merged trace sees every flushed event."""
+    tr = Tracer("app").init()
+    tr.register(84_211, "Counter")
+    for i in range(50):
+        tr.emit(84_211, i)
+        if i % 10 == 9:
+            tr.flush(tmp_path / "m", emit_marker=False)
+    trace = tr.finish()
+    assert len(trace.events[trace.events["type"] == 84_211]) == 0  # all on disk
+    paths = write_prv(trace, tmp_path / "m", segments=tr.segments)
+    merged = parse_prv(paths["prv"])
+    vals = merged.events[merged.events["type"] == 84_211]["value"]
+    assert sorted(vals) == list(range(50))

@@ -74,10 +74,10 @@ _REAL = textwrap.dedent("""
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp
     from jax.sharding import PartitionSpec as P, NamedSharding
+    from repro.compat import make_mesh
     from repro.core.hlo_comm import parse_collectives, collective_summary
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((2, 4), ("data", "model"))
 
     def f(x, w):
         y = jnp.einsum("bd,df->bf", x, w, preferred_element_type=jnp.float32)

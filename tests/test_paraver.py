@@ -3,7 +3,12 @@ traces (property: parse(write(trace)) == trace up to record ordering)."""
 from __future__ import annotations
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (see requirements-test.txt)"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import events as ev
 from repro.core.chrome_trace import write_chrome_trace

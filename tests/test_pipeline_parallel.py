@@ -13,8 +13,8 @@ SCRIPT = textwrap.dedent("""
     import jax, jax.numpy as jnp, numpy as np
     from repro.train.pipeline_parallel import gpipe, sequential_reference, stack_stage_params
 
-    mesh = jax.make_mesh((4,), ("pipe",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.compat import make_mesh
+    mesh = make_mesh((4,), ("pipe",))
 
     D = 16
     def stage_fn(p, x):  # shape-preserving residual stage

@@ -2,7 +2,12 @@
 from __future__ import annotations
 
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="hypothesis not installed (see requirements-test.txt)"
+)
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import events as ev
 from repro.core.analysis import bandwidth_timeline, connectivity, time_fractions

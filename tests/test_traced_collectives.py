@@ -14,9 +14,10 @@ SCRIPT = textwrap.dedent("""
     from jax.sharding import PartitionSpec as P
     from repro import core as xtrace
     from repro.core import events as ev
+    from repro.compat import make_mesh, shard_map
     from repro.sharding.collectives import traced_psum, traced_ppermute
 
-    mesh = jax.make_mesh((4,), ("x",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((4,), ("x",))
     tracer = xtrace.init("collectives")
 
     def f(v):
@@ -24,8 +25,7 @@ SCRIPT = textwrap.dedent("""
         r = traced_ppermute(s, "x", [(i, (i + 1) % 4) for i in range(4)])
         return r
 
-    g = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("x"), out_specs=P("x"),
-                              check_vma=False))
+    g = jax.jit(shard_map(f, mesh=mesh, in_specs=P("x"), out_specs=P("x")))
     out = g(jnp.arange(8.0))
     jax.block_until_ready(out)
     trace = xtrace.finish()
