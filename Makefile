@@ -1,6 +1,6 @@
 PYTHONPATH := src
 
-.PHONY: smoke test bench serve-bench
+.PHONY: smoke test bench serve-bench lint
 
 # fail-fast wiring that catches API drift (e.g. cost_analysis format
 # changes) at collection/first-failure time
@@ -13,5 +13,10 @@ test:
 bench:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run
 
+# paged-vs-contiguous serving comparison; writes BENCH_serve.json (CI artifact)
 serve-bench:
 	PYTHONPATH=$(PYTHONPATH) python benchmarks/bench_serve.py
+
+# correctness-class lint gate (rules in ruff.toml; mirrored in CI)
+lint:
+	ruff check src tests benchmarks examples

@@ -1,18 +1,25 @@
-"""Serving throughput: seed fixed-batch loop vs continuous batching.
+"""Serving throughput: seed loop vs continuous batching, paged vs contiguous.
 
-The seed engine's decode loop performed, per token, a jitted decode call,
-host-side (eager) sampling of the returned logits, and a blocking token
-fetch — two host round-trips per decoded token, one of them a hard sync.
-The continuous engine fuses sampling into one jitted burst over the whole
-slot pool and fetches once per burst.  This benchmark reproduces the seed
-loop verbatim as the baseline and reports tok/s plus host-interaction
-counts for both.
+Three sections, all emitted as CSV rows AND collected into machine-readable
+``BENCH_serve.json`` (repo root; CI uploads it as an artifact so the perf
+trajectory is tracked across PRs):
+
+  1. seed fixed-batch loop vs the paged continuous engine (tok/s, host
+     round-trips) — the PR-1 comparison, now running on the paged pool;
+  2. equal KV-memory budget: a contiguous per-slot layout reserves
+     ``max_len`` tokens per slot, so budget/max_len slots is the concurrency
+     ceiling; the paged pool spends the SAME budget block-by-block on
+     *actual* lengths and sustains more concurrent requests (peak active
+     slots + blocks in use reported);
+  3. prefix-hit speedup on a shared-prompt workload (system-prompt shape):
+     warm vs cold wall time and prefilled-token counts.
 
     PYTHONPATH=src python -m benchmarks.run        # all sections
     PYTHONPATH=src python benchmarks/bench_serve.py
 """
 from __future__ import annotations
 
+import json
 import pathlib
 import sys
 import time
@@ -27,6 +34,7 @@ ARCH = "granite-8b"
 N_REQ = 8
 PROMPT = 16
 GEN = 32
+JSON_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_serve.json"
 
 
 def _seed_fixed_batch(cfg, model, params, prompts, num_tokens, max_len,
@@ -56,24 +64,15 @@ def _seed_fixed_batch(cfg, model, params, prompts, num_tokens, max_len,
     return out, fetches, eager_samples
 
 
-def bench():
-    from repro.configs import get_config, reduced
-    from repro.models.model import build_model
-    from repro.serve.engine import ContinuousServeEngine
-
-    cfg = reduced(get_config(ARCH), num_layers=2)
-    model = build_model(cfg)
-    params = model.init(jax.random.PRNGKey(0))
+def _bench_seed_vs_paged(cfg, model, params, results):
     prompts = np.random.default_rng(0).integers(
         0, cfg.vocab_size, (N_REQ, PROMPT)).astype(np.int32)
     max_len = PROMPT + GEN
     total = N_REQ * GEN
-
-    # warmup pass compiles each path; measured passes reuse the compiled fns
-    # (the continuous engine serves later waves through the same slot pool —
-    # engine reuse is part of the contract).  Best-of-REPS filters scheduler
-    # noise: both paths are sub-ms per step on CPU.
     REPS = 5
+
+    from repro.serve.engine import ContinuousServeEngine
+
     prefill = jax.jit(lambda p, b: model.prefill(p, b, max_len=max_len))
     decode = jax.jit(model.decode_step)
     _seed_fixed_batch(cfg, model, params, prompts, GEN, max_len, prefill, decode)
@@ -95,19 +94,142 @@ def bench():
         dt_cont = min(dt_cont, time.perf_counter() - t0)
     stats = {"decode_syncs": eng.stats["decode_syncs"] - syncs0,
              "iterations": eng.stats["iterations"] - iters0}
-    assert np.array_equal(out, ref), "continuous engine diverged from seed loop"
+    assert np.array_equal(out, ref), "paged engine diverged from seed loop"
 
     tok_s_seed = total / dt_seed
     tok_s_cont = total / dt_cont
+    syncs_per_iter = stats["decode_syncs"] / max(stats["iterations"], 1)
+    results["seed_vs_paged"] = {
+        "tok_per_s_seed": tok_s_seed, "tok_per_s_paged": tok_s_cont,
+        "speedup": tok_s_cont / tok_s_seed,
+        "host_syncs_per_decode_iter": syncs_per_iter,
+    }
     yield (f"serve_fixed_batch_seed,{dt_seed / total * 1e6:.1f},"
            f"{tok_s_seed:.0f} tok/s; {(fetches + eager) / GEN:.1f} host "
            f"round-trips/token ({fetches / GEN:.0f} blocking fetch + "
            f"{eager / GEN:.0f} eager sample)")
-    yield (f"serve_continuous,{dt_cont / total * 1e6:.1f},"
-           f"{tok_s_cont:.0f} tok/s; {stats['decode_syncs'] / max(stats['iterations'], 1):.2f} "
+    yield (f"serve_continuous_paged,{dt_cont / total * 1e6:.1f},"
+           f"{tok_s_cont:.0f} tok/s; {syncs_per_iter:.2f} "
            f"host syncs/decode iteration")
-    yield (f"serve_continuous_speedup,,{tok_s_cont / tok_s_seed:.2f}x tok/s "
+    yield (f"serve_paged_speedup,,{tok_s_cont / tok_s_seed:.2f}x tok/s "
            f"({N_REQ} reqs x {GEN} tokens, {ARCH} reduced)")
+
+
+def _bench_equal_budget(cfg, model, params, results):
+    """Same KV token budget; short actual lengths.  Contiguous slot-math:
+    budget // max_len concurrent requests.  Paged: block-gated admission."""
+    from repro.serve.engine import ContinuousServeEngine
+
+    max_len, bs = 128, 16
+    n_req, prompt, gen = 12, 16, 16
+    contig_slots = 4
+    budget_tokens = contig_slots * max_len  # what contiguous would reserve
+    num_blocks = budget_tokens // bs + 1  # same HBM spend, block granularity
+    prompts = np.random.default_rng(1).integers(
+        0, cfg.vocab_size, (n_req, prompt)).astype(np.int32)
+
+    def run(engine):
+        for i in range(n_req):
+            engine.submit(prompts[i], gen)
+        t0 = time.perf_counter()
+        engine.run()
+        return time.perf_counter() - t0
+
+    # contiguous-equivalent: per-slot reserved regions (slots are the bound)
+    contig = ContinuousServeEngine(
+        cfg, params, num_slots=contig_slots, max_len=max_len, block_size=bs,
+        prefix_cache=False, max_prefills_per_iter=contig_slots)
+    run(contig)  # warmup/compile
+    dt_contig = run(contig)
+    # paged: same budget, slots no longer the bound
+    paged = ContinuousServeEngine(
+        cfg, params, num_slots=n_req, max_len=max_len, block_size=bs,
+        num_blocks=num_blocks, prefix_cache=False, max_prefills_per_iter=n_req)
+    run(paged)
+    # report the measured run only: reset peaks, delta the counters
+    paged.stats["peak_active"] = paged.stats["peak_blocks"] = 0
+    preempt0 = paged.stats["preemptions"]
+    dt_paged = run(paged)
+
+    total = n_req * gen
+    results["equal_budget"] = {
+        "budget_tokens": budget_tokens,
+        "contiguous_slots": contig_slots,
+        "contiguous_tok_per_s": total / dt_contig,
+        "paged_tok_per_s": total / dt_paged,
+        "paged_peak_concurrent": paged.stats["peak_active"],
+        "paged_peak_blocks": paged.stats["peak_blocks"],
+        "paged_block_capacity": num_blocks - 1,
+        "preemptions": paged.stats["preemptions"] - preempt0,
+    }
+    yield (f"serve_budget_contiguous,,{total / dt_contig:.0f} tok/s; "
+           f"{contig_slots} slots sustained ({budget_tokens} KV tokens reserved)")
+    yield (f"serve_budget_paged,,{total / dt_paged:.0f} tok/s; "
+           f"{paged.stats['peak_active']} concurrent requests on the same "
+           f"budget ({paged.stats['peak_blocks']}/{num_blocks - 1} blocks in use)")
+
+
+def _bench_prefix_hits(cfg, model, params, results):
+    from repro.serve.engine import ContinuousServeEngine
+
+    rng = np.random.default_rng(2)
+    shared = rng.integers(0, cfg.vocab_size, (48,)).astype(np.int32)
+    n_req, gen = 8, 8
+    prompts = [np.concatenate([shared,
+                               rng.integers(0, cfg.vocab_size, (8,)).astype(np.int32)])
+               for _ in range(n_req)]
+
+    def run(prefix_cache):
+        # one engine, two waves: wave 1 compiles the prefill shapes (and,
+        # warm, populates the prefix cache); wave 2 is the measurement —
+        # every warm request then hits the resident shared prefix
+        eng = ContinuousServeEngine(
+            cfg, params, num_slots=4, max_len=80, block_size=16,
+            prefix_cache=prefix_cache, max_prefills_per_iter=4)
+        for p in prompts:
+            eng.submit(p, gen)
+        eng.run()
+        snap = dict(eng.stats)
+        for p in prompts:
+            eng.submit(p, gen)
+        t0 = time.perf_counter()
+        eng.run()
+        dt = time.perf_counter() - t0
+        delta = {k: eng.stats[k] - snap[k]
+                 for k in ("prefill_tokens", "prefix_hit_tokens")}
+        return dt, delta
+
+    dt_cold, st_cold = run(False)
+    dt_warm, st_warm = run(True)
+    results["prefix_hits"] = {
+        "shared_prefix_tokens": int(shared.shape[0]), "requests": n_req,
+        "cold_s": dt_cold, "warm_s": dt_warm,
+        "speedup": dt_cold / dt_warm,
+        "prefill_tokens_cold": st_cold["prefill_tokens"],
+        "prefill_tokens_warm": st_warm["prefill_tokens"],
+        "prefix_hit_tokens": st_warm["prefix_hit_tokens"],
+    }
+    yield (f"serve_prefix_cold,,{st_cold['prefill_tokens']} tokens prefilled, "
+           f"{dt_cold * 1e3:.0f} ms wall")
+    yield (f"serve_prefix_warm,,{st_warm['prefill_tokens']} tokens prefilled "
+           f"({st_warm['prefix_hit_tokens']} served from cache), "
+           f"{dt_warm * 1e3:.0f} ms wall = {dt_cold / dt_warm:.2f}x")
+
+
+def bench():
+    from repro.configs import get_config, reduced
+    from repro.models.model import build_model
+
+    cfg = reduced(get_config(ARCH), num_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    results: dict = {"arch": f"{ARCH} (reduced)"}
+    yield from _bench_seed_vs_paged(cfg, model, params, results)
+    yield from _bench_equal_budget(cfg, model, params, results)
+    yield from _bench_prefix_hits(cfg, model, params, results)
+    JSON_PATH.write_text(json.dumps(results, indent=2) + "\n")
+    yield f"serve_bench_json,,{JSON_PATH.name} written"
 
 
 if __name__ == "__main__":

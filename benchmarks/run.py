@@ -28,7 +28,7 @@ def main() -> None:
         ("paper figures 1-5 (traced distributed workload)", bench_figures),
         ("paraver trace IO", bench_paraver_io),
         ("pallas kernels (interpret mode)", bench_kernels),
-        ("serving: fixed batch vs continuous batching", bench_serve),
+        ("serving: seed loop vs paged continuous batching + prefix reuse", bench_serve),
     ]
     failures = 0
     for title, mod in sections:

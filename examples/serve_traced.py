@@ -1,11 +1,13 @@
 """Serve a small model with continuous batching, traced end-to-end.
 
 8 variable-arrival requests flow through a 4-slot continuous-batching
-engine (sliding-window arch => ring KV caches); the trace records every
-scheduler decision (queue depth, slot occupancy, admit/retire, per-request
-TTFT/TPOT) plus prefill/decode user-function regions, and is streamed to
-disk mid-run (EV_FLUSH-bracketed segments) then segment-merged into one
-Paraver trace — analyzed with the same tooling as training traces.
+engine over the paged KV-block pool (sliding-window arch — the window is
+a mask over absolute positions, not a ring); the trace records every
+scheduler AND allocator decision (queue depth, slot occupancy, blocks
+free/cached, admit/retire, per-request TTFT/TPOT) plus prefill/decode
+user-function regions, and is streamed to disk mid-run (EV_FLUSH-bracketed
+segments) then segment-merged into one Paraver trace — analyzed with the
+same tooling as training traces.
 
     PYTHONPATH=src python examples/serve_traced.py
 """
@@ -28,7 +30,7 @@ OUT = pathlib.Path(__file__).resolve().parent / "out"
 
 def main():
     OUT.mkdir(exist_ok=True)
-    # a sliding-window arch exercises the ring KV cache in serving
+    # a sliding-window arch exercises the masked-window paged decode path
     cfg = reduced(get_config("mixtral-8x22b"), num_layers=2)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))

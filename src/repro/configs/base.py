@@ -82,6 +82,8 @@ class ModelConfig:
     attn_block_kv: int = 0  # 0 = naive attention; >0 = online-softmax KV blocking
     seq_shard_residual: bool = False  # Megatron-style sequence-sharded residuals
     use_flash_kernel: bool = False  # Pallas flash-attention kernel (TPU target)
+    use_paged_kernel: bool = False  # Pallas paged-decode kernel (TPU target);
+                                    # default is the gather-based jnp path
 
     # --- training defaults (per-arch tuned; overridable) ---
     microbatches: dict[str, int] = dataclasses.field(

@@ -106,18 +106,28 @@ CTR_LABELS = {
 EV_QUEUE_DEPTH = 42200001  # counter: requests waiting for a slot
 EV_SLOTS_ACTIVE = 42200002  # counter: occupied decode slots
 EV_TOKENS_TOTAL = 42200003  # counter: cumulative tokens decoded this run
+EV_BLOCKS_FREE = 42200004  # counter: KV blocks on the pool free list
+EV_BLOCKS_CACHED = 42200005  # counter: evictable prefix-cache blocks (ref 0)
+EV_BLOCKS_ACTIVE = 42200006  # counter: KV blocks referenced by live requests
 EV_REQ_TTFT_US = 42200010  # per-request time-to-first-token (us), at retire
 EV_REQ_TPOT_US = 42200011  # per-request mean time-per-output-token (us)
+EV_PREFIX_HIT_TOKENS = 42200012  # per-admit: prompt tokens served from cache
 EV_REQ_ADMIT = 40000060  # value = request id + 1 when a request enters a slot
 EV_REQ_RETIRE = 40000061  # value = request id + 1 when it completes
+EV_EVICT = 40000062  # value = evicted KV block id (prefix cache eviction)
+EV_REQ_PREEMPT = 40000063  # value = request id + 1 when evicted back to queue
 EV_SLOT_BASE = 40000100  # per-slot occupancy: code = base + slot,
                          # value = request id + 1 (0 = slot empty)
 SERVE_CTR_LABELS = {
     EV_QUEUE_DEPTH: "Serve queue depth (requests)",
     EV_SLOTS_ACTIVE: "Serve slots active",
     EV_TOKENS_TOTAL: "Serve tokens decoded (cumulative)",
+    EV_BLOCKS_FREE: "KV blocks free",
+    EV_BLOCKS_CACHED: "KV blocks cached (evictable prefix entries)",
+    EV_BLOCKS_ACTIVE: "KV blocks active (referenced)",
     EV_REQ_TTFT_US: "Request time-to-first-token (us)",
     EV_REQ_TPOT_US: "Request mean time-per-output-token (us)",
+    EV_PREFIX_HIT_TOKENS: "Prefix-cache hit tokens (per admit)",
 }
 
 # ---- sampler ----

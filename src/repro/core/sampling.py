@@ -1,0 +1,22 @@
+"""Shared on-device token sampling for every decode path.
+
+One helper, traced into the jitted prefill/decode executables of both serve
+engines (the previous copies in ``serve/engine.py`` drifted independently).
+Greedy decode (``temperature <= 0``) consumes no randomness, so callers may
+pass any key without burning their RNG stream.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_logits(logits, key, temperature: float, vocab: int):
+    """Greedy or temperature sampling over the unpadded vocab, on device.
+
+    logits: [..., V_padded]; returns int32 token ids of shape logits.shape[:-1].
+    """
+    lg = logits[..., :vocab]
+    if temperature <= 0.0:
+        return jnp.argmax(lg, axis=-1).astype(jnp.int32)
+    return jax.random.categorical(key, lg / temperature, axis=-1).astype(jnp.int32)

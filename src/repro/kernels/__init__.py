@@ -2,6 +2,8 @@
 no kernel-level contribution — see DESIGN.md section 6):
 
   flash_attention/  causal/SWA/GQA fused attention (kernel.py + ops.py + ref.py)
+  paged_attention/  block-table paged decode attention (scalar-prefetched
+                    block tables; serve-engine opt-in via cfg.use_paged_kernel)
   ssd_scan/         Mamba-2 SSD chunked scan    (kernel.py + ops.py + ref.py)
 
 Kernels are validated in interpret mode against pure-jnp oracles

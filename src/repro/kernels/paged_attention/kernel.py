@@ -1,0 +1,127 @@
+"""Pallas TPU paged-decode attention kernel (single query token per slot).
+
+The vLLM-style decode hot loop: each batch slot reads its KV through a
+per-slot block table instead of a contiguous region.  TPU adaptation notes:
+
+  * the block table and per-slot decode positions ride in as **scalar
+    prefetch** operands (``pltpu.PrefetchScalarGridSpec``), so the BlockSpec
+    index maps can compute each grid step's HBM->VMEM DMA source *before*
+    the kernel body runs — the gather IS the pipeline, no materialized
+    [B, W*bs, ...] view ever exists;
+  * grid is (B, Hkv, W) with the block-table walk innermost and sequential;
+    the running (m, l, acc) online-softmax state lives in VMEM scratch
+    across grid steps, exactly like the flash kernel's KV loop;
+  * GQA is folded into the q/out BlockSpecs (one [G, D] query tile per kv
+    head), so no repeated-KV materialization;
+  * blocks entirely past the decode position (``w*bs > index``) or entirely
+    outside the sliding window are skipped with ``pl.when`` — they still
+    occupy a grid slot but do no MXU work.  NULL-block garbage is masked
+    elementwise (finite values; exp underflows to exactly 0).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.0e38
+
+
+def _paged_decode_kernel(
+    bt_ref, idx_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
+    *, scale: float, window: int | None, bs: int, num_w: int,
+):
+    b = pl.program_id(0)
+    w = pl.program_id(2)
+
+    @pl.when(w == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    idx = idx_ref[b]
+    k_lo = w * bs
+    not_future = k_lo <= idx
+    in_window = (
+        jnp.bool_(True) if window is None else (k_lo + bs - 1) > (idx - window)
+    )
+
+    @pl.when(jnp.logical_and(not_future, in_window))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale  # [G, d]
+        k = k_ref[0, 0].astype(jnp.float32)  # [bs, d]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # [G, bs]
+
+        pos = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = pos <= idx
+        if window is not None:
+            mask &= pos > idx - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)  # [G, 1]
+        m_new = jnp.maximum(m_prev, m_cur)
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)  # [G, bs]
+        l_new = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p, v_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_scr[...] = acc_scr[...] * corr + pv
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(w == num_w - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def paged_decode_fwd(
+    q, k_pages, v_pages, block_tables, index, *, window: int | None = None,
+    interpret: bool = False,
+):
+    """q: [B, Hkv, G, D]; k/v_pages: [Hkv, NB, bs, D] (head-major layout);
+    block_tables: [B, W] int32; index: [B] int32.  Returns [B, Hkv, G, D].
+    """
+    b, hkv, g, d = q.shape
+    bs = k_pages.shape[2]
+    num_w = block_tables.shape[1]
+    grid = (b, hkv, num_w)
+
+    kernel = functools.partial(
+        _paged_decode_kernel, scale=1.0 / (d ** 0.5), window=window,
+        bs=bs, num_w=num_w,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # block_tables, index
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, d), lambda b_, h, w, bt, idx: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, d),
+                         lambda b_, h, w, bt, idx: (h, bt[b_, w], 0, 0)),
+            pl.BlockSpec((1, 1, bs, d),
+                         lambda b_, h, w, bt, idx: (h, bt[b_, w], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda b_, h, w, bt, idx: (b_, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
+        interpret=interpret,
+    )(block_tables, index, q, k_pages, v_pages)

@@ -1,0 +1,33 @@
+"""jit'd wrapper: model/pool layout <-> kernel layout, backend select."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.paged_attention.kernel import paged_decode_fwd
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_attention(cache, q, block_tables, index, *, window: int | None = None,
+                    interpret: bool | None = None):
+    """cache: {"k","v"} [NB, bs, Hkv, D] pooled blocks (engine layout);
+    q: [B, 1, Hq, D]; block_tables: [B, W] int32; index: [B] int32.
+
+    interpret=None -> auto: Pallas interpret mode off-TPU (this container),
+    compiled Mosaic kernel on TPU.  Returns [B, 1, Hq, D].
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, _, hq, d = q.shape
+    hkv = cache["k"].shape[2]
+    g = hq // hkv
+    qt = q.reshape(b, hkv, g, d)  # q head h = kh*G + g_
+    kp = jnp.transpose(cache["k"], (2, 0, 1, 3))  # [Hkv, NB, bs, D]
+    vp = jnp.transpose(cache["v"], (2, 0, 1, 3))
+    out = paged_decode_fwd(
+        qt, kp, vp, jnp.asarray(block_tables, jnp.int32),
+        jnp.asarray(index, jnp.int32), window=window, interpret=interpret,
+    )
+    return out.reshape(b, 1, hq, d)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the paged-decode attention kernel.
+
+Deliberately standalone (no imports from repro.models) so kernel tests
+validate against an independent implementation.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, index, *,
+                        window: int | None = None):
+    """q: [B, 1, Hq, D]; k/v_pages: [NB, bs, Hkv, D] pooled blocks;
+    block_tables: [B, W] int32 (entry w maps positions [w*bs, (w+1)*bs));
+    index: [B] int32 absolute position of the query token.
+
+    fp32 softmax, GQA by head replication, dense gather of every table
+    entry.  Returns [B, 1, Hq, D] in q.dtype.
+    """
+    b, _, hq, d = q.shape
+    bs, hkv = k_pages.shape[1], k_pages.shape[2]
+    w = block_tables.shape[1]
+    g = hq // hkv
+    kg = k_pages[block_tables].reshape(b, w * bs, hkv, d)  # [B, S, Hkv, D]
+    vg = v_pages[block_tables].reshape(b, w * bs, hkv, d)
+    kf = jnp.repeat(kg, g, axis=2)  # [B, S, Hq, D]
+    vf = jnp.repeat(vg, g, axis=2)
+    scores = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
+                        kf.astype(jnp.float32)) / (d ** 0.5)
+    pos = jnp.arange(w * bs)[None, :]  # [1, S]
+    mask = pos <= index[:, None]
+    if window is not None:
+        mask &= pos > index[:, None] - window
+    scores = jnp.where(mask[:, None, None, :], scores, -2.0e38)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", p, vf.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -5,9 +5,12 @@
 
 Default mode is the continuous-batching engine (``--mode continuous``):
 requests are queued with staggered prompt lengths and flow through a
-fixed slot pool; ``--mode static`` keeps the legacy rectangular-batch
-path.  With ``--trace --flush-every N`` the trace is streamed to disk
-mid-run and segment-merged into the final ``.prv``.
+fixed slot pool whose attention K/V lives in a paged block pool
+(``--block-size`` / ``--num-blocks`` size it; ``--no-prefix-cache``
+disables prompt prefix reuse); ``--mode static`` keeps the legacy
+rectangular-batch path over contiguous caches.  With ``--trace
+--flush-every N`` the trace is streamed to disk mid-run and
+segment-merged into the final ``.prv``.
 """
 from __future__ import annotations
 
@@ -44,6 +47,13 @@ def main(argv=None):
     p.add_argument("--prompt-len", type=int, default=32)
     p.add_argument("--gen", type=int, default=32)
     p.add_argument("--temperature", type=float, default=0.0)
+    p.add_argument("--block-size", type=int, default=16,
+                   help="KV-cache block size (tokens) for the paged pool")
+    p.add_argument("--num-blocks", type=int, default=0,
+                   help="KV pool size in blocks (0 = contiguous-equivalent "
+                        "budget: slots * ceil(max_len/block_size) + 1)")
+    p.add_argument("--no-prefix-cache", action="store_true",
+                   help="disable hash-based prompt prefix reuse")
     p.add_argument("--trace", action="store_true")
     p.add_argument("--flush-every", type=int, default=0,
                    help="stream the trace to disk every N decode iterations")
@@ -73,6 +83,9 @@ def main(argv=None):
             out.mkdir(parents=True, exist_ok=True)
         engine = ContinuousServeEngine(
             cfg, params, num_slots=min(args.slots, args.requests), max_len=max_len,
+            block_size=args.block_size,
+            num_blocks=args.num_blocks or None,
+            prefix_cache=not args.no_prefix_cache,
             tracer=tracer, temperature=args.temperature,
             flush_every=args.flush_every,
             flush_base=out / "serve" if args.flush_every else None,
@@ -88,6 +101,12 @@ def main(argv=None):
     print(f"[serve] {args.arch} mode={args.mode}: {stats['tokens']} tokens in "
           f"{stats['seconds']:.2f}s = {stats['tok_per_s']:.1f} tok/s "
           f"(host syncs: {stats.get('host_syncs', '?')}; CPU smoke scale)")
+    if args.mode == "continuous" and engine.pool is not None:
+        print(f"[serve] paged pool: {engine.num_blocks - 1} blocks x "
+              f"{engine.block_size} tokens; peak {stats['peak_blocks']} in use, "
+              f"{stats['prefix_hit_tokens']} prefix-hit tokens, "
+              f"{stats['preemptions']} preemptions, "
+              f"{stats.get('evictions', 0)} cache evictions")
     if tracer:
         segments = list(tracer.segments)
         trace = xtrace.finish()

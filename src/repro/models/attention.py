@@ -212,23 +212,44 @@ def init_cache_spec(cfg, batch: int, max_len: int, dtype):
     }
 
 
+def paged_cache_spec(cfg, num_blocks: int, block_size: int, dtype):
+    """Pooled KV storage for ONE layer: ``[num_blocks, block_size, Kh, D]``.
+    No batch dim — requests reference blocks through per-slot block tables,
+    and SWA archs store absolute positions (window enforced by masking, not
+    a ring), so one layout serves full and sliding-window attention."""
+    kv = (num_blocks, block_size, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "k": jax.ShapeDtypeStruct(kv, dtype),
+        "v": jax.ShapeDtypeStruct(kv, dtype),
+    }
+
+
 CACHE_AXES = {
     "k": ("cache_batch", "cache_seq", "cache_kv", "cache_hd"),
     "v": ("cache_batch", "cache_seq", "cache_kv", "cache_hd"),
 }
 
+PAGED_LEAF_MASK = {"k": True, "v": True}
+
 
 def attention_block(
     params, x, cfg, *, positions, cache=None, index=None,
     window=None, causal=True, use_rope=True, kv_x=None, kv_valid=None,
-    cross=False, cache_len=None,
+    cross=False, cache_len=None, block_tables=None, ring=True,
 ):
     """Returns (y, new_cache).
 
     * train/prefill: ``cache is None`` -> self-attention over x; a fresh cache
       holding the (window-truncated, ring-arranged) K/V is returned.
+      ``ring=False`` (paged prefill) keeps FULL-length K/V even under SWA —
+      the paged pool stores absolute positions and masks the window instead.
     * decode: ``cache`` given, ``index`` is the absolute position of the new
-      token; Sq == 1.
+      token; Sq == 1.  With ``block_tables`` ([B, W] int32) the cache is the
+      pooled ``[num_blocks, block_size, Kh, D]`` layout and reads/writes go
+      through the table (:func:`_paged_decode_attend`).
+    * chunked prefill (``cache`` given, ``index is None``): x is the TAIL of
+      a prompt whose first ``P`` positions are already cached (prefix-cache
+      hit); attends over prefix+tail, returns tail K/V only.
     * cross-attention (``cross=True``): ``kv_x`` is the encoder output (its
       K/V are cached once at prefill; decode reads the cache position-free).
     """
@@ -269,7 +290,12 @@ def attention_block(
             causal=is_causal, window=window, kv_valid=kv_valid,
             block_kv=cfg.attn_block_kv, flash=cfg.use_flash_kernel,
         )
-        new_cache = _build_cache(k, v, window, cache_len)
+        new_cache = _build_cache(k, v, window if ring else None, cache_len)
+    elif index is None:
+        o, new_cache = _chunk_attend(q, k, v, cache, positions, window, cfg)
+    elif block_tables is not None:
+        o, new_cache = _paged_decode_attend(q, k, v, cache, index,
+                                            block_tables, window, cfg)
     else:
         o, new_cache = _decode_attend(q, k, v, cache, index, window)
     y = _out_proj(params, o, accum_dtype(cfg))
@@ -344,3 +370,70 @@ def _decode_attend(q, k_new, v_new, cache, index, window):
         window=window, kv_valid=kv_valid, block_kv=0,
     )
     return o, {"k": kc, "v": vc}
+
+
+def _chunk_attend(q, k_new, v_new, prefix, positions, window, cfg):
+    """Tail prefill against a resident prefix (prefix-cache hit).
+
+    prefix: {"k","v"} of shape [B, P, Kh, D] — the gathered prefix blocks.
+    positions: static numpy [S] = P + arange(S) (absolute tail positions).
+    Attends q over prefix ++ tail with the standard causal/window masks and
+    returns ONLY the tail K/V (the engine scatters them into fresh blocks;
+    the prefix blocks are shared and must never be rewritten).
+    """
+    P = prefix["k"].shape[1]
+    kc = jnp.concatenate([prefix["k"].astype(k_new.dtype), k_new], axis=1)
+    vc = jnp.concatenate([prefix["v"].astype(v_new.dtype), v_new], axis=1)
+    kv_pos = np.arange(P + k_new.shape[1], dtype=np.int32)
+    o = multi_head_attention(
+        q, kc, vc, q_pos=positions, kv_pos=kv_pos, causal=True,
+        window=window, block_kv=cfg.attn_block_kv,
+    )
+    return o, {"k": k_new, "v": v_new}
+
+
+def _paged_decode_attend(q, k_new, v_new, cache, index, block_tables, window, cfg):
+    """Single-token decode against the pooled block cache.
+
+    cache: {"k","v"} [num_blocks, block_size, Kh, D] (no batch dim);
+    block_tables: [B, W] int32 (entry w maps positions [w*bs, (w+1)*bs));
+    index: [B] int32 absolute position of the incoming token.
+
+    Positions are ABSOLUTE (block w holds positions w*bs..), so full and
+    sliding-window attention share the layout — SWA is a mask, not a ring.
+    The write lands in the slot's uniquely-owned tail block (prefix-shared
+    blocks are read-only by construction: the first decode position is
+    always past the last shared block).  Retired slots point at the NULL
+    block 0, so their frozen writes scribble garbage nobody reads.
+    """
+    kp, vp = cache["k"], cache["v"]
+    nb, bs = kp.shape[0], kp.shape[1]
+    B, W = block_tables.shape
+    index = jnp.asarray(index, jnp.int32)
+
+    # ---- write: one token per slot at table[b, index//bs], offset index%bs
+    blk = jnp.take_along_axis(block_tables, (index // bs)[:, None], axis=1)[:, 0]
+    dest = blk * bs + index % bs  # [B] flat positions, unique per live slot
+    kf = kp.reshape((nb * bs,) + kp.shape[2:])
+    vf = vp.reshape((nb * bs,) + vp.shape[2:])
+    kf = kf.at[dest].set(k_new[:, 0].astype(kf.dtype))
+    vf = vf.at[dest].set(v_new[:, 0].astype(vf.dtype))
+    kp, vp = kf.reshape(kp.shape), vf.reshape(vp.shape)
+
+    # ---- read: gather the slot's blocks into its logical [W*bs] view
+    kg = kp[block_tables].reshape(B, W * bs, *kp.shape[2:])
+    vg = vp[block_tables].reshape(B, W * bs, *vp.shape[2:])
+    kv_pos = jnp.broadcast_to(jnp.arange(W * bs, dtype=jnp.int32)[None], (B, W * bs))
+    kv_valid = kv_pos <= index[:, None]
+    q_pos = index[:, None]  # [B, Sq=1]
+    if getattr(cfg, "use_paged_kernel", False):
+        from repro.kernels.paged_attention import ops as pa_ops
+
+        o = pa_ops.paged_attention({"k": kp, "v": vp}, q, block_tables, index,
+                                   window=window)
+    else:
+        o = multi_head_attention(
+            q, kg, vg, q_pos=q_pos, kv_pos=kv_pos, causal=True,
+            window=window, kv_valid=kv_valid, block_kv=0,
+        )
+    return o, {"k": kp, "v": vp}

@@ -101,8 +101,30 @@ def decoder_cache_axes():
     return {"self": {"k": kv, "v": kv}, "cross": {"k": xkv, "v": xkv}}
 
 
+def decoder_paged_cache_spec(cfg, num_slots, num_blocks, block_size, dtype):
+    """Self-attention K/V pooled; cross-attention K/V stays slot-indexed
+    (written once at prefill, read-only — nothing to page)."""
+    n = cfg.num_layers
+    self_kv = (n, num_blocks, block_size, cfg.num_kv_heads, cfg.head_dim)
+    cross_kv = (n, num_slots, cfg.encoder_seq, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        "self": {
+            "k": jax.ShapeDtypeStruct(self_kv, dtype),
+            "v": jax.ShapeDtypeStruct(self_kv, dtype),
+        },
+        "cross": {
+            "k": jax.ShapeDtypeStruct(cross_kv, dtype),
+            "v": jax.ShapeDtypeStruct(cross_kv, dtype),
+        },
+    }
+
+
+def decoder_paged_leaf_mask():
+    return {"self": {"k": True, "v": True}, "cross": {"k": False, "v": False}}
+
+
 def decode_stack(params, x, cfg, *, positions, enc_out=None, caches=None, index=None,
-                 mode="train", cache_len=None):
+                 mode="train", cache_len=None, block_tables=None):
     """Decoder layers.  Returns (x, new_caches_or_None)."""
 
     if mode == "train":
@@ -155,7 +177,7 @@ def decode_stack(params, x, cfg, *, positions, enc_out=None, caches=None, index=
         h = apply_norm(p["ln1"], x, cfg.norm_eps)
         y, self_c = attn_mod.attention_block(
             p["attn"], h, cfg, positions=positions, cache=c["self"], index=index,
-            causal=True, use_rope=False,
+            causal=True, use_rope=False, block_tables=block_tables,
         )
         x = x + y
         h = apply_norm(p["lnx"], x, cfg.norm_eps)

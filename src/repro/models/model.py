@@ -106,14 +106,14 @@ class DecoderLM(_Base):
             x = jnp.concatenate([patches, x], axis=1)
         return x
 
-    def forward(self, params, batch, mode="train", cache_len=None):
+    def forward(self, params, batch, mode="train", cache_len=None, ring=True):
         """-> (logits, caches_or_None, aux)."""
         cfg = self.cfg
         x = self._embed_inputs(params, batch)
         positions = np.arange(x.shape[1], dtype=np.int32)
         x, caches, aux = tf_mod.apply_stack(
             params["stack"], x, cfg, positions=positions, mode=mode,
-            cache_len=cache_len,
+            cache_len=cache_len, ring=ring,
         )
         x = apply_norm(params["final_norm"], x, cfg.norm_eps)
         logits = lm_logits(params["embed"], x, cfg)
@@ -137,16 +137,42 @@ class DecoderLM(_Base):
         return loss, metrics
 
     # ------------------------------------------------------------------
-    def prefill(self, params, batch, max_len=None):
+    def prefill(self, params, batch, max_len=None, ring=True):
         """-> (caches, last_logits [B, V]).  ``max_len`` sets the cache
-        capacity (defaults to the prompt length)."""
+        capacity (defaults to the prompt length).  ``ring=False`` keeps
+        full-length K/V even under SWA (paged prefill: the pool stores
+        absolute positions and the window is enforced by masking)."""
         logits, caches, _ = self.forward(params, batch, mode="prefill",
-                                         cache_len=max_len)
+                                         cache_len=max_len, ring=ring)
         return caches, logits[:, -1]
 
-    def decode_step(self, params, caches, tokens, index):
+    def prefill_chunk(self, params, batch, prefix, start: int):
+        """Tail prefill after a prefix-cache hit: only ``batch["tokens"]``
+        (the prompt TAIL, positions start..start+S-1) runs through the
+        stack; ``prefix`` carries the gathered K/V of positions [0, start).
+        -> (tail_caches [layers, B, S, ...], last_logits [B, V])."""
+        cfg = self.cfg
+        assert cfg.family in ("dense", "moe"), \
+            "chunked prefill requires attention-only caches"
+        tokens = batch["tokens"]
+        x = embed_tokens(params["embed"], tokens, self.dtype)
+        positions = np.arange(start, start + tokens.shape[1], dtype=np.int32)
+        x, tail_caches, _ = tf_mod.apply_stack(
+            params["stack"], x, cfg, positions=positions, caches=prefix,
+            index=None, mode="decode",
+        )
+        x = apply_norm(params["final_norm"], x, cfg.norm_eps)
+        logits = lm_logits(params["embed"], x, cfg)
+        if cfg.logit_softcap:
+            c = cfg.logit_softcap
+            logits = jnp.tanh(logits / c) * c
+        return tail_caches, logits[:, -1]
+
+    def decode_step(self, params, caches, tokens, index, block_tables=None):
         """tokens: [B] int32; index: int32 absolute position — scalar
-        (lockstep batch) or [B] (per-slot positions, continuous batching)."""
+        (lockstep batch) or [B] (per-slot positions, continuous batching).
+        ``block_tables`` ([B, W] int32) switches attention layers to the
+        pooled paged cache layout."""
         cfg = self.cfg
         x = embed_tokens(params["embed"], tokens[:, None], self.dtype,
                          method=cfg.decode_embed_lookup)
@@ -154,7 +180,7 @@ class DecoderLM(_Base):
         positions = index[:, None] if index.ndim else jnp.full((1,), index, jnp.int32)
         x, new_caches, _ = tf_mod.apply_stack(
             params["stack"], x, cfg, positions=positions, caches=caches,
-            index=index, mode="decode",
+            index=index, mode="decode", block_tables=block_tables,
         )
         x = apply_norm(params["final_norm"], x, cfg.norm_eps)
         logits = lm_logits(params["embed"], x, cfg)
@@ -169,6 +195,21 @@ class DecoderLM(_Base):
 
     def cache_axes(self):
         return tf_mod.stack_cache_axes(self.cfg)
+
+    def paged_cache_specs(self, num_slots: int, num_blocks: int, block_size: int):
+        """Cache tree with attention K/V pooled into ``num_blocks`` blocks;
+        recurrent state (ssm/rec leaves) stays slot-indexed."""
+        return tf_mod.stack_paged_cache_spec(
+            self.cfg, num_slots, num_blocks, block_size, self.dtype)
+
+    def paged_leaf_mask(self):
+        """Bool tree: True where the cache leaf is block-pooled."""
+        return tf_mod.stack_paged_leaf_mask(self.cfg, self.dtype)
+
+    def fully_paged(self) -> bool:
+        """True when EVERY cache leaf is pooled — the precondition for
+        prefix reuse (a prefix hit must restore the complete layer state)."""
+        return all(jax.tree.leaves(self.paged_leaf_mask()))
 
     def batch_specs(self, shape: ShapeSpec) -> dict:
         cfg = self.cfg
@@ -227,19 +268,19 @@ class EncDecLM(_Base):
         metrics["loss"] = xent
         return xent, metrics
 
-    def prefill(self, params, batch, max_len=None):
+    def prefill(self, params, batch, max_len=None, ring=True):
         logits, caches, _ = self.forward(params, batch, mode="prefill",
                                          cache_len=max_len)
         return caches, logits[:, -1]
 
-    def decode_step(self, params, caches, tokens, index):
+    def decode_step(self, params, caches, tokens, index, block_tables=None):
         cfg = self.cfg
         index = jnp.asarray(index, jnp.int32)
         positions = index[:, None] if index.ndim else jnp.full((1,), index, jnp.int32)
         x = encdec_mod.decoder_embed(params, tokens[:, None], positions, cfg, self.dtype)
         x, new_caches = encdec_mod.decode_stack(
             params, x, cfg, positions=positions, caches=caches, index=index,
-            mode="decode",
+            mode="decode", block_tables=block_tables,
         )
         logits = encdec_mod.decoder_logits(params, x, cfg)
         return new_caches, logits[:, 0]
@@ -249,6 +290,16 @@ class EncDecLM(_Base):
 
     def cache_axes(self):
         return encdec_mod.decoder_cache_axes()
+
+    def paged_cache_specs(self, num_slots: int, num_blocks: int, block_size: int):
+        return encdec_mod.decoder_paged_cache_spec(
+            self.cfg, num_slots, num_blocks, block_size, self.dtype)
+
+    def paged_leaf_mask(self):
+        return encdec_mod.decoder_paged_leaf_mask()
+
+    def fully_paged(self) -> bool:
+        return False  # cross-attention K/V is slot-resident
 
     def batch_specs(self, shape: ShapeSpec) -> dict:
         cfg = self.cfg

@@ -156,12 +156,60 @@ def stack_cache_axes(cfg):
     return axes
 
 
+# ---- paged variants: attention K/V lives in a shared block pool; ssm/rec
+# state stays per-slot (it is O(1) per request — nothing to page) ----
+
+
+def _layer_paged_spec(cfg, kind, num_slots, num_blocks, block_size, dtype):
+    if kind in ("ssm", "rec"):
+        return layer_cache_spec(cfg, kind, num_slots, 0, dtype)
+    return attn_mod.paged_cache_spec(cfg, num_blocks, block_size, dtype)
+
+
+def _layer_paged_mask(cfg, kind, dtype):
+    if kind in ("ssm", "rec"):
+        return jax.tree.map(lambda _: False, layer_cache_spec(cfg, kind, 1, 1, dtype))
+    return dict(attn_mod.PAGED_LEAF_MASK)
+
+
+def _per_unit(cfg, kinds, fn):
+    if len(kinds) == 1:
+        return fn(kinds[0])
+    return {f"sub{i}": fn(k) for i, k in enumerate(kinds)}
+
+
+def stack_paged_cache_spec(cfg, num_slots, num_blocks, block_size, dtype):
+    """Like :func:`stack_cache_spec` but with pooled attention storage:
+    attn leaves ``[layers, num_blocks, block_size, Kh, D]``, recurrent
+    leaves ``[layers, num_slots, ...]`` (slot-indexed as before)."""
+    kinds = unit_kinds(cfg)
+    nb, rem = scan_counts(cfg)
+    mk = lambda k: _layer_paged_spec(cfg, k, num_slots, num_blocks, block_size, dtype)
+    spec = {"units": _stack_spec(_per_unit(cfg, kinds, mk), nb)}
+    if rem:
+        spec["tail"] = _stack_spec(_per_unit(cfg, kinds[:rem], mk), 1)
+    return spec
+
+
+def stack_paged_leaf_mask(cfg, dtype):
+    """Bool tree matching the cache structure: True = leaf is pooled
+    (block-addressed), False = leaf stays slot-indexed."""
+    kinds = unit_kinds(cfg)
+    _, rem = scan_counts(cfg)
+    mk = lambda k: _layer_paged_mask(cfg, k, dtype)
+    mask = {"units": _per_unit(cfg, kinds, mk)}
+    if rem:
+        mask["tail"] = _per_unit(cfg, kinds[:rem], mk)
+    return mask
+
+
 # ----------------------------------------------------------------------
 # Apply
 # ----------------------------------------------------------------------
 
 
-def apply_layer(params, x, cfg, kind, *, positions, cache, index, cache_len=None):
+def apply_layer(params, x, cfg, kind, *, positions, cache, index, cache_len=None,
+                block_tables=None, ring=True):
     """One layer. Returns (x, new_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
     if kind == "ssm":
@@ -177,7 +225,7 @@ def apply_layer(params, x, cfg, kind, *, positions, cache, index, cache_len=None
         y, new_cache = attn_mod.attention_block(
             params["attn"], h, cfg, positions=positions, cache=cache,
             index=index, window=window, causal=cfg.causal, use_rope=cfg.use_rope,
-            cache_len=cache_len,
+            cache_len=cache_len, block_tables=block_tables, ring=ring,
         )
     x = x + y
     x = constrain(x, ("act_batch", "act_seq_resid", "act_embed"))
@@ -192,18 +240,20 @@ def apply_layer(params, x, cfg, kind, *, positions, cache, index, cache_len=None
     return x, new_cache, aux
 
 
-def apply_unit(params, x, cfg, kinds, *, positions, cache, index, cache_len=None):
+def apply_unit(params, x, cfg, kinds, *, positions, cache, index, cache_len=None,
+               block_tables=None, ring=True):
     aux = jnp.zeros((), jnp.float32)
     if len(kinds) == 1:
         return apply_layer(params, x, cfg, kinds[0], positions=positions,
-                           cache=cache, index=index, cache_len=cache_len)
+                           cache=cache, index=index, cache_len=cache_len,
+                           block_tables=block_tables, ring=ring)
     new_cache = {}
     for i, kind in enumerate(kinds):
         sub = f"sub{i}"
         x, c, a = apply_layer(
             params[sub], x, cfg, kind, positions=positions,
             cache=None if cache is None else cache[sub], index=index,
-            cache_len=cache_len,
+            cache_len=cache_len, block_tables=block_tables, ring=ring,
         )
         new_cache[sub] = c
         aux = aux + a
@@ -218,8 +268,14 @@ _REMAT_POLICIES = {
 
 
 def apply_stack(params, x, cfg, *, positions, caches=None, index=None, mode="train",
-                cache_len=None):
-    """Run the whole stack.  Returns (x, new_caches_or_None, aux)."""
+                cache_len=None, block_tables=None, ring=True):
+    """Run the whole stack.  Returns (x, new_caches_or_None, aux).
+
+    ``block_tables`` routes decode-time attention through the pooled paged
+    cache; ``ring=False`` makes prefill keep full-length K/V under SWA
+    (paged storage holds absolute positions).  "decode" mode also serves
+    chunked tail prefill: caches given, ``index=None``, Sq > 1.
+    """
     kinds = unit_kinds(cfg)
     nb, rem = scan_counts(cfg)
 
@@ -241,17 +297,18 @@ def apply_stack(params, x, cfg, *, positions, caches=None, index=None, mode="tra
                 xc, auxc = carry
                 xo, cache_out, a = apply_unit(p, xc, cfg, sub_kinds, positions=positions,
                                               cache=None, index=index,
-                                              cache_len=cache_len)
+                                              cache_len=cache_len, ring=ring)
                 return (xo, auxc + a), cache_out
 
             (x, aux), caches_out = jax.lax.scan(body, (x, aux), stack_params)
             return x, caches_out, aux
-        # decode
+        # decode (and chunked prefill: index=None, caches = gathered prefix)
         def body(carry, inp):
             xc, auxc = carry
             p, c = inp
             xo, cache_out, a = apply_unit(p, xc, cfg, sub_kinds, positions=positions,
-                                          cache=c, index=index, cache_len=cache_len)
+                                          cache=c, index=index, cache_len=cache_len,
+                                          block_tables=block_tables)
             return (xo, auxc + a), cache_out
 
         (x, aux), caches_out = jax.lax.scan(body, (x, aux), (stack_params, stack_caches))

@@ -1,10 +1,13 @@
-"""Serving stack: continuous-batching engine over a fixed-shape slot pool.
+"""Serving stack: continuous batching over a paged KV-block pool.
 
-    queue.py      — Request lifecycle + FIFO admission queue
-    scheduler.py  — slot pool bookkeeping, every decision traced
-    engine.py     — ContinuousServeEngine (slot-pooled caches, on-device
-                    sampling) + the legacy fixed-batch ServeEngine
+    queue.py      — Request lifecycle + FIFO admission queue (preemption-aware)
+    block_pool.py — ref-counted fixed-size KV blocks, hash-based prefix reuse
+    scheduler.py  — slot + block admission bookkeeping, every decision traced
+    engine.py     — ContinuousServeEngine (paged caches, prefix-hit tail
+                    prefill, preemption-by-eviction, on-device sampling) +
+                    the contiguous fixed-batch ServeEngine oracle
 """
+from repro.serve.block_pool import NULL_BLOCK, BlockPool  # noqa: F401
 from repro.serve.engine import ContinuousServeEngine, ServeEngine  # noqa: F401
 from repro.serve.queue import Request, RequestQueue, RequestState  # noqa: F401
 from repro.serve.scheduler import Scheduler  # noqa: F401

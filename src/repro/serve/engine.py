@@ -1,29 +1,35 @@
-"""Serving engines: continuous batching over a slot pool + legacy fixed batch.
+"""Serving engines: continuous batching over a paged KV pool + legacy fixed batch.
 
 :class:`ContinuousServeEngine` (the production path) admits variable-length
 requests from a :class:`~repro.serve.queue.RequestQueue` into a fixed pool of
-``num_slots`` decode slots (static shapes throughout — cache buffers are
-allocated once and requests move through them, the TPU-friendly discipline).
-Each engine iteration interleaves:
+``num_slots`` decode slots whose attention K/V lives in a shared **paged
+block pool** (``serve/block_pool.py``): fixed-size blocks, ref-counted,
+content-hashed for prefix reuse.  Slot count stops being the memory bound —
+admission is gated on *block availability*, so many short requests can share
+the HBM budget one worst-case contiguous slot layout would reserve.  Each
+engine iteration interleaves:
 
-  1. *admission* — the scheduler pops queued requests into free slots; each
-     admitted request is prefilled at its own prompt length and its caches
-     are scattered into the pool at the slot index;
-  2. *decode* — ONE fused jit call advances every slot a token: a per-slot
-     ``vmap`` of the model's single-token decode (each slot carries its own
-     absolute position) plus on-device sampling, so the host loop performs a
-     single device sync per **iteration** (the batched token fetch), not per
-     token — the seed engine's loop performed two per token;
-  3. *retirement* — finished requests free their slots; per-request TTFT /
-     TPOT counters are stamped into the trace.
+  1. *admission* — the scheduler pops queued requests while enough
+     free/evictable blocks exist; prompt blocks already resident in the
+     prefix cache are ref-bumped and skipped, only the tail is prefilled
+     (chunked prefill against the gathered prefix);
+  2. *decode* — ONE fused jit call advances every slot a burst of tokens
+     through the paged attention path (per-slot block tables, absolute
+     positions); fresh blocks are allocated just-in-time before each burst,
+     and when the pool runs dry the latest-admitted request is *preempted*
+     (blocks freed, request requeued for recompute-style resume);
+  3. *retirement* — finished requests free their slots and decref their
+     blocks; prompt blocks stay cached (evictable) for future prefix hits.
 
-Every scheduler decision emits tracer events (queue depth, slot occupancy,
-per-slot occupant, admit/retire markers) so served traffic is analyzable in
+Every scheduler AND allocator decision emits tracer events (queue depth,
+slot occupancy, blocks free/cached/active, prefix-hit tokens, evictions,
+preemptions) so served traffic — and its memory pressure — is analyzable in
 Paraver exactly like training, and ``flush_every`` streams full record
 buffers to disk mid-run via ``Tracer.flush`` (EV_FLUSH-bracketed).
 
-:class:`ServeEngine` keeps the original fixed-batch ``generate`` API (all
-requests same length, lockstep decode) with sampling fused on device.
+:class:`ServeEngine` keeps the original fixed-batch ``generate`` API over
+per-request contiguous caches — it is the *contiguous equivalence oracle*
+the paged engine is tested against (greedy decode must match bit-for-bit).
 """
 from __future__ import annotations
 
@@ -36,35 +42,32 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import events as ev
+from repro.core.sampling import sample_logits
 from repro.core.tracer import Tracer
 from repro.models.model import build_model
+from repro.serve.block_pool import NULL_BLOCK, BlockPool
 from repro.serve.queue import Request, RequestQueue, _now_ns
 from repro.serve.scheduler import Scheduler
 
 EV_TOKENS_DECODED = 84_001  # user event: tokens decoded so far (one run)
 
 
-def _sample_logits(logits, key, temperature: float, vocab: int):
-    """Greedy or temperature sampling over the unpadded vocab, on device."""
-    lg = logits[..., :vocab]
-    if temperature <= 0.0:
-        return jnp.argmax(lg, axis=-1).astype(jnp.int32)
-    return jax.random.categorical(key, lg / temperature, axis=-1).astype(jnp.int32)
-
-
 class ContinuousServeEngine:
-    """Continuous-batching engine over a fixed-shape slot pool."""
+    """Continuous-batching engine over a paged KV-block pool."""
 
     def __init__(self, cfg: ModelConfig, params, *, num_slots: int, max_len: int,
-                 tracer: Tracer | None = None, temperature: float = 0.0,
-                 seed: int = 0, max_prefills_per_iter: int = 1,
-                 max_decode_burst: int = 8, flush_every: int = 0,
-                 flush_base=None):
+                 block_size: int = 16, num_blocks: int | None = None,
+                 prefix_cache: bool = True, tracer: Tracer | None = None,
+                 temperature: float = 0.0, seed: int = 0,
+                 max_prefills_per_iter: int = 1, max_decode_burst: int = 8,
+                 flush_every: int = 0, flush_base=None):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.params = params
         self.num_slots = int(num_slots)
-        self.capacity = int(max_len)
+        self.block_size = bs = int(block_size)
+        self.capacity = -(-int(max_len) // bs) * bs  # block-aligned
+        self.blocks_per_slot = self.capacity // bs
         self.tracer = tracer
         self.temperature = float(temperature)  # fixed per engine (jit-traced)
         self.max_decode_burst = max(1, int(max_decode_burst))
@@ -79,23 +82,64 @@ class ContinuousServeEngine:
                             ev.SERVE_CTR_LABELS[ev.EV_TOKENS_TOTAL])
             tracer.register(ev.EV_REQ_TTFT_US, ev.SERVE_CTR_LABELS[ev.EV_REQ_TTFT_US])
             tracer.register(ev.EV_REQ_TPOT_US, ev.SERVE_CTR_LABELS[ev.EV_REQ_TPOT_US])
+            tracer.register(ev.EV_PREFIX_HIT_TOKENS,
+                            ev.SERVE_CTR_LABELS[ev.EV_PREFIX_HIT_TOKENS])
+
+        # --- paged pool: attention K/V is block-addressed, recurrent state
+        # (ssm/rec/cross leaves) stays slot-indexed ---
+        self._paged_mask = self.model.paged_leaf_mask()
+        self._has_paged = any(jax.tree.leaves(self._paged_mask))
+        if num_blocks is None:
+            # default budget == the old contiguous layout (one full-capacity
+            # region per slot) + the reserved NULL block; floor keeps one
+            # max-length request admissible even with a single slot
+            num_blocks = max(self.num_slots * self.blocks_per_slot + 1,
+                             self.blocks_per_slot + 2)
+        self.num_blocks = int(num_blocks)
+        if self._has_paged and self.num_blocks < self.blocks_per_slot + 2:
+            raise ValueError(
+                f"num_blocks {self.num_blocks} cannot hold one max-length "
+                f"request ({self.blocks_per_slot} blocks + null + headroom)")
+        self.pool = (BlockPool(self.num_blocks, bs, tracer=tracer)
+                     if self._has_paged else None)
+        # prefix reuse needs every leaf pooled AND token-only prompts (vlm
+        # patches would shift block contents off the token-hash grid)
+        self.prefix_cache = (bool(prefix_cache) and self.model.fully_paged()
+                             and cfg.family in ("dense", "moe"))
 
         self.queue = RequestQueue()
-        self.scheduler = Scheduler(num_slots, self.queue, tracer=tracer,
-                                   max_prefills_per_iter=max_prefills_per_iter)
+        self.scheduler = Scheduler(
+            self.num_slots, self.queue, tracer=tracer,
+            max_prefills_per_iter=max_prefills_per_iter,
+            admission=self if self.pool is not None else None)
 
-        # --- device state: slot-pooled caches + per-slot token/position ---
-        specs = self.model.cache_specs(self.num_slots, self.capacity)
+        # --- device state: pooled caches + per-slot registers ---
+        specs = self.model.paged_cache_specs(self.num_slots, self.num_blocks, bs)
         self._caches = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
         self._tok = jnp.zeros((self.num_slots,), jnp.int32)
         self._idx = jnp.zeros((self.num_slots,), jnp.int32)
         self._active = np.zeros((self.num_slots,), bool)  # host-side mirror
         self._active_dev = jnp.asarray(self._active)
         self._active_dirty = False
+        # per-slot block tables; entry w maps positions [w*bs, (w+1)*bs).
+        # NULL rows make stale frozen-slot writes land in the garbage block.
+        self._tables = np.full((self.num_slots, self.blocks_per_slot),
+                               NULL_BLOCK, np.int32)
+        self._tables_dev = jnp.asarray(self._tables)
+        self._tables_dirty = False
+        self._slot_blocks: list[list[int]] = [[] for _ in range(self.num_slots)]
+        # prefill-time start position per slot (request input_ids() grows as
+        # generated tokens drain — decode block math needs the pinned start)
+        self._slot_start = np.zeros((self.num_slots,), np.int64)
+        self._admit_plan = None  # (req, hits, hashes): can_admit -> on_admit
+        self._req_hashes: dict[int, list[int]] = {}  # rid -> prompt hash chain
+        self._chain_memo: dict[int, tuple[int, list[int]]] = {}  # rid -> (len, chain)
+        self._preempted: list[Request] = []  # requeue deferred past token drain
         self._key = jax.random.PRNGKey(seed)
         self._dispatches = 0  # burst dispatch counter (drives the RNG stream)
 
-        self._prefill = jax.jit(self._prefill_impl)
+        self._prefill = jax.jit(self._prefill_impl, static_argnames=("cache_len",))
+        self._chunk = jax.jit(self._chunk_impl, static_argnames=("start", "cache_len"))
         # tok/idx buffers are NOT donated: the pipelined fetch of the previous
         # burst's tokens may still reference them
         self._admit = jax.jit(self._admit_impl, donate_argnums=(0,))
@@ -104,45 +148,77 @@ class ContinuousServeEngine:
 
         # --- run statistics ---
         self.stats = {"iterations": 0, "prefills": 0, "tokens_decoded": 0,
+                      "prefill_tokens": 0, "prefix_hit_tokens": 0,
+                      "preemptions": 0, "peak_active": 0, "peak_blocks": 0,
                       "host_syncs": 0, "decode_syncs": 0, "seconds": 0.0}
 
     # ------------------------------------------------------------------
     # jitted kernels
     # ------------------------------------------------------------------
-    def _prefill_impl(self, params, batch, key):
-        """Prefill a group of same-shape requests ([k, L] tokens) ->
-        (caches for k slots, first sampled tokens [k]).  Sampling happens
-        on device."""
+    def _prefill_impl(self, params, batch, key, *, cache_len):
+        """Cold prefill of a same-shape group ([k, L] tokens) at block-aligned
+        cache length -> (caches for k slots, first sampled tokens [k]).
+        ring=False: SWA archs keep FULL-length K/V (the pool stores absolute
+        positions; the window is a mask, not a ring)."""
         caches, last_logits = self.model.prefill(params, batch,
-                                                 max_len=self.capacity)
-        tok = _sample_logits(last_logits, key, self.temperature,
-                             self.cfg.vocab_size)
+                                                 max_len=cache_len, ring=False)
+        tok = sample_logits(last_logits, key, self.temperature,
+                            self.cfg.vocab_size)
         return caches, tok
 
-    def _admit_impl(self, pool, new, tok_buf, idx_buf, slots, first_toks, start_idxs):
-        """Scatter a prefilled group's caches into slots ``slots`` of the pool
-        and seed their token/position registers.  Cache leaves are
-        [layers, batch, ...] — batch is axis 1."""
-        pool = jax.tree.map(
-            lambda pl, nw: pl.at[:, slots].set(nw.astype(pl.dtype)),
-            pool, new,
-        )
+    def _chunk_impl(self, params, pool, batch, prefix_ids, key, *, start, cache_len):
+        """Prefix-hit prefill: gather the resident prefix blocks
+        (``prefix_ids`` [k, m]) into [k, start, ...] per layer, run only the
+        prompt TAIL through the stack, and return block-aligned tail K/V
+        (padded to ``cache_len - start``) + first sampled tokens."""
+        prefix = jax.tree.map(
+            lambda leaf: leaf[:, prefix_ids].reshape(
+                leaf.shape[0], prefix_ids.shape[0], start, *leaf.shape[3:]),
+            pool)
+        tail, last_logits = self.model.prefill_chunk(params, batch, prefix,
+                                                     start=start)
+        pad = cache_len - start - batch["tokens"].shape[1]
+        tail = jax.tree.map(
+            lambda t: jnp.pad(t, ((0, 0), (0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 3)),
+            tail)
+        tok = sample_logits(last_logits, key, self.temperature,
+                            self.cfg.vocab_size)
+        return tail, tok
+
+    def _admit_impl(self, pool, new, tok_buf, idx_buf, slots, block_ids,
+                    first_toks, start_idxs):
+        """Scatter a prefilled group's caches into the pool and seed the
+        slots' token/position registers.  Paged leaves land in their blocks
+        (``block_ids`` [k, nblk]); slot-indexed leaves land at ``slots``.
+        Leaves are [layers, k|num_blocks, ...] — group axis is 1."""
+        bs = self.block_size
+        nblk = block_ids.shape[1]
+
+        def scatter(pl, nw, paged):
+            if paged:
+                nw = nw.reshape(nw.shape[0], nw.shape[1] * nblk, bs, *nw.shape[3:])
+                return pl.at[:, block_ids.reshape(-1)].set(nw.astype(pl.dtype))
+            return pl.at[:, slots].set(nw.astype(pl.dtype))
+
+        pool = jax.tree.map(scatter, pool, new, self._paged_mask)
         return (pool, tok_buf.at[slots].set(first_toks),
                 idx_buf.at[slots].set(start_idxs))
 
-    def _burst_impl(self, params, caches, tok, idx, active, key, *, steps):
-        """``steps`` decode iterations over the whole pool in ONE executable
-        (amortizes the per-dispatch overhead): each step is a batched decode
-        with per-slot absolute positions (the model's vector-index path) +
-        on-device sampling; inactive slots are frozen (their token/index
-        don't advance).  Returns the [steps, num_slots] token block for a
-        single host fetch."""
+    def _burst_impl(self, params, caches, tok, idx, active, tables, key, *, steps):
+        """``steps`` decode iterations over the whole pool in ONE executable:
+        each step is a batched paged decode (per-slot block tables, per-slot
+        absolute positions) + on-device sampling; inactive slots are frozen
+        (their token/index don't advance; their stale writes land in blocks
+        they still own, or the NULL block once retired).  Returns the
+        [steps, num_slots] token block for a single host fetch."""
+        bt = tables if self._has_paged else None
 
         def body(carry, k):
             caches, tok, idx = carry
-            new_caches, logits = self.model.decode_step(params, caches, tok, idx)
+            new_caches, logits = self.model.decode_step(
+                params, caches, tok, idx, block_tables=bt)
             sub = key if self.temperature <= 0.0 else jax.random.fold_in(key, k)
-            nxt = _sample_logits(logits, sub, self.temperature, self.cfg.vocab_size)
+            nxt = sample_logits(logits, sub, self.temperature, self.cfg.vocab_size)
             tok = jnp.where(active, nxt, tok)
             idx = jnp.where(active, idx + 1, idx)
             return (new_caches, tok, idx), tok
@@ -152,16 +228,87 @@ class ContinuousServeEngine:
         return caches, tok, idx, toks
 
     # ------------------------------------------------------------------
-    # request intake
+    # admission policy (Scheduler callback): blocks, not slots, gate entry
     # ------------------------------------------------------------------
     def _start_index(self, req: Request) -> int:
-        return req.prompt_len + (self.cfg.num_patches if self.cfg.family == "vlm" else 0)
+        patches = self.cfg.num_patches if self.cfg.family == "vlm" else 0
+        return len(req.input_ids()) + patches
 
+    def _lookup_hits(self, req: Request) -> tuple[list[int], list[int]]:
+        """(prefix-hit blocks, full hash chain) for this request.  The chain
+        is content-determined and memoized per (rid, input length) — a
+        blocked queue head re-walks residency every iteration without
+        re-hashing its whole prompt; the plan cache covers the atomic
+        can_admit -> on_admit pair, and the chain survives to registration."""
+        if not self.prefix_cache or req.extras:
+            return [], []
+        plan = self._admit_plan
+        if plan is not None and plan[0] is req:
+            return plan[1], plan[2]
+        ids = req.input_ids()
+        memo = self._chain_memo.get(req.rid)
+        if memo is None or memo[0] != len(ids):
+            memo = (len(ids), self.pool.hash_chain(ids))
+            self._chain_memo[req.rid] = memo
+        hashes = memo[1]
+        hits = self.pool.resolve_hits(hashes, len(ids))
+        self._admit_plan = (req, hits, hashes)
+        return hits, hashes
+
+    def can_admit(self, req: Request) -> bool:
+        """Enough free/evictable blocks for this prompt (+1 decode headroom)?
+        Prefix-hit blocks are discounted — but hits that are currently
+        evictable consume availability when pinned, so they count back in."""
+        pool = self.pool
+        w0 = pool.blocks_for(self._start_index(req))
+        hits, _ = self._lookup_hits(req)
+        evictable_hits = sum(1 for b in hits if pool.ref(b) == 0)
+        need = (w0 - len(hits)) + evictable_hits + 1
+        ok = pool.available() >= need
+        if not ok:
+            # the plan must not outlive this can_admit -> on_admit pair:
+            # by the next attempt, evictions may have invalidated the hits
+            self._admit_plan = None
+        return ok
+
+    def on_admit(self, slot: int, req: Request):
+        """Pin prefix hits, allocate the remaining prompt blocks, and build
+        the slot's block table."""
+        pool = self.pool
+        w0 = pool.blocks_for(self._start_index(req))
+        hits, hashes = self._lookup_hits(req)
+        self._admit_plan = None
+        self._chain_memo.pop(req.rid, None)
+        if self.prefix_cache:
+            self._req_hashes[req.rid] = hashes
+        pool.claim(hits)
+        bids = hits + pool.alloc(w0 - len(hits))
+        self._slot_blocks[slot] = bids
+        self._tables[slot] = NULL_BLOCK
+        self._tables[slot, :w0] = bids
+        self._tables_dirty = True
+        req.prefix_hit_tokens = len(hits) * self.block_size
+        self.stats["prefix_hit_tokens"] += req.prefix_hit_tokens
+        if self.tracer is not None:
+            self.tracer.emit(ev.EV_PREFIX_HIT_TOKENS, req.prefix_hit_tokens)
+
+    def _release_blocks(self, slot: int):
+        if self.pool is not None:
+            self.pool.free(self._slot_blocks[slot])
+            self._slot_blocks[slot] = []
+            self._tables[slot] = NULL_BLOCK
+            self._tables_dirty = True
+
+    # ------------------------------------------------------------------
+    # request intake
+    # ------------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int, *, extras: dict | None = None,
                arrival_ns: int | None = None) -> Request:
         # reject BEFORE enqueueing: a rejected request must not linger in the
-        # queue and get served anyway
-        if self.cfg.attention_window is None:
+        # queue and get served anyway.  Paged storage holds ABSOLUTE
+        # positions, so the capacity bound applies to SWA archs too (the
+        # window is a mask; out-of-window blocks are not yet reclaimed).
+        if self._has_paged:
             plen = int(np.asarray(prompt).shape[0])
             patches = self.cfg.num_patches if self.cfg.family == "vlm" else 0
             need = plen + patches + int(max_new_tokens) - 1
@@ -180,10 +327,11 @@ class ContinuousServeEngine:
     # ------------------------------------------------------------------
     def _prefill_groups(self, admissions: list[tuple[int, Request]]):
         """Group same-shape admissions so they prefill as ONE batched jit
-        call (a length bucket); mixed lengths degrade to singleton groups."""
+        call (a (length, prefix-hit) bucket); mixed shapes degrade to
+        singleton groups."""
         groups: dict[tuple, list[tuple[int, Request]]] = {}
         for slot, req in admissions:
-            sig = (req.prompt_len,
+            sig = (len(req.input_ids()), req.prefix_hit_tokens,
                    tuple(sorted((k, v.shape) for k, v in req.extras.items())))
             groups.setdefault(sig, []).append((slot, req))
         return list(groups.values())
@@ -192,28 +340,67 @@ class ContinuousServeEngine:
         tr = self.tracer
         reqs = [r for _, r in members]
         slots = [s for s, _ in members]
-        batch = {"tokens": jnp.asarray(np.stack([r.prompt for r in reqs]), jnp.int32)}
-        for k in reqs[0].extras:
-            batch[k] = jnp.asarray(np.stack([r.extras[k] for r in reqs]))
+        inputs = [r.input_ids() for r in reqs]
+        starts = [self._start_index(r) for r in reqs]
+        start_total = starts[0]
+        bs = self.block_size
+        cache_len = (-(-start_total // bs) * bs if self._has_paged
+                     else start_total)
+        w0 = cache_len // bs if self._has_paged else 0
+        hit = reqs[0].prefix_hit_tokens  # same within a group (signature)
         key = jax.random.fold_in(self._key, (1 << 20) + reqs[0].rid)
         t_admit = _now_ns()
         with (tr.phase(ev.PHASE_PREFILL) if tr else contextlib.nullcontext()), \
                 (tr.user_function(name="prefill") if tr else contextlib.nullcontext()):
-            new_caches, tok1 = self._prefill(self.params, batch, key)
+            if hit:
+                # tail-only prefill: resident prefix blocks are ref-bumped,
+                # their K/V gathered on device; no recompute for hit tokens
+                m = hit // bs
+                batch = {"tokens": jnp.asarray(
+                    np.stack([ids[hit:] for ids in inputs]), jnp.int32)}
+                prefix_ids = jnp.asarray(
+                    [self._slot_blocks[s][:m] for s in slots], jnp.int32)
+                new_caches, tok1 = self._chunk(
+                    self.params, self._caches, batch, prefix_ids, key,
+                    start=hit, cache_len=cache_len)
+                block_ids = np.asarray(
+                    [self._slot_blocks[s][m:w0] for s in slots], np.int32)
+            else:
+                batch = {"tokens": jnp.asarray(np.stack(inputs), jnp.int32)}
+                for k in reqs[0].extras:
+                    batch[k] = jnp.asarray(np.stack([r.extras[k] for r in reqs]))
+                new_caches, tok1 = self._prefill(self.params, batch, key,
+                                                 cache_len=cache_len)
+                block_ids = np.asarray(
+                    [self._slot_blocks[s][:w0] for s in slots], np.int32
+                ).reshape(len(slots), w0)
         self._caches, self._tok, self._idx = self._admit(
             self._caches, new_caches, self._tok, self._idx,
-            jnp.asarray(slots, jnp.int32), tok1,
-            jnp.asarray([self._start_index(r) for r in reqs], jnp.int32),
+            jnp.asarray(slots, jnp.int32), jnp.asarray(block_ids, jnp.int32),
+            tok1, jnp.asarray(starts, jnp.int32),
         )
+        for slot, st in zip(slots, starts):
+            self._slot_start[slot] = st
         firsts = np.asarray(tok1)  # TTFT: first tokens materialized here
         self.stats["host_syncs"] += 1
         self.stats["prefills"] += len(reqs)
+        self.stats["prefill_tokens"] += sum(
+            st - r.prefix_hit_tokens for st, r in zip(starts, reqs))
+        if self.prefix_cache:
+            # publish full PROMPT blocks for future prefix hits (generated
+            # tokens are never shared; hit blocks no-op re-register); the
+            # chain was already computed at admission
+            for slot, req in zip(slots, reqs):
+                hashes = self._req_hashes.pop(req.rid)[:req.prompt_len // bs]
+                for j, h in enumerate(hashes):
+                    self.pool.register(self._slot_blocks[slot][j], h)
         t_first = _now_ns()
         for (slot, req), first in zip(members, firsts):
             req.t_admit_ns = t_admit
-            req.t_first_ns = t_first
+            if req.t_first_ns < 0:
+                req.t_first_ns = t_first  # resumed requests keep their TTFT
             req.tokens.append(int(first))
-            req.scheduled = 1
+            req.scheduled = len(req.tokens)
             self.stats["tokens_decoded"] += 1
             self._active[slot] = True
             self._active_dirty = True
@@ -224,17 +411,73 @@ class ContinuousServeEngine:
         req.t_done_ns = _now_ns()
         self._active[req.slot] = False
         self._active_dirty = True
+        self._release_blocks(req.slot)
         req.extras.clear()  # prefill inputs (frames/patches) are dead weight now
         if self.tracer is not None:
             self.tracer.emit(ev.EV_REQ_TTFT_US, max(req.ttft_ns() // 1000, 0))
             self.tracer.emit(ev.EV_REQ_TPOT_US, req.tpot_ns() // 1000)
         self.scheduler.retire(req)
 
+    # ------------------------------------------------------------------
+    # decode-time block management
+    # ------------------------------------------------------------------
+    def _preempt_one(self, pairs):
+        """Evict the latest-admitted in-flight request: free its blocks now
+        (requeue is deferred until its in-flight tokens are drained)."""
+        slot, victim = max(pairs, key=lambda sr: sr[1].admit_seq)
+        pairs.remove((slot, victim))
+        self._active[slot] = False
+        self._active_dirty = True
+        self._release_blocks(slot)
+        self.scheduler.preempt(victim)
+        self._preempted.append(victim)
+        self.stats["preemptions"] += 1
+        return pairs
+
+    def _ensure_blocks(self, pairs):
+        """Allocate the blocks this burst will write, preempting (newest
+        first) when the pool cannot cover every active slot.  Returns the
+        surviving pairs and the burst length."""
+        while pairs:
+            need = min(r.max_new_tokens - r.scheduled for _, r in pairs)
+            steps = 1
+            while steps < need:
+                steps *= 2
+            steps = min(steps, self.max_decode_burst)
+            if self.pool is None:
+                return pairs, steps
+            # the power-of-two bucket may overshoot a slot's remaining cache
+            # capacity (writes land at start+scheduled-1 .. +steps-2): clamp
+            # so no burst ever demands a block-table entry past W.  The
+            # submit() capacity check guarantees headroom >= need >= 1.
+            steps = min(steps, min(
+                self.capacity + 1 - int(self._slot_start[s]) - r.scheduled
+                for s, r in pairs))
+            shortfall: list[tuple[int, int]] = []  # (slot, missing blocks)
+            total = 0
+            for slot, req in pairs:
+                last_pos = int(self._slot_start[slot]) + req.scheduled + steps - 2
+                missing = last_pos // self.block_size + 1 - len(self._slot_blocks[slot])
+                if missing > 0:
+                    shortfall.append((slot, missing))
+                    total += missing
+            if total <= self.pool.available():
+                for slot, missing in shortfall:
+                    fresh = self.pool.alloc(missing)
+                    a = len(self._slot_blocks[slot])
+                    self._tables[slot, a:a + missing] = fresh
+                    self._slot_blocks[slot].extend(fresh)
+                    self._tables_dirty = True
+                return pairs, steps
+            pairs = self._preempt_one(pairs)
+        return pairs, 0
+
     def _process_tokens(self, toks_dev, pairs):
         """Record one decode burst's [steps, num_slots] token block.  Called
         while the NEXT burst computes on device, so the blocking fetch
         overlaps compute and host bookkeeping costs nothing on the critical
-        path."""
+        path.  Preempted requests still drain their in-flight tokens here
+        (they were computed against blocks that were valid at dispatch)."""
         tr = self.tracer
         toks = np.asarray(toks_dev)  # the ONE host sync of the burst
         self.stats["host_syncs"] += 1
@@ -246,7 +489,8 @@ class ContinuousServeEngine:
                 req.tokens.append(int(row[slot]))
                 self.stats["tokens_decoded"] += 1
                 if len(req.tokens) >= req.max_new_tokens:
-                    self._finish(req)
+                    if self.scheduler.slots[req.slot] is req:
+                        self._finish(req)
         self.stats["iterations"] += len(toks)
         self._since_flush += len(toks)
         if tr:
@@ -257,6 +501,17 @@ class ContinuousServeEngine:
                 tr.flush(self.flush_base)
                 self._since_flush = 0
 
+    def _drain_preempted(self):
+        """Requeue preempted requests (front of queue, earliest-admitted
+        first) once their in-flight tokens have been processed."""
+        for req in sorted(self._preempted, key=lambda r: r.admit_seq,
+                          reverse=True):
+            req.scheduled = len(req.tokens)
+            self.queue.requeue(req)
+            if self.tracer is not None:
+                self.tracer.emit(ev.EV_QUEUE_DEPTH, len(self.queue))
+        self._preempted.clear()
+
     def run(self) -> dict[int, np.ndarray]:
         """Serve until queue and slots drain.  Returns {rid: [new_tokens]}
         for the requests completed by THIS call (the engine is reusable:
@@ -264,11 +519,11 @@ class ContinuousServeEngine:
 
         The loop is pipelined and bursted: up to ``max_decode_burst`` decode
         iterations run in one executable (the burst length is clamped to the
-        smallest remaining token budget among active slots, so no slot
-        decodes past its request), and burst i is dispatched before burst
-        i-1's tokens are fetched — the fetch blocks only on whatever device
-        time remains, and retirement/admission decisions lag the device by
-        one burst."""
+        smallest remaining token budget among active slots, bucketed up to a
+        power of two to bound distinct compiles), and burst i is dispatched
+        before burst i-1's tokens are fetched — the fetch blocks only on
+        whatever device time remains, and retirement/admission decisions lag
+        the device by one burst."""
         tr = self.tracer
         done0 = len(self.scheduler.completed)
         pending = None  # ([steps, slots] token block, [(slot, req)]) in flight
@@ -281,19 +536,15 @@ class ContinuousServeEngine:
                 admissions = self.scheduler.admissions()
             for members in self._prefill_groups(admissions):
                 self._do_prefill(members)
+            self.stats["peak_active"] = max(self.stats["peak_active"],
+                                            self.scheduler.occupancy())
+            if self.pool is not None:
+                self.stats["peak_blocks"] = max(self.stats["peak_blocks"],
+                                                self.pool.num_active())
             dispatched = None
             pairs = [(s, r) for s, r in self.scheduler.active() if self._active[s]]
+            pairs, steps = self._ensure_blocks(pairs)
             if pairs:
-                # burst length: smallest remaining budget, bucketed UP to the
-                # next power of two (bounds distinct compiles of the scanned
-                # executable at log2(max_decode_burst)+1; overshoot rows are
-                # discarded at processing and their cache writes miss the
-                # one-hot slot test)
-                need = min(r.max_new_tokens - r.scheduled for _, r in pairs)
-                steps = 1
-                while steps < need:
-                    steps *= 2
-                steps = min(steps, self.max_decode_burst)
                 # greedy decode consumes no randomness — skip the fold_in
                 key = (self._key if self.temperature <= 0.0
                        else jax.random.fold_in(self._key, self._dispatches))
@@ -301,12 +552,15 @@ class ContinuousServeEngine:
                 if self._active_dirty:
                     self._active_dev = jnp.asarray(self._active)
                     self._active_dirty = False
+                if self._tables_dirty:
+                    self._tables_dev = jnp.asarray(self._tables)
+                    self._tables_dirty = False
                 with (tr.phase(ev.PHASE_DECODE) if tr else contextlib.nullcontext()), \
                         (tr.user_function(name="decode_step") if tr
                          else contextlib.nullcontext()):
                     self._caches, self._tok, self._idx, toks = self._burst(
                         self.params, self._caches, self._tok, self._idx,
-                        self._active_dev, key, steps=steps)
+                        self._active_dev, self._tables_dev, key, steps=steps)
                 for slot, req in pairs:
                     req.scheduled += steps
                     if req.scheduled >= req.max_new_tokens:
@@ -317,6 +571,7 @@ class ContinuousServeEngine:
                 dispatched = (toks, pairs)
             if pending is not None:
                 self._process_tokens(*pending)  # overlaps the dispatched burst
+            self._drain_preempted()
             pending = dispatched
         self.stats["seconds"] += time.perf_counter() - t_run0
         return {r.rid: np.asarray(r.tokens, np.int32)
@@ -336,16 +591,25 @@ class ContinuousServeEngine:
 
     def throughput_stats(self) -> dict:
         total, dt = self.stats["tokens_decoded"], self.stats["seconds"]
-        return {**self.stats, "tokens": total,
-                "tok_per_s": total / dt if dt > 0 else float("nan")}
+        out = {**self.stats, "tokens": total,
+               "tok_per_s": total / dt if dt > 0 else float("nan")}
+        if self.pool is not None:
+            out.update(blocks_free=self.pool.num_free(),
+                       blocks_cached=self.pool.num_cached(),
+                       evictions=self.pool.stats["evictions"],
+                       hit_blocks=self.pool.stats["hit_blocks"])
+        return out
 
 
 class ServeEngine:
-    """Legacy fixed-batch engine: one rectangular batch, lockstep decode.
+    """Fixed-batch engine over CONTIGUOUS per-request caches: one
+    rectangular batch, lockstep decode.
 
-    Kept for oracle tests and as the simplest serving path.  Sampling is
+    This is the paged engine's equivalence oracle — the legacy contiguous
+    cache layout survives only here (greedy decode through the paged pool
+    must match it bit-for-bit; tests/test_serve_paged.py).  Sampling is
     fused into the jitted decode step, so the loop performs one host sync
-    per token (the seed implementation sampled eagerly on host: two)."""
+    per token."""
 
     def __init__(self, cfg: ModelConfig, params, *, max_len: int,
                  tracer: Tracer | None = None):
@@ -365,7 +629,7 @@ class ServeEngine:
 
     def _decode_sample_impl(self, params, caches, tok, idx, key, *, temperature):
         caches, logits = self.model.decode_step(params, caches, tok, idx)
-        nxt = _sample_logits(logits, key, temperature, self.cfg.vocab_size)
+        nxt = sample_logits(logits, key, temperature, self.cfg.vocab_size)
         return caches, nxt
 
     def generate(self, prompts: np.ndarray, *, num_tokens: int,
@@ -385,8 +649,8 @@ class ServeEngine:
 
         key = jax.random.PRNGKey(seed)
         out = np.zeros((b, num_tokens), np.int32)
-        tok = _sample_logits(logits, jax.random.fold_in(key, 0), temperature,
-                             self.cfg.vocab_size)
+        tok = sample_logits(logits, jax.random.fold_in(key, 0), temperature,
+                            self.cfg.vocab_size)
         out[:, 0] = np.asarray(tok)
         self.host_syncs += 1
         for i in range(1, num_tokens):

@@ -4,9 +4,12 @@ A :class:`Request` is the unit the scheduler moves through
 
     QUEUED -> ACTIVE (prefilled into a slot, decoding) -> DONE
 
-and carries its own latency bookkeeping (arrival / admission / first token /
-completion timestamps) so the engine can emit per-request TTFT / TPOT trace
-counters at retirement.
+with one backward edge: ACTIVE -> QUEUED when the block pool runs dry and
+the request is *preempted* (its KV blocks are evicted; on re-admission the
+prompt plus every token generated so far is re-prefilled — recompute-style
+preemption, greedy-decode safe).  Requests carry their own latency
+bookkeeping (arrival / admission / first token / completion timestamps) so
+the engine can emit per-request TTFT / TPOT trace counters at retirement.
 """
 from __future__ import annotations
 
@@ -39,6 +42,9 @@ class Request:
     slot: int = -1
     tokens: list[int] = dataclasses.field(default_factory=list)
     scheduled: int = 0  # tokens dispatched to device (>= len(tokens): in-flight)
+    admit_seq: int = -1  # global admission order (preemption priority)
+    prefix_hit_tokens: int = 0  # prompt tokens served from the prefix cache
+    preemptions: int = 0
     t_admit_ns: int = -1
     t_first_ns: int = -1
     t_done_ns: int = -1
@@ -50,6 +56,14 @@ class Request:
     @property
     def done(self) -> bool:
         return self.state == RequestState.DONE
+
+    def input_ids(self) -> np.ndarray:
+        """Prefill input: the prompt, plus — after a preemption — every
+        token already generated (recompute-style resume)."""
+        if not self.tokens:
+            return self.prompt
+        return np.concatenate(
+            [self.prompt, np.asarray(self.tokens, np.int32)])
 
     def ttft_ns(self) -> int:
         """Time to first token, from arrival (queueing included)."""
@@ -87,6 +101,15 @@ class RequestQueue:
         self._next_rid += 1
         self._q.append(req)
         return req
+
+    def requeue(self, req: Request) -> None:
+        """Put a preempted request at the FRONT of the queue (it already
+        waited once; preemption must not also cost it its turn)."""
+        req.state = RequestState.QUEUED
+        self._q.appendleft(req)
+
+    def peek(self) -> Request | None:
+        return self._q[0] if self._q else None
 
     def pop(self) -> Request | None:
         return self._q.popleft() if self._q else None

@@ -1,18 +1,25 @@
-"""Slot-pool scheduler for continuous batching.
+"""Slot + block scheduler for continuous batching over the paged KV pool.
 
 The engine owns a fixed pool of ``num_slots`` decode slots (static shapes —
-the TPU-friendly discipline: cache buffers never change shape, requests move
-through them).  The scheduler decides, each engine iteration:
+cache buffers never change shape, requests move through them) AND a pool of
+KV blocks (``serve/block_pool.py``).  The scheduler decides, each engine
+iteration:
 
-  * which queued requests to admit into free slots (FIFO, bounded by
-    ``max_prefills_per_iter`` so admission can't starve in-flight decode);
-  * when a request is finished, returning its slot to the pool.
+  * which queued requests to admit (FIFO, bounded by
+    ``max_prefills_per_iter``) — admission is gated on **block
+    availability**, not just a free slot: the engine-provided ``admission``
+    policy answers "do enough free/evictable blocks exist for this
+    prompt?", so slot count stops being the capacity bound;
+  * when a request is finished, returning its slot to the pool;
+  * when the engine must *preempt* a request (block pool dry mid-decode),
+    recording the back-transition.
 
 Every decision is stamped into the trace (paper Listing 2/4 discipline):
 ``EV_QUEUE_DEPTH`` / ``EV_SLOTS_ACTIVE`` counters, punctual
-``EV_REQ_ADMIT`` / ``EV_REQ_RETIRE`` markers, and a per-slot occupancy
-event type (``EV_SLOT_BASE + slot``: value = request id + 1, 0 when freed)
-so Paraver can render slot timelines exactly like task timelines.
+``EV_REQ_ADMIT`` / ``EV_REQ_RETIRE`` / ``EV_REQ_PREEMPT`` markers, and a
+per-slot occupancy event type (``EV_SLOT_BASE + slot``: value = request
+id + 1, 0 when freed) so Paraver can render slot timelines exactly like
+task timelines.
 """
 from __future__ import annotations
 
@@ -22,20 +29,23 @@ from repro.serve.queue import Request, RequestQueue, RequestState
 
 class Scheduler:
     def __init__(self, num_slots: int, queue: RequestQueue, *, tracer=None,
-                 max_prefills_per_iter: int = 1):
+                 max_prefills_per_iter: int = 1, admission=None):
         if num_slots < 1:
             raise ValueError("num_slots must be >= 1")
         self.num_slots = num_slots
         self.queue = queue
         self.tracer = tracer
         self.max_prefills_per_iter = max(1, int(max_prefills_per_iter))
+        self.admission = admission  # can_admit(req) / on_admit(slot, req)
         self.slots: list[Request | None] = [None] * num_slots
         self.completed: list[Request] = []  # retirement order
+        self._admit_seq = 0
         if tracer is not None:
             tracer.register(ev.EV_QUEUE_DEPTH, ev.SERVE_CTR_LABELS[ev.EV_QUEUE_DEPTH])
             tracer.register(ev.EV_SLOTS_ACTIVE, ev.SERVE_CTR_LABELS[ev.EV_SLOTS_ACTIVE])
             tracer.register(ev.EV_REQ_ADMIT, "Serve request admitted (rid+1)")
             tracer.register(ev.EV_REQ_RETIRE, "Serve request retired (rid+1)")
+            tracer.register(ev.EV_REQ_PREEMPT, "Serve request preempted (rid+1)")
             for s in range(num_slots):
                 tracer.register(ev.EV_SLOT_BASE + s,
                                 f"Serve slot {s} occupant (rid+1)", {0: "empty"})
@@ -59,18 +69,28 @@ class Scheduler:
 
     # ------------------------------------------------------------------
     def admissions(self) -> list[tuple[int, Request]]:
-        """Pop queued requests into free slots (FIFO), up to the per-iteration
-        prefill budget.  Returns [(slot, request)] for the engine to prefill."""
+        """Pop queued requests into free slots (FIFO), up to the
+        per-iteration prefill budget, gated on the admission policy (block
+        availability).  A blocked queue head blocks the whole queue —
+        skipping it would starve long prompts behind short ones.  Returns
+        [(slot, request)] for the engine to prefill."""
         out: list[tuple[int, Request]] = []
         for slot in range(self.num_slots):
             if len(out) >= self.max_prefills_per_iter or not self.queue:
                 break
             if self.slots[slot] is not None:
                 continue
+            head = self.queue.peek()
+            if self.admission is not None and not self.admission.can_admit(head):
+                break
             req = self.queue.pop()
             req.state = RequestState.ACTIVE
             req.slot = slot
+            req.admit_seq = self._admit_seq
+            self._admit_seq += 1
             self.slots[slot] = req
+            if self.admission is not None:
+                self.admission.on_admit(slot, req)
             out.append((slot, req))
             self._emit(ev.EV_REQ_ADMIT, req.rid + 1)
             self._emit(ev.EV_SLOT_BASE + slot, req.rid + 1)
@@ -87,5 +107,18 @@ class Scheduler:
         req.state = RequestState.DONE
         self.completed.append(req)
         self._emit(ev.EV_REQ_RETIRE, req.rid + 1)
+        self._emit(ev.EV_SLOT_BASE + req.slot, 0)
+        self._emit(ev.EV_SLOTS_ACTIVE, self.occupancy())
+
+    def preempt(self, req: Request):
+        """Evict an in-flight request from its slot (block pool dry).  The
+        engine frees its blocks and requeues it once the request's in-flight
+        tokens have been drained."""
+        if self.slots[req.slot] is not req:
+            raise ValueError(f"request {req.rid} does not own slot {req.slot}")
+        self.slots[req.slot] = None
+        req.state = RequestState.QUEUED
+        req.preemptions += 1
+        self._emit(ev.EV_REQ_PREEMPT, req.rid + 1)
         self._emit(ev.EV_SLOT_BASE + req.slot, 0)
         self._emit(ev.EV_SLOTS_ACTIVE, self.occupancy())

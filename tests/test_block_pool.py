@@ -1,0 +1,161 @@
+"""Block allocator invariants: conservation, refcounts, prefix dedup,
+no double-free, no leak — deterministic stress always runs; the hypothesis
+property test rides on top when hypothesis is installed."""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.serve.block_pool import NULL_BLOCK, BlockPool
+
+
+def test_alloc_free_roundtrip():
+    pool = BlockPool(9, 4)
+    assert pool.available() == 8
+    a = pool.alloc(3)
+    assert len(set(a)) == 3 and NULL_BLOCK not in a
+    assert pool.num_free() == 5 and pool.num_active() == 3
+    pool.free(a)
+    assert pool.available() == 8 and pool.num_active() == 0
+    pool.check_invariants()
+
+
+def test_double_free_raises():
+    pool = BlockPool(5, 4)
+    (b,) = pool.alloc(1)
+    pool.free([b])
+    with pytest.raises(ValueError, match="double free"):
+        pool.free([b])
+
+
+def test_exhaustion_raises():
+    pool = BlockPool(4, 2)
+    pool.alloc(3)
+    with pytest.raises(MemoryError):
+        pool.alloc(1)
+
+
+def test_null_block_is_never_allocated_and_free_ignores_it():
+    pool = BlockPool(4, 2)
+    assert NULL_BLOCK not in pool.alloc(3)
+    pool.free([NULL_BLOCK])  # table padding — a no-op
+    pool.check_invariants()
+
+
+def test_prefix_register_lookup_claim_evict():
+    pool = BlockPool(6, 4)
+    tokens = np.arange(14, dtype=np.int32)  # 3 full blocks + 2 tail tokens
+    bids = pool.alloc(3)
+    for bid, h in zip(bids, pool.hash_chain(tokens)):
+        pool.register(bid, h)
+    # while referenced: hits resolve but nothing is evictable
+    assert pool.lookup(tokens) == bids
+    assert pool.num_cached() == 0
+    pool.free(bids)  # -> CACHED, still hit-able, now evictable
+    assert pool.num_cached() == 3 and pool.num_free() == 2
+    assert pool.available() == 5
+    hits = pool.lookup(tokens)
+    pool.claim(hits)  # pinned again
+    assert hits == bids
+    assert pool.num_cached() == 0 and pool.num_active() == 3
+    pool.free(hits)
+    # exact-multiple prompts leave >= 1 tail token to prefill
+    assert len(pool.lookup(tokens[:12])) == 2
+    # allocating past the free list evicts LRU cached blocks
+    got = pool.alloc(4)
+    assert pool.stats["evictions"] >= 2
+    assert len(pool.lookup(tokens)) < 3  # chain broken by eviction
+    pool.free(got)
+    pool.check_invariants()
+
+
+def test_lookup_is_chain_hashed_not_positional():
+    pool = BlockPool(8, 2)
+    a = np.array([1, 2, 3, 4, 9], np.int32)
+    bids = pool.alloc(2)
+    for bid, h in zip(bids, pool.hash_chain(a)):
+        pool.register(bid, h)
+    # same second block but different first block -> no hit past the miss
+    b = np.array([7, 7, 3, 4, 9], np.int32)
+    assert pool.lookup(b) == []
+    assert pool.lookup(a) == bids
+
+
+def _stress(pool: BlockPool, rng: np.random.Generator, rounds: int):
+    """Random alloc/register/claim/free workload; returns live allocations."""
+    live: list[list[int]] = []
+    for _ in range(rounds):
+        op = rng.integers(0, 3)
+        if op == 0 and pool.available():
+            n = int(rng.integers(1, pool.available() + 1))
+            bids = pool.alloc(n)
+            toks = rng.integers(0, 50, n * pool.block_size).astype(np.int32)
+            for bid, h in zip(bids, pool.hash_chain(toks)):
+                if rng.integers(0, 2):
+                    pool.register(bid, h)
+            live.append(bids)
+        elif op == 1 and live:
+            pool.free(live.pop(int(rng.integers(0, len(live)))))
+        elif op == 2:
+            toks = rng.integers(0, 50, int(rng.integers(0, 40))).astype(np.int32)
+            hits = pool.lookup(toks)
+            if hits:
+                pool.claim(hits)
+                live.append(hits)
+        pool.check_invariants()
+    return live
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_random_workload_no_leak(seed):
+    pool = BlockPool(17, 4)
+    live = _stress(pool, np.random.default_rng(seed), rounds=200)
+    for bids in live:
+        pool.free(bids)
+    pool.check_invariants()
+    # no leak: everything is free or evictable again
+    assert pool.available() == pool.num_blocks - 1
+    assert pool.num_active() == 0
+
+
+# ----------------------------------------------------------------------
+# hypothesis layer (only these are skipped when hypothesis is missing —
+# the deterministic tests above always run; CI installs hypothesis)
+# ----------------------------------------------------------------------
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(0, 2**32 - 1), st.integers(3, 24), st.integers(1, 8))
+    def test_property_random_workload(seed, num_blocks, block_size):
+        pool = BlockPool(num_blocks, block_size)
+        live = _stress(pool, np.random.default_rng(seed), rounds=60)
+        for bids in live:
+            pool.free(bids)
+        pool.check_invariants()
+        assert pool.available() == pool.num_blocks - 1
+        assert pool.num_active() == 0
+
+    @settings(max_examples=40, deadline=None)
+    @given(st.lists(st.integers(0, 7), min_size=1, max_size=24))
+    def test_property_lookup_never_exceeds_registration(tokens):
+        pool = BlockPool(16, 2)
+        toks = np.asarray(tokens, np.int32)
+        n = len(toks) // 2
+        bids = pool.alloc(n) if n else []
+        for bid, h in zip(bids, pool.hash_chain(toks)):
+            pool.register(bid, h)
+        hits = pool.lookup(toks)
+        assert len(hits) <= max(0, (len(toks) - 1) // 2)  # always a tail left
+        assert hits == bids[:len(hits)]
+
+else:
+
+    @pytest.mark.skip(reason="hypothesis not installed (see requirements-test.txt)")
+    def test_property_random_workload():
+        pass
