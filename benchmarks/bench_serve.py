@@ -1,6 +1,6 @@
 """Serving throughput: seed loop vs continuous batching, paged vs contiguous.
 
-Three sections, all emitted as CSV rows AND collected into machine-readable
+Four sections, all emitted as CSV rows AND collected into machine-readable
 ``BENCH_serve.json`` (repo root; CI uploads it as an artifact so the perf
 trajectory is tracked across PRs):
 
@@ -12,7 +12,13 @@ trajectory is tracked across PRs):
      *actual* lengths and sustains more concurrent requests (peak active
      slots + blocks in use reported);
   3. prefix-hit speedup on a shared-prompt workload (system-prompt shape):
-     warm vs cold wall time and prefilled-token counts.
+     warm vs cold wall time and prefilled-token counts;
+  4. sharded: the mesh-parallel engine at mp=1 vs mp=2 on FORCED CPU
+     devices (tok/s + host-syncs/iter; run in a subprocess so the forced
+     device count cannot leak into this process's backend).
+
+Run as ``__main__`` the script also gates on ``BENCH_baseline.json``
+(committed): a >15% regression of ``seed_vs_paged.speedup`` fails CI.
 
     PYTHONPATH=src python -m benchmarks.run        # all sections
     PYTHONPATH=src python benchmarks/bench_serve.py
@@ -20,7 +26,9 @@ trajectory is tracked across PRs):
 from __future__ import annotations
 
 import json
+import os
 import pathlib
+import subprocess
 import sys
 import time
 
@@ -34,7 +42,10 @@ ARCH = "granite-8b"
 N_REQ = 8
 PROMPT = 16
 GEN = 32
-JSON_PATH = pathlib.Path(__file__).resolve().parents[1] / "BENCH_serve.json"
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+JSON_PATH = ROOT / "BENCH_serve.json"
+BASELINE_PATH = ROOT / "BENCH_baseline.json"
+REGRESSION_TOLERANCE = 0.15  # CI fails if speedup drops >15% vs baseline
 
 
 def _seed_fixed_batch(cfg, model, params, prompts, num_tokens, max_len,
@@ -216,7 +227,88 @@ def _bench_prefix_hits(cfg, model, params, results):
            f"{dt_warm * 1e3:.0f} ms wall = {dt_cold / dt_warm:.2f}x")
 
 
-def bench():
+def _sharded_child():
+    """Child process (forced 2 CPU devices via the parent's env): paged
+    engine at mp=1 vs mp=2, greedy-equal outputs asserted, one JSON line on
+    stdout."""
+    from repro.compat import make_mesh
+    from repro.configs import get_config, reduced
+    from repro.models.model import build_model
+    from repro.serve.engine import ContinuousServeEngine
+
+    cfg = reduced(get_config(ARCH), num_layers=2, num_kv_heads=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (N_REQ, PROMPT)).astype(np.int32)
+    out: dict = {}
+    ref = None
+    for mp in (1, 2):
+        mesh = make_mesh((1, mp), ("data", "model"))
+        eng = ContinuousServeEngine(cfg, params, num_slots=N_REQ,
+                                    max_len=PROMPT + GEN,
+                                    max_prefills_per_iter=N_REQ, mesh=mesh)
+        toks = eng.serve_batch(prompts, num_tokens=GEN)  # warmup/compile
+        if ref is None:
+            ref = toks
+        else:
+            assert np.array_equal(toks, ref), "mp=2 diverged from mp=1"
+        syncs0, iters0 = eng.stats["decode_syncs"], eng.stats["iterations"]
+        t0 = time.perf_counter()
+        eng.serve_batch(prompts, num_tokens=GEN)
+        dt = time.perf_counter() - t0
+        out[f"mp{mp}"] = {
+            "tok_per_s": N_REQ * GEN / dt,
+            "host_syncs_per_decode_iter":
+                (eng.stats["decode_syncs"] - syncs0)
+                / max(eng.stats["iterations"] - iters0, 1),
+        }
+    print(json.dumps(out))
+
+
+def _bench_sharded(results):
+    env = {**os.environ,
+           "XLA_FLAGS": "--xla_force_host_platform_device_count=2",
+           "PYTHONPATH": str(ROOT / "src")}
+    r = subprocess.run([sys.executable, __file__, "--sharded-child"],
+                       capture_output=True, text=True, env=env, timeout=560)
+    if r.returncode != 0:
+        # recorded so check_regression fails the run — a crashed child (or
+        # its mp=2-vs-mp=1 equality assert) must not leave CI green
+        results["sharded"] = {"failed": (r.stdout + r.stderr)[-400:]}
+        yield f"serve_sharded,,FAILED: {(r.stdout + r.stderr)[-400:]}"
+        return
+    sharded = json.loads(r.stdout.strip().splitlines()[-1])
+    results["sharded"] = sharded
+    for mp in ("mp1", "mp2"):
+        s = sharded[mp]
+        yield (f"serve_sharded_{mp},,{s['tok_per_s']:.0f} tok/s; "
+               f"{s['host_syncs_per_decode_iter']:.2f} host syncs/decode "
+               f"iteration (2 forced CPU devices)")
+
+
+def check_regression(results) -> int:
+    """Compare against the committed baseline; nonzero = CI failure."""
+    if results.get("sharded", {}).get("failed"):
+        print("REGRESSION: sharded section failed "
+              f"({results['sharded']['failed'][:200]})")
+        return 1
+    if not BASELINE_PATH.exists():
+        print(f"regression gate: no {BASELINE_PATH.name}, skipping")
+        return 0
+    base = json.loads(BASELINE_PATH.read_text())
+    floor = base["seed_vs_paged"]["speedup"] * (1 - REGRESSION_TOLERANCE)
+    got = results["seed_vs_paged"]["speedup"]
+    if got < floor:
+        print(f"REGRESSION: seed_vs_paged.speedup {got:.2f} < floor "
+              f"{floor:.2f} (baseline {base['seed_vs_paged']['speedup']:.2f} "
+              f"- {REGRESSION_TOLERANCE:.0%})")
+        return 1
+    print(f"regression gate: speedup {got:.2f} >= floor {floor:.2f} OK")
+    return 0
+
+
+def bench(results: dict | None = None):
     from repro.configs import get_config, reduced
     from repro.models.model import build_model
 
@@ -224,15 +316,23 @@ def bench():
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
-    results: dict = {"arch": f"{ARCH} (reduced)"}
+    if results is None:
+        results = {}
+    results["arch"] = f"{ARCH} (reduced)"
     yield from _bench_seed_vs_paged(cfg, model, params, results)
     yield from _bench_equal_budget(cfg, model, params, results)
     yield from _bench_prefix_hits(cfg, model, params, results)
+    yield from _bench_sharded(results)
     JSON_PATH.write_text(json.dumps(results, indent=2) + "\n")
     yield f"serve_bench_json,,{JSON_PATH.name} written"
 
 
 if __name__ == "__main__":
+    if "--sharded-child" in sys.argv:
+        _sharded_child()
+        sys.exit(0)
     print("name,us_per_call,derived")
-    for row in bench():
+    results: dict = {}
+    for row in bench(results):
         print(row)
+    sys.exit(check_regression(results))

@@ -13,7 +13,7 @@ from pathlib import Path
 from repro.core import events as ev
 from repro.core.records import Trace
 
-_COUNTER_TYPES = set(ev.CTR_LABELS)
+_COUNTER_TYPES = set(ev.CTR_LABELS) | set(ev.SERVE_CTR_LABELS)
 _SPAN_TYPES = {ev.EV_PHASE, ev.EV_USER_FUNC, ev.EV_COLLECTIVE}
 
 

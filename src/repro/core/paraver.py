@@ -128,48 +128,63 @@ def _segment_lines(seg_path, offsets) -> list[tuple[int, str]]:
         return _record_lines(z["states"], z["events"], z["comms"], offsets)
 
 
-def _segment_key_range(seg_path) -> tuple[int, int] | None:
+def _segment_meta(seg_path) -> tuple[tuple[int, int] | None, int | None]:
+    """(key range, owning task) of a flushed segment.  Single-stream flushes
+    carry no task stamp (task None); per-task flushes (``split_tasks``) are
+    stamped by ``Tracer.flush`` — the merge groups them into one chain per
+    task, the mpi2prv per-rank-stream shape."""
     with np.load(seg_path) as z:
+        task = int(z["task"]) if "task" in z.files else None
         if "key_range" in z.files:  # stamped by Tracer.flush
             lo, hi = z["key_range"]
-            return int(lo), int(hi)
+            return (int(lo), int(hi)), task
         keys = [z[n][f] for n, f in (("states", "begin"), ("events", "time"),
                                      ("comms", "lsend")) if len(z[n])]
         if not keys:
-            return None
-        return (min(int(k.min()) for k in keys), max(int(k.max()) for k in keys))
+            return None, task
+        return (min(int(k.min()) for k in keys),
+                max(int(k.max()) for k in keys)), task
+
+
+def _chain_stream(chain, offsets):
+    """Lazily yield one stream's sorted (key, line) pairs, loading ONE
+    segment at a time.  Precondition: the chain's segments have pairwise
+    ordered key ranges (checked by the caller)."""
+    for seg, _rng in chain:
+        yield from _segment_lines(seg, offsets)
 
 
 def _write_merged(f, segments, final_lines, offsets):
-    """Merge flushed segments with the final trace's lines into ``f``.
+    """mpi2prv-style k-way merge of flushed segment streams + the final
+    trace's lines into ``f``.
 
-    Segments are internally sorted; when their key ranges are also pairwise
-    ordered (no retro-injected records across flush boundaries) each segment
-    is loaded, interleaved with the final lines up to its max key, written,
-    and released — one segment in memory at a time.  Otherwise fall back to
-    a full heap merge of every stream.
+    Segments are grouped into *chains* — one per task for per-task flushes
+    (``Tracer.flush(split_tasks=True)``), a single chain for legacy
+    whole-buffer flushes.  A chain whose segments' key ranges are pairwise
+    ordered (the common case: no record is retro-injected across a flush
+    boundary) streams lazily, ONE segment resident at a time; a disordered
+    chain is pre-merged eagerly.  All chains + the final lines then merge
+    through one k-way heap, so peak memory is ~one segment per task stream
+    regardless of run length.
     """
-    ranges = [_segment_key_range(s) for s in segments]
-    live = [(s, r) for s, r in zip(segments, ranges) if r is not None]
-    sequential = all(live[i][1][1] <= live[i + 1][1][0]
-                     for i in range(len(live) - 1))
-    if not sequential:
-        streams = [_segment_lines(s, offsets) for s, _ in live] + [final_lines]
-        for _, line in heapq.merge(*streams, key=lambda x: x[0]):
-            f.write(line)
-            f.write("\n")
-        return
-    fi = 0
-    for seg, (_, hi) in live:
-        cut = fi
-        while cut < len(final_lines) and final_lines[cut][0] <= hi:
-            cut += 1
-        for _, line in heapq.merge(_segment_lines(seg, offsets),
-                                   final_lines[fi:cut], key=lambda x: x[0]):
-            f.write(line)
-            f.write("\n")
-        fi = cut
-    for _, line in final_lines[fi:]:
+    chains: dict[object, list] = {}
+    for s in segments:
+        rng, task = _segment_meta(s)
+        if rng is None:
+            continue
+        chains.setdefault("legacy" if task is None else task, []).append((s, rng))
+    streams = []
+    for chain in chains.values():
+        sequential = all(chain[i][1][1] <= chain[i + 1][1][0]
+                         for i in range(len(chain) - 1))
+        if sequential:
+            streams.append(_chain_stream(chain, offsets))
+        else:
+            streams.append(heapq.merge(
+                *(_segment_lines(seg, offsets) for seg, _ in chain),
+                key=lambda x: x[0]))
+    for _, line in heapq.merge(*streams, iter(final_lines),
+                               key=lambda x: x[0]):
         f.write(line)
         f.write("\n")
 

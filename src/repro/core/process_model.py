@@ -67,6 +67,19 @@ class ProcessModel:
         self.task_axes = names
         self.thread_axes = [a for a in thread_axes if a in mesh.axis_names]
 
+    def mesh_threads_per_task(self) -> int | None:
+        """Thread count per task dictated by the bound mesh (the flattened
+        thread-axes extent), or None outside mesh_data mode — the trace
+        builder uses this so ROW/CPU lines reflect the REAL mesh even for
+        tasks that happen to have few host-side records."""
+        if self.mode != "mesh_data" or not hasattr(self, "mesh"):
+            return None
+        import numpy as np
+
+        if not self.thread_axes:
+            return 1
+        return int(np.prod([self.mesh.shape[a] for a in self.thread_axes]))
+
     # ---- queries ----
     def task_id(self) -> int:
         return int(self._task_id_fn())

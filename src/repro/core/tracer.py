@@ -93,7 +93,8 @@ class Tracer:
         self._active = False
         return self._build_trace()
 
-    def flush(self, base: str | Path, *, emit_marker: bool = True) -> Path | None:
+    def flush(self, base: str | Path, *, emit_marker: bool = True,
+              split_tasks: bool = False) -> Path | list[Path] | None:
         """Segment full :class:`RecordBuffer`s to disk mid-run.
 
         Drains every completed record into ``<base>.seg####.npz`` (timestamps
@@ -105,11 +106,18 @@ class Tracer:
         with an unflushed run).  The currently-open state intervals are NOT
         drained — they complete in a later segment or at ``finish()``.
 
+        ``split_tasks=True`` writes one segment file PER TASK present in the
+        drained window — ``<base>.task####.seg####.npz`` — the analogue of
+        Extrae's per-rank ``.mpit`` intermediate files.  Communication
+        records are owned by their *send* endpoint.  ``write_prv`` merges
+        the per-task streams mpi2prv-style (k-way, one segment per stream
+        resident at a time).
+
         Single-drainer discipline: call between loop iterations from the
         thread driving the run.  The built-in stack sampler is paused for the
         duration of the drain; any OTHER thread emitting concurrently must be
         quiesced by the caller — a record appended while its buffer is being
-        drained can be lost.  Returns the segment path, or None if every
+        drained can be lost.  Returns the segment path(s), or None if every
         buffer was empty.
         """
         if not self._active:
@@ -137,16 +145,33 @@ class Tracer:
                             (cm, ("lsend", "psend", "lrecv", "precv"))):
             for f in fields:
                 arr[f] -= self.t0
+        if not split_tasks:
+            out = self._write_segment(base, st, evs, cm)
+        else:
+            tasks = sorted(set(st["task"]) | set(evs["task"]) | set(cm["stask"]))
+            out = [p for t in tasks
+                   if (p := self._write_segment(
+                       base, st[st["task"] == t], evs[evs["task"] == t],
+                       cm[cm["stask"] == t], task=int(t))) is not None]
+        if emit_marker:
+            self.emit(ev.EV_FLUSH, 0)
+        return out
+
+    def _write_segment(self, base, st, evs, cm, *, task: int | None = None):
+        if not (len(st) or len(evs) or len(cm)):
+            return None
         keys = [a[f] for a, f in ((st, "begin"), (evs, "time"), (cm, "lsend"))
                 if len(a)]
         key_range = np.array([min(int(k.min()) for k in keys),
                               max(int(k.max()) for k in keys)], np.int64)
-        seg = Path(f"{base}.seg{len(self.segments):04d}.npz")
+        stem = f"{base}.seg{len(self.segments):04d}.npz" if task is None \
+            else f"{base}.task{task:04d}.seg{len(self.segments):04d}.npz"
+        seg = Path(stem)
         seg.parent.mkdir(parents=True, exist_ok=True)
-        np.savez(seg, states=st, events=evs, comms=cm, key_range=key_range)
+        extra = {} if task is None else {"task": np.int64(task)}
+        np.savez(seg, states=st, events=evs, comms=cm, key_range=key_range,
+                 **extra)
         self.segments.append(seg)
-        if emit_marker:
-            self.emit(ev.EV_FLUSH, 0)
         return seg
 
     @property
@@ -372,10 +397,17 @@ class Tracer:
                      int(st["task"].max()) + 1 if len(st) else 1,
                      int(evs["task"].max()) + 1 if len(evs) else 1)
         nthreads_local = self.pm.num_threads_seen()
+        mesh_threads = self.pm.mesh_threads_per_task()
         threads_per_task = []
         for t in range(ntasks):
             extra = self._extra_threads.get(t, 0) + 1
-            threads_per_task.append(max(nthreads_local if t == self.pm.task_id() else 1, extra))
+            n = max(nthreads_local if t == self.pm.task_id() else 1, extra)
+            if mesh_threads is not None:
+                # ROW/CPU structure reflects the REAL mesh: every task gets
+                # its full model-axis thread extent even if only some threads
+                # produced records in this run
+                n = max(n, mesh_threads)
+            threads_per_task.append(n)
 
         res = rm.from_jax_devices()
         if ntasks > res.num_nodes * 64:

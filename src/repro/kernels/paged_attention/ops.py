@@ -5,6 +5,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.kernels.paged_attention.kernel import paged_decode_fwd
 
@@ -31,3 +32,35 @@ def paged_attention(cache, q, block_tables, index, *, window: int | None = None,
         jnp.asarray(index, jnp.int32), window=window, interpret=interpret,
     )
     return out.reshape(b, 1, hq, d)
+
+
+def paged_attention_sharded(cache, q, block_tables, index, *,
+                            window: int | None, rules,
+                            interpret: bool | None = None):
+    """Tensor-parallel paged decode: one kernel instance per model-axis
+    shard, each over its OWN kv-head slice of the pool and the aligned
+    q-head group (q head ``h`` belongs to kv head ``h // G``, and q heads
+    are laid out kv-major, so a contiguous Hq split matches a contiguous
+    Hkv split).  No cross-shard communication: heads are embarrassingly
+    parallel, the all-reduce happens later in the output projection.
+    """
+    from repro.compat import shard_map
+    from repro.models.cache_utils import PAGED_POOL_AXES
+
+    kv_spec = rules.pspec(PAGED_POOL_AXES)  # [NB, bs, Kh, D] pool sharding
+    q_spec = P(None, None, kv_spec[2], kv_spec[3])  # [B, 1, Hq, D]
+    hkv = cache["k"].shape[2]
+    shards = rules.axis_size(kv_spec[2]) if kv_spec[2] is not None else 1
+    if kv_spec[2] is not None and hkv % shards:
+        raise ValueError(f"kv heads {hkv} not divisible by {shards}-way shard")
+
+    def per_shard(kp, vp, qs, bt, ix):
+        return paged_attention({"k": kp, "v": vp}, qs, bt, ix,
+                               window=window, interpret=interpret)
+
+    fn = shard_map(
+        per_shard, mesh=rules.mesh,
+        in_specs=(kv_spec, kv_spec, q_spec, P(None, None), P(None)),
+        out_specs=q_spec,
+    )
+    return fn(cache["k"], cache["v"], q, block_tables, index)

@@ -3,6 +3,9 @@
     PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x22b \\
         --requests 16 --prompt-len 32 --gen 64 --trace --flush-every 16
 
+    # tensor-parallel over a 1x2 device mesh (CPU: devices are forced)
+    PYTHONPATH=src python -m repro.launch.serve --mp 2 --trace
+
 Default mode is the continuous-batching engine (``--mode continuous``):
 requests are queued with staggered prompt lengths and flow through a
 fixed slot pool whose attention K/V lives in a paged block pool
@@ -11,20 +14,61 @@ disables prompt prefix reuse); ``--mode static`` keeps the legacy
 rectangular-batch path over contiguous caches.  With ``--trace
 --flush-every N`` the trace is streamed to disk mid-run and
 segment-merged into the final ``.prv``.
+
+``--mesh dp,mp`` (or the ``--mp N`` shorthand) runs the engine
+tensor-parallel over a ``data x model`` mesh: parameters and the paged KV
+pool are sharded per :func:`repro.sharding.partition.make_serve_rules`
+(the full sharding summary is printed BEFORE the first compile — a
+misconfigured mesh fails loudly here), and a traced run records one
+stream per mesh_data TASK, merged mpi2prv-style into the final ``.prv``
+(see docs/distributed_serving.md).  On CPU the requested device count is
+forced via ``xla_force_host_platform_device_count``.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import pathlib
 import sys
 
-import jax
 import numpy as np
 
-from repro import core as xtrace
-from repro.configs import all_arch_names, get_config, reduced
-from repro.models.model import build_model
-from repro.serve.engine import ContinuousServeEngine, ServeEngine
+
+def _parse_mesh(args, parser) -> tuple[int, int] | None:
+    """(dp, mp) from --mesh/--mp, or None for single-device serving."""
+    if args.mesh and args.mp:
+        parser.error("--mesh and --mp are mutually exclusive")
+    if args.mp:
+        return (1, args.mp)
+    if args.mesh:
+        try:
+            dp, mp = (int(x) for x in args.mesh.split(","))
+        except ValueError:
+            parser.error(f"--mesh expects 'dp,mp', got {args.mesh!r}")
+        if dp < 1 or mp < 1:
+            parser.error("--mesh extents must be >= 1")
+        return (dp, mp)
+    return None
+
+
+def _ensure_devices(n: int):
+    """Make n devices visible.  On CPU the device count locks on first
+    backend init (the paper's LD_PRELOAD-ordering lesson transposed), so
+    the flag must be set before anything touches jax devices — main()
+    calls this before the first device-touching import executes a device
+    query."""
+    if n <= 1:
+        return
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            f"{flags} --xla_force_host_platform_device_count={n}".strip())
+    import jax
+
+    if len(jax.devices()) < n:
+        raise SystemExit(
+            f"mesh needs {n} devices but only {len(jax.devices())} are "
+            f"visible (backend initialized before the flag took effect?)")
 
 
 def _request_extras(cfg, rng, n):
@@ -40,8 +84,13 @@ def _request_extras(cfg, rng, n):
 
 def main(argv=None):
     p = argparse.ArgumentParser()
-    p.add_argument("--arch", default="granite-8b", choices=all_arch_names())
+    p.add_argument("--arch", default="granite-8b")
     p.add_argument("--mode", default="continuous", choices=["continuous", "static"])
+    p.add_argument("--mesh", default="",
+                   help="dp,mp — serve tensor-parallel over a data x model "
+                        "device mesh (CPU devices are forced as needed)")
+    p.add_argument("--mp", type=int, default=0,
+                   help="shorthand for --mesh 1,N (model parallelism only)")
     p.add_argument("--requests", type=int, default=8)
     p.add_argument("--slots", type=int, default=4)
     p.add_argument("--prompt-len", type=int, default=32)
@@ -61,8 +110,26 @@ def main(argv=None):
     args = p.parse_args(argv)
     if args.flush_every and not args.trace:
         p.error("--flush-every streams the trace and requires --trace")
+    mesh_shape = _parse_mesh(args, p)
+    if mesh_shape is not None:
+        _ensure_devices(mesh_shape[0] * mesh_shape[1])
+
+    # device-touching imports happen AFTER the device count is forced
+    import jax
+
+    from repro import core as xtrace
+    from repro.compat import make_mesh
+    from repro.configs import all_arch_names, get_config, reduced
+    from repro.models.model import build_model
+    from repro.serve.engine import ContinuousServeEngine, ServeEngine
+
+    if args.arch not in all_arch_names():
+        p.error(f"unknown --arch {args.arch!r} (choose from "
+                f"{', '.join(all_arch_names())})")
 
     cfg = reduced(get_config(args.arch))
+    mesh = (make_mesh(mesh_shape, ("data", "model"))
+            if mesh_shape is not None else None)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
     out = pathlib.Path(args.out)
@@ -75,7 +142,8 @@ def main(argv=None):
     max_len = args.prompt_len + cfg.num_patches + args.gen
 
     if args.mode == "static":
-        engine = ServeEngine(cfg, params, max_len=max_len, tracer=tracer)
+        engine = ServeEngine(cfg, params, max_len=max_len, tracer=tracer,
+                             mesh=mesh)
         stats = engine.throughput_stats(prompts, num_tokens=args.gen,
                                         extras=extras, temperature=args.temperature)
     else:
@@ -89,7 +157,14 @@ def main(argv=None):
             tracer=tracer, temperature=args.temperature,
             flush_every=args.flush_every,
             flush_base=out / "serve" if args.flush_every else None,
+            mesh=mesh,
         )
+        if mesh is not None:
+            # fail loudly before compile: every param pspec + the KV-pool
+            # placement, diffable against what the operator expected
+            print("[serve] sharding summary:")
+            for line in engine.sharding_summary():
+                print(f"  {line}")
         # staggered prompt lengths exercise variable-length admission
         for i in range(args.requests):
             plen = max(1, args.prompt_len - (i % 4))
@@ -98,7 +173,10 @@ def main(argv=None):
         engine.run()
         stats = engine.throughput_stats()
 
-    print(f"[serve] {args.arch} mode={args.mode}: {stats['tokens']} tokens in "
+    mesh_note = (f" mesh={mesh_shape[0]}dx{mesh_shape[1]}m"
+                 if mesh_shape is not None else "")
+    print(f"[serve] {args.arch} mode={args.mode}{mesh_note}: "
+          f"{stats['tokens']} tokens in "
           f"{stats['seconds']:.2f}s = {stats['tok_per_s']:.1f} tok/s "
           f"(host syncs: {stats.get('host_syncs', '?')}; CPU smoke scale)")
     if args.mode == "continuous" and engine.pool is not None:

@@ -22,9 +22,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.models import cache_utils
+from repro.models.cache_utils import PAGED_POOL_AXES
 from repro.models.layers import accum_dtype, dense, dense_decl, rope
 from repro.models.params import ParamDecl
-from repro.sharding.partition import constrain
+from repro.sharding.partition import constrain, current_rules
 
 NEG_INF = -2.0e38
 
@@ -225,9 +227,13 @@ def paged_cache_spec(cfg, num_blocks: int, block_size: int, dtype):
 
 
 CACHE_AXES = {
-    "k": ("cache_batch", "cache_seq", "cache_kv", "cache_hd"),
-    "v": ("cache_batch", "cache_seq", "cache_kv", "cache_hd"),
+    "k": cache_utils.SLOT_CACHE_AXES,
+    "v": cache_utils.SLOT_CACHE_AXES,
 }
+
+# Logical axes of the pooled layout [num_blocks, block_size, Kh, D]:
+# kv-head (or, last resort, head_dim) sharding over the serve mesh.
+PAGED_CACHE_AXES = {"k": PAGED_POOL_AXES, "v": PAGED_POOL_AXES}
 
 PAGED_LEAF_MASK = {"k": True, "v": True}
 
@@ -340,30 +346,11 @@ def _decode_attend(q, k_new, v_new, cache, index, window):
     kc, vc = cache["k"], cache["v"]
     C = kc.shape[1]
     index = jnp.asarray(index, jnp.int32)
-    slots = jnp.arange(C, dtype=jnp.int32)
+    kc, vc = cache_utils.slot_cache_write(kc, vc, k_new, v_new, index, window)
+    kv_pos, kv_valid = cache_utils.slot_positions(index, C, window)
     if index.ndim == 0:
-        slot = index % C if window is not None else index
-        kc = jax.lax.dynamic_update_slice_in_dim(kc, k_new.astype(kc.dtype), slot, axis=1)
-        vc = jax.lax.dynamic_update_slice_in_dim(vc, v_new.astype(vc.dtype), slot, axis=1)
-        if window is not None:
-            # position stored in slot s: greatest p <= index with p % C == s
-            kv_pos = index - ((index - slots) % C)
-            kv_valid = kv_pos >= 0
-        else:
-            kv_pos = slots
-            kv_valid = slots <= index
         q_pos = jnp.full((q.shape[1],), index, jnp.int32)
     else:
-        slot = index % C if window is not None else index  # [B]
-        hit = slots[None, :] == slot[:, None]  # [B, C] one-hot write mask
-        kc = jnp.where(hit[..., None, None], k_new.astype(kc.dtype), kc)
-        vc = jnp.where(hit[..., None, None], v_new.astype(vc.dtype), vc)
-        if window is not None:
-            kv_pos = index[:, None] - ((index[:, None] - slots[None, :]) % C)
-            kv_valid = kv_pos >= 0
-        else:
-            kv_pos = jnp.broadcast_to(slots[None, :], (index.shape[0], C))
-            kv_valid = slots[None, :] <= index[:, None]
         q_pos = index[:, None]  # [B, Sq=1]
     o = multi_head_attention(
         q, kc, vc, q_pos=q_pos, kv_pos=kv_pos, causal=True,
@@ -384,6 +371,8 @@ def _chunk_attend(q, k_new, v_new, prefix, positions, window, cfg):
     P = prefix["k"].shape[1]
     kc = jnp.concatenate([prefix["k"].astype(k_new.dtype), k_new], axis=1)
     vc = jnp.concatenate([prefix["v"].astype(v_new.dtype), v_new], axis=1)
+    kc = constrain(kc, ("act_batch", None, "act_kv", None))
+    vc = constrain(vc, ("act_batch", None, "act_kv", None))
     kv_pos = np.arange(P + k_new.shape[1], dtype=np.int32)
     o = multi_head_attention(
         q, kc, vc, q_pos=positions, kv_pos=kv_pos, causal=True,
@@ -407,31 +396,45 @@ def _paged_decode_attend(q, k_new, v_new, cache, index, block_tables, window, cf
     block 0, so their frozen writes scribble garbage nobody reads.
     """
     kp, vp = cache["k"], cache["v"]
-    nb, bs = kp.shape[0], kp.shape[1]
+    bs = kp.shape[1]
     B, W = block_tables.shape
     index = jnp.asarray(index, jnp.int32)
 
     # ---- write: one token per slot at table[b, index//bs], offset index%bs
-    blk = jnp.take_along_axis(block_tables, (index // bs)[:, None], axis=1)[:, 0]
-    dest = blk * bs + index % bs  # [B] flat positions, unique per live slot
-    kf = kp.reshape((nb * bs,) + kp.shape[2:])
-    vf = vp.reshape((nb * bs,) + vp.shape[2:])
-    kf = kf.at[dest].set(k_new[:, 0].astype(kf.dtype))
-    vf = vf.at[dest].set(v_new[:, 0].astype(vf.dtype))
-    kp, vp = kf.reshape(kp.shape), vf.reshape(vp.shape)
+    kp, vp = cache_utils.paged_cache_write(kp, vp, k_new, v_new,
+                                           block_tables, index)
 
-    # ---- read: gather the slot's blocks into its logical [W*bs] view
-    kg = kp[block_tables].reshape(B, W * bs, *kp.shape[2:])
-    vg = vp[block_tables].reshape(B, W * bs, *vp.shape[2:])
-    kv_pos = jnp.broadcast_to(jnp.arange(W * bs, dtype=jnp.int32)[None], (B, W * bs))
-    kv_valid = kv_pos <= index[:, None]
-    q_pos = index[:, None]  # [B, Sq=1]
-    if getattr(cfg, "use_paged_kernel", False):
+    rules = current_rules()
+    kv_shards = (rules.axis_size(rules.axis("cache_kv"))
+                 if rules is not None else 1)
+    hd_shards = (rules.axis_size(rules.axis("cache_hd"))
+                 if rules is not None else 1)
+    # head_dim sharding (the rules' last resort) contracts inside the
+    # scores: it must use the gather path (GSPMD partitions the dots), not
+    # the head-parallel kernel — a plain pallas_call over a D-sharded pool
+    # would hand XLA an unpartitionable custom call
+    if getattr(cfg, "use_paged_kernel", False) and hd_shards == 1:
         from repro.kernels.paged_attention import ops as pa_ops
 
-        o = pa_ops.paged_attention({"k": kp, "v": vp}, q, block_tables, index,
-                                   window=window)
+        if kv_shards > 1:
+            # per-shard head slice: each model-axis shard runs the kernel
+            # over its own kv heads (and the aligned q-head group)
+            o = pa_ops.paged_attention_sharded(
+                {"k": kp, "v": vp}, q, block_tables, index, window=window,
+                rules=rules)
+        else:
+            o = pa_ops.paged_attention({"k": kp, "v": vp}, q, block_tables,
+                                       index, window=window)
     else:
+        # ---- read: gather the slot's blocks into its logical [W*bs] view
+        kg = kp[block_tables].reshape(B, W * bs, *kp.shape[2:])
+        vg = vp[block_tables].reshape(B, W * bs, *vp.shape[2:])
+        kg = constrain(kg, ("act_batch", None, "act_kv", "cache_hd"))
+        vg = constrain(vg, ("act_batch", None, "act_kv", "cache_hd"))
+        kv_pos = jnp.broadcast_to(
+            jnp.arange(W * bs, dtype=jnp.int32)[None], (B, W * bs))
+        kv_valid = kv_pos <= index[:, None]
+        q_pos = index[:, None]  # [B, Sq=1]
         o = multi_head_attention(
             q, kg, vg, q_pos=q_pos, kv_pos=kv_pos, causal=True,
             window=window, kv_valid=kv_valid, block_kv=0,

@@ -1,0 +1,95 @@
+"""Shared decode-cache write/position helpers.
+
+The per-slot position arithmetic and the one-hot / flat-scatter cache
+writes used by single-token decode were previously duplicated across the
+attention paths (and re-derived by the encoder-decoder stack through
+them).  They live here once, with sharding constraints threaded through:
+every helper constrains its outputs by *logical* axis names, so the same
+code is correct single-device (constrain is a no-op without rules) and
+under the serve mesh (pooled K/V sharded on kv-heads / head_dim).
+
+Position convention (both full and ring caches): slot ``s`` of a
+capacity-``C`` cache holds absolute position ``p`` with ``p % C == s``,
+taking the greatest such ``p`` at or below the decode index.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.sharding.partition import constrain
+
+# Logical axes of ONE layer's pooled KV leaf [num_blocks, block_size, Kh, D].
+PAGED_POOL_AXES = (None, None, "cache_kv", "cache_hd")
+# Logical axes of ONE layer's contiguous KV leaf [B, C, Kh, D].
+SLOT_CACHE_AXES = ("cache_batch", "cache_seq", "cache_kv", "cache_hd")
+
+
+def ring_slot(index, capacity: int, window: int | None):
+    """Cache slot for absolute position ``index`` (scalar or [B])."""
+    return index % capacity if window is not None else index
+
+
+def slot_positions(index, capacity: int, window: int | None):
+    """(kv_pos, kv_valid) for a capacity-``C`` slot cache at decode index.
+
+    index scalar -> [C] vectors; index [B] -> [B, C] (continuous batching:
+    every slot at its own depth).  For ring caches the position stored in
+    slot ``s`` is the greatest ``p <= index`` with ``p % C == s``; for full
+    caches slot ``s`` simply holds position ``s``.
+    """
+    slots = jnp.arange(capacity, dtype=jnp.int32)
+    if index.ndim == 0:
+        if window is not None:
+            kv_pos = index - ((index - slots) % capacity)
+            return kv_pos, kv_pos >= 0
+        return slots, slots <= index
+    if window is not None:
+        kv_pos = index[:, None] - ((index[:, None] - slots[None, :]) % capacity)
+        return kv_pos, kv_pos >= 0
+    kv_pos = jnp.broadcast_to(slots[None, :], (index.shape[0], capacity))
+    return kv_pos, slots[None, :] <= index[:, None]
+
+
+def slot_cache_write(kc, vc, k_new, v_new, index, window: int | None):
+    """Write one token per batch row into a contiguous [B, C, Kh, D] cache.
+
+    Scalar ``index`` (lockstep batch) uses a dynamic-slice update; vector
+    ``index`` [B] (continuous batching) lowers to a per-example one-hot
+    select, which keeps the write batchable without scatter.
+    """
+    import jax
+
+    C = kc.shape[1]
+    slot = ring_slot(index, C, window)
+    if index.ndim == 0:
+        kc = jax.lax.dynamic_update_slice_in_dim(
+            kc, k_new.astype(kc.dtype), slot, axis=1)
+        vc = jax.lax.dynamic_update_slice_in_dim(
+            vc, v_new.astype(vc.dtype), slot, axis=1)
+    else:
+        slots = jnp.arange(C, dtype=jnp.int32)
+        hit = slots[None, :] == slot[:, None]  # [B, C] one-hot write mask
+        kc = jnp.where(hit[..., None, None], k_new.astype(kc.dtype), kc)
+        vc = jnp.where(hit[..., None, None], v_new.astype(vc.dtype), vc)
+    kc = constrain(kc, SLOT_CACHE_AXES)
+    vc = constrain(vc, SLOT_CACHE_AXES)
+    return kc, vc
+
+
+def paged_cache_write(kp, vp, k_new, v_new, block_tables, index):
+    """Write one token per slot into the pooled [NB, bs, Kh, D] layout.
+
+    The destination is ``table[b, index // bs] * bs + index % bs`` — a flat
+    scatter over the (blocks * block_size) dim, unique per live slot
+    (retired slots point at the NULL block, absorbing frozen writes).
+    """
+    nb, bs = kp.shape[0], kp.shape[1]
+    blk = jnp.take_along_axis(block_tables, (index // bs)[:, None], axis=1)[:, 0]
+    dest = blk * bs + index % bs  # [B] flat positions
+    kf = kp.reshape((nb * bs,) + kp.shape[2:])
+    vf = vp.reshape((nb * bs,) + vp.shape[2:])
+    kf = kf.at[dest].set(k_new[:, 0].astype(kf.dtype))
+    vf = vf.at[dest].set(v_new[:, 0].astype(vf.dtype))
+    kp = constrain(kf.reshape(kp.shape), PAGED_POOL_AXES)
+    vp = constrain(vf.reshape(vp.shape), PAGED_POOL_AXES)
+    return kp, vp

@@ -123,6 +123,16 @@ def decoder_paged_leaf_mask():
     return {"self": {"k": True, "v": True}, "cross": {"k": False, "v": False}}
 
 
+def decoder_paged_cache_axes():
+    """Logical axes matching :func:`decoder_paged_cache_spec`: pooled
+    self-attention K/V kv-head sharded, slot-indexed cross K/V replicated
+    on the batch dim."""
+    pooled = ("layers",) + attn_mod.PAGED_CACHE_AXES["k"]
+    xkv = ("layers", "cache_batch", "cache_xseq", "cache_kv", "cache_hd")
+    return {"self": {"k": pooled, "v": pooled},
+            "cross": {"k": xkv, "v": xkv}}
+
+
 def decode_stack(params, x, cfg, *, positions, enc_out=None, caches=None, index=None,
                  mode="train", cache_len=None, block_tables=None):
     """Decoder layers.  Returns (x, new_caches_or_None)."""

@@ -206,6 +206,11 @@ class DecoderLM(_Base):
         """Bool tree: True where the cache leaf is block-pooled."""
         return tf_mod.stack_paged_leaf_mask(self.cfg, self.dtype)
 
+    def paged_cache_axes(self):
+        """Logical-axes tree matching :meth:`paged_cache_specs` (serve-mesh
+        placement of the pooled/recurrent decode state)."""
+        return tf_mod.stack_paged_cache_axes(self.cfg)
+
     def fully_paged(self) -> bool:
         """True when EVERY cache leaf is pooled — the precondition for
         prefix reuse (a prefix hit must restore the complete layer state)."""
@@ -297,6 +302,9 @@ class EncDecLM(_Base):
 
     def paged_leaf_mask(self):
         return encdec_mod.decoder_paged_leaf_mask()
+
+    def paged_cache_axes(self):
+        return encdec_mod.decoder_paged_cache_axes()
 
     def fully_paged(self) -> bool:
         return False  # cross-attention K/V is slot-resident

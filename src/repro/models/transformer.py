@@ -172,6 +172,12 @@ def _layer_paged_mask(cfg, kind, dtype):
     return dict(attn_mod.PAGED_LEAF_MASK)
 
 
+def _layer_paged_axes(kind: str):
+    if kind in ("ssm", "rec"):
+        return layer_cache_axes(kind)
+    return dict(attn_mod.PAGED_CACHE_AXES)
+
+
 def _per_unit(cfg, kinds, fn):
     if len(kinds) == 1:
         return fn(kinds[0])
@@ -201,6 +207,20 @@ def stack_paged_leaf_mask(cfg, dtype):
     if rem:
         mask["tail"] = _per_unit(cfg, kinds[:rem], mk)
     return mask
+
+
+def stack_paged_cache_axes(cfg):
+    """Logical-axes tree matching :func:`stack_paged_cache_spec` — what the
+    serve engine hands to ``Rules.tree_shardings`` to place the pooled KV
+    leaves (kv-head sharded when divisible) and the slot-indexed recurrent
+    leaves (replicated batch) on the mesh."""
+    kinds = unit_kinds(cfg)
+    _, rem = scan_counts(cfg)
+    axes = {"units": _stack_axes(_per_unit(cfg, kinds, _layer_paged_axes), 0)}
+    if rem:
+        axes["tail"] = _stack_axes(
+            _per_unit(cfg, kinds[:rem], _layer_paged_axes), 0)
+    return axes
 
 
 # ----------------------------------------------------------------------

@@ -30,6 +30,20 @@ buffers to disk mid-run via ``Tracer.flush`` (EV_FLUSH-bracketed).
 :class:`ServeEngine` keeps the original fixed-batch ``generate`` API over
 per-request contiguous caches — it is the *contiguous equivalence oracle*
 the paged engine is tested against (greedy decode must match bit-for-bit).
+
+Both engines optionally run **tensor-parallel over a JAX mesh**: pass
+``mesh=`` (and optionally ``rules=``; defaults to
+:func:`repro.sharding.partition.make_serve_rules`) and parameters, the
+paged KV block pool and recurrent leaves are placed per the serve rules
+(GQA kv-heads split across the "model" axis when divisible), the jitted
+prefill/admit/burst executables become mesh-aware with explicit in/out
+shardings, and — when a tracer is attached — the engine binds the
+tracer's process model to the mesh (``mesh_data``: TASK = data
+coordinate, THREAD = model coordinate), captures each burst executable's
+compiled collective schedule (:mod:`repro.core.hlo_comm`) and replays it
+per decode window onto the correct (task, thread) endpoints, exactly like
+the training-side distributed trace.  The pipelined ≤1-host-sync-per-
+decode-iteration structure is unchanged by sharding.
 """
 from __future__ import annotations
 
@@ -42,14 +56,45 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import events as ev
+from repro.core.comm_replay import device_endpoint_map, replay_step
+from repro.core.hlo_comm import parse_collectives
 from repro.core.sampling import sample_logits
 from repro.core.tracer import Tracer
 from repro.models.model import build_model
 from repro.serve.block_pool import NULL_BLOCK, BlockPool
 from repro.serve.queue import Request, RequestQueue, _now_ns
 from repro.serve.scheduler import Scheduler
+from repro.sharding.partition import make_serve_rules, use_rules
 
 EV_TOKENS_DECODED = 84_001  # user event: tokens decoded so far (one run)
+
+SERVE_TASK_AXES = ("pod", "data")  # trace process model: TASK = data coord
+SERVE_THREAD_AXES = ("model",)  # THREAD = model coord
+
+
+class _MeshState:
+    """Sharding + trace-replay state for a mesh-parallel engine."""
+
+    def __init__(self, cfg, model, mesh, rules, tracer):
+        from jax.sharding import NamedSharding, PartitionSpec
+
+        self.mesh = mesh
+        self.rules = rules if rules is not None else make_serve_rules(cfg, mesh)
+        self.param_sh = self.rules.tree_shardings(model.param_axes())
+        self.replicated = NamedSharding(mesh, PartitionSpec())
+        self.endpoints = None
+        if tracer is not None:
+            # per-task record streams keyed by the mesh_data mapping; the
+            # host thread emits as (task 0, thread 0), device-side
+            # collectives are injected per (task, thread) endpoint
+            tracer.pm.set_mode("mesh_data")
+            tracer.pm.bind_mesh(mesh, task_axes=SERVE_TASK_AXES,
+                                thread_axes=SERVE_THREAD_AXES)
+            self.endpoints = device_endpoint_map(
+                mesh, task_axes=SERVE_TASK_AXES, thread_axes=SERVE_THREAD_AXES)
+
+    def put_replicated(self, x):
+        return jax.device_put(x, self.replicated)
 
 
 class ContinuousServeEngine:
@@ -60,9 +105,14 @@ class ContinuousServeEngine:
                  prefix_cache: bool = True, tracer: Tracer | None = None,
                  temperature: float = 0.0, seed: int = 0,
                  max_prefills_per_iter: int = 1, max_decode_burst: int = 8,
-                 flush_every: int = 0, flush_base=None):
+                 flush_every: int = 0, flush_base=None,
+                 mesh=None, rules=None):
         self.cfg = cfg
         self.model = build_model(cfg)
+        self.meshstate = (_MeshState(cfg, self.model, mesh, rules, tracer)
+                          if mesh is not None else None)
+        if self.meshstate is not None:
+            params = jax.device_put(params, self.meshstate.param_sh)
         self.params = params
         self.num_slots = int(num_slots)
         self.block_size = bs = int(block_size)
@@ -115,17 +165,26 @@ class ContinuousServeEngine:
 
         # --- device state: pooled caches + per-slot registers ---
         specs = self.model.paged_cache_specs(self.num_slots, self.num_blocks, bs)
-        self._caches = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
-        self._tok = jnp.zeros((self.num_slots,), jnp.int32)
-        self._idx = jnp.zeros((self.num_slots,), jnp.int32)
+        if self.meshstate is not None:
+            self._cache_sh = self.meshstate.rules.tree_shardings(
+                self.model.paged_cache_axes())
+            self._caches = jax.tree.map(
+                lambda s, sh: jax.device_put(jnp.zeros(s.shape, s.dtype), sh),
+                specs, self._cache_sh)
+        else:
+            self._cache_sh = None
+            self._caches = jax.tree.map(
+                lambda s: jnp.zeros(s.shape, s.dtype), specs)
+        self._tok = self._dev(jnp.zeros((self.num_slots,), jnp.int32))
+        self._idx = self._dev(jnp.zeros((self.num_slots,), jnp.int32))
         self._active = np.zeros((self.num_slots,), bool)  # host-side mirror
-        self._active_dev = jnp.asarray(self._active)
+        self._active_dev = self._dev(jnp.asarray(self._active))
         self._active_dirty = False
         # per-slot block tables; entry w maps positions [w*bs, (w+1)*bs).
         # NULL rows make stale frozen-slot writes land in the garbage block.
         self._tables = np.full((self.num_slots, self.blocks_per_slot),
                                NULL_BLOCK, np.int32)
-        self._tables_dev = jnp.asarray(self._tables)
+        self._tables_dev = self._dev(jnp.asarray(self._tables))
         self._tables_dirty = False
         self._slot_blocks: list[list[int]] = [[] for _ in range(self.num_slots)]
         # prefill-time start position per slot (request input_ids() grows as
@@ -142,15 +201,77 @@ class ContinuousServeEngine:
         self._chunk = jax.jit(self._chunk_impl, static_argnames=("start", "cache_len"))
         # tok/idx buffers are NOT donated: the pipelined fetch of the previous
         # burst's tokens may still reference them
-        self._admit = jax.jit(self._admit_impl, donate_argnums=(0,))
-        self._burst = jax.jit(self._burst_impl, donate_argnums=(1,),  # caches
-                              static_argnames=("steps",))
+        if self.meshstate is not None:
+            # explicit in/out shardings pin the steady-state placement: the
+            # donated pool keeps its kv-head sharding, per-slot registers and
+            # block tables stay replicated — no silent resharding per burst
+            # input placement is pinned by committed arrays (params/caches
+            # device_put at init, registers through _dev); this jax rejects
+            # in_shardings alongside static kwargs, so outputs carry the
+            # explicit specs
+            r = self.meshstate.replicated
+            self._admit = jax.jit(self._admit_impl, donate_argnums=(0,),
+                                  out_shardings=(self._cache_sh, r, r))
+            self._burst = jax.jit(
+                self._burst_impl, donate_argnums=(1,),  # caches
+                static_argnames=("steps",),
+                out_shardings=(self._cache_sh, r, r, r))
+        else:
+            self._admit = jax.jit(self._admit_impl, donate_argnums=(0,))
+            self._burst = jax.jit(self._burst_impl, donate_argnums=(1,),  # caches
+                                  static_argnames=("steps",))
+        self._aot_cache: dict = {}  # signature -> (compiled, collective ops)
 
         # --- run statistics ---
         self.stats = {"iterations": 0, "prefills": 0, "tokens_decoded": 0,
                       "prefill_tokens": 0, "prefix_hit_tokens": 0,
                       "preemptions": 0, "peak_active": 0, "peak_blocks": 0,
                       "host_syncs": 0, "decode_syncs": 0, "seconds": 0.0}
+
+    # ------------------------------------------------------------------
+    # mesh plumbing
+    # ------------------------------------------------------------------
+    def _dev(self, x):
+        """Place an engine register on device — replicated over the mesh
+        when one is attached (host-mastered state is never sharded)."""
+        return self.meshstate.put_replicated(x) if self.meshstate else x
+
+    def _with_rules(self):
+        return (use_rules(self.meshstate.rules) if self.meshstate
+                else contextlib.nullcontext())
+
+    def _traced_call(self, tag: str, jitfn, args: tuple, statics: dict):
+        """Run a jitted engine kernel; returns (outputs, collective_ops).
+
+        On the traced-mesh path the kernel goes through an AOT-compiled
+        executable (cached per shape signature) so the optimized HLO's
+        collective schedule is extracted once — the caller replays it onto
+        the (task, thread) mesh endpoints over the measured window, the
+        serving analogue of the training-side distributed trace.
+        """
+        ms = self.meshstate
+        if ms is None or ms.endpoints is None:
+            with self._with_rules():
+                return jitfn(*args, **statics), None
+        key = (tag, tuple(sorted(statics.items())),
+               tuple(tuple(x.shape) for x in jax.tree.leaves(args)
+                     if hasattr(x, "shape")))
+        ent = self._aot_cache.get(key)
+        if ent is None:
+            with self._with_rules():
+                compiled = jitfn.lower(*args, **statics).compile()
+            ops = parse_collectives(compiled.as_text(),
+                                    total_devices=ms.mesh.size)
+            ent = self._aot_cache[key] = (compiled, ops)
+        compiled, ops = ent
+        return compiled(*args), ops
+
+    def _replay(self, ops, t0: int, t1: int):
+        """Inject one executable's collective schedule over [t0, t1)."""
+        ms = self.meshstate
+        if ops and ms is not None and ms.endpoints is not None \
+                and self.tracer is not None and self.tracer.active:
+            replay_step(self.tracer, ops, t0, t1, ms.endpoints)
 
     # ------------------------------------------------------------------
     # jitted kernels
@@ -360,25 +481,28 @@ class ContinuousServeEngine:
                     np.stack([ids[hit:] for ids in inputs]), jnp.int32)}
                 prefix_ids = jnp.asarray(
                     [self._slot_blocks[s][:m] for s in slots], jnp.int32)
-                new_caches, tok1 = self._chunk(
-                    self.params, self._caches, batch, prefix_ids, key,
-                    start=hit, cache_len=cache_len)
+                (new_caches, tok1), coll_ops = self._traced_call(
+                    "chunk", self._chunk,
+                    (self.params, self._caches, batch, prefix_ids, key),
+                    {"start": hit, "cache_len": cache_len})
                 block_ids = np.asarray(
                     [self._slot_blocks[s][m:w0] for s in slots], np.int32)
             else:
                 batch = {"tokens": jnp.asarray(np.stack(inputs), jnp.int32)}
                 for k in reqs[0].extras:
                     batch[k] = jnp.asarray(np.stack([r.extras[k] for r in reqs]))
-                new_caches, tok1 = self._prefill(self.params, batch, key,
-                                                 cache_len=cache_len)
+                (new_caches, tok1), coll_ops = self._traced_call(
+                    "prefill", self._prefill, (self.params, batch, key),
+                    {"cache_len": cache_len})
                 block_ids = np.asarray(
                     [self._slot_blocks[s][:w0] for s in slots], np.int32
                 ).reshape(len(slots), w0)
-        self._caches, self._tok, self._idx = self._admit(
-            self._caches, new_caches, self._tok, self._idx,
-            jnp.asarray(slots, jnp.int32), jnp.asarray(block_ids, jnp.int32),
-            tok1, jnp.asarray(starts, jnp.int32),
-        )
+        with self._with_rules():
+            self._caches, self._tok, self._idx = self._admit(
+                self._caches, new_caches, self._tok, self._idx,
+                jnp.asarray(slots, jnp.int32), jnp.asarray(block_ids, jnp.int32),
+                tok1, jnp.asarray(starts, jnp.int32),
+            )
         for slot, st in zip(slots, starts):
             self._slot_start[slot] = st
         firsts = np.asarray(tok1)  # TTFT: first tokens materialized here
@@ -395,6 +519,7 @@ class ContinuousServeEngine:
                 for j, h in enumerate(hashes):
                     self.pool.register(self._slot_blocks[slot][j], h)
         t_first = _now_ns()
+        self._replay(coll_ops, t_admit, t_first)
         for (slot, req), first in zip(members, firsts):
             req.t_admit_ns = t_admit
             if req.t_first_ns < 0:
@@ -472,7 +597,7 @@ class ContinuousServeEngine:
             pairs = self._preempt_one(pairs)
         return pairs, 0
 
-    def _process_tokens(self, toks_dev, pairs):
+    def _process_tokens(self, toks_dev, pairs, t_dispatch=None, coll_ops=None):
         """Record one decode burst's [steps, num_slots] token block.  Called
         while the NEXT burst computes on device, so the blocking fetch
         overlaps compute and host bookkeeping costs nothing on the critical
@@ -480,6 +605,10 @@ class ContinuousServeEngine:
         (they were computed against blocks that were valid at dispatch)."""
         tr = self.tracer
         toks = np.asarray(toks_dev)  # the ONE host sync of the burst
+        if t_dispatch is not None:
+            # the fetch completing bounds the burst's device window: replay
+            # its compiled collective schedule onto the mesh endpoints
+            self._replay(coll_ops, t_dispatch, _now_ns())
         self.stats["host_syncs"] += 1
         self.stats["decode_syncs"] += 1
         for row in toks:
@@ -498,7 +627,10 @@ class ContinuousServeEngine:
             tr.emit(ev.EV_TOKENS_TOTAL, self.stats["tokens_decoded"])
             tr.emit(ev.EV_QUEUE_DEPTH, len(self.queue))
             if self.flush_every and self._since_flush >= self.flush_every:
-                tr.flush(self.flush_base)
+                # mesh runs stream one segment file PER TASK (Extrae's
+                # per-rank .mpit discipline; merged mpi2prv-style at write)
+                tr.flush(self.flush_base,
+                         split_tasks=self.meshstate is not None)
                 self._since_flush = 0
 
     def _drain_preempted(self):
@@ -550,17 +682,21 @@ class ContinuousServeEngine:
                        else jax.random.fold_in(self._key, self._dispatches))
                 self._dispatches += 1
                 if self._active_dirty:
-                    self._active_dev = jnp.asarray(self._active)
+                    self._active_dev = self._dev(jnp.asarray(self._active))
                     self._active_dirty = False
                 if self._tables_dirty:
-                    self._tables_dev = jnp.asarray(self._tables)
+                    self._tables_dev = self._dev(jnp.asarray(self._tables))
                     self._tables_dirty = False
+                t_dispatch = _now_ns()
                 with (tr.phase(ev.PHASE_DECODE) if tr else contextlib.nullcontext()), \
                         (tr.user_function(name="decode_step") if tr
                          else contextlib.nullcontext()):
-                    self._caches, self._tok, self._idx, toks = self._burst(
-                        self.params, self._caches, self._tok, self._idx,
-                        self._active_dev, self._tables_dev, key, steps=steps)
+                    (self._caches, self._tok, self._idx, toks), coll_ops = \
+                        self._traced_call(
+                            "burst", self._burst,
+                            (self.params, self._caches, self._tok, self._idx,
+                             self._active_dev, self._tables_dev, key),
+                            {"steps": steps})
                 for slot, req in pairs:
                     req.scheduled += steps
                     if req.scheduled >= req.max_new_tokens:
@@ -568,7 +704,7 @@ class ContinuousServeEngine:
                         # (it stays occupied until the tokens are processed)
                         self._active[slot] = False
                         self._active_dirty = True
-                dispatched = (toks, pairs)
+                dispatched = (toks, pairs, t_dispatch, coll_ops)
             if pending is not None:
                 self._process_tokens(*pending)  # overlaps the dispatched burst
             self._drain_preempted()
@@ -588,6 +724,24 @@ class ContinuousServeEngine:
             reqs.append(self.submit(prompts[b], num_tokens, extras=ex))
         out = self.run()
         return np.stack([out[r.rid] for r in reqs])
+
+    def sharding_summary(self) -> list[str]:
+        """``path: PartitionSpec`` lines for every parameter and decode-state
+        leaf — printed by the serve CLI *before* the first compile so a
+        misconfigured mesh is visible (and fails loudly in make_serve_rules)
+        rather than surfacing as an opaque XLA error."""
+        if self.meshstate is None:
+            return ["single-device (no mesh)"]
+        from repro.sharding.partition import describe_shardings
+
+        rules = self.meshstate.rules
+        mesh = self.meshstate.mesh
+        head = [f"mesh: {dict(mesh.shape)} over {mesh.size} devices"]
+        return (head
+                + describe_shardings(rules, self.model.param_axes(),
+                                     prefix="param/")
+                + describe_shardings(rules, self.model.paged_cache_axes(),
+                                     prefix="kv-pool/"))
 
     def throughput_stats(self) -> dict:
         total, dt = self.stats["tokens_decoded"], self.stats["seconds"]
@@ -612,9 +766,13 @@ class ServeEngine:
     per token."""
 
     def __init__(self, cfg: ModelConfig, params, *, max_len: int,
-                 tracer: Tracer | None = None):
+                 tracer: Tracer | None = None, mesh=None, rules=None):
         self.cfg = cfg
         self.model = build_model(cfg)
+        self.meshstate = (_MeshState(cfg, self.model, mesh, rules, tracer)
+                          if mesh is not None else None)
+        if self.meshstate is not None:
+            params = jax.device_put(params, self.meshstate.param_sh)
         self.params = params
         self.max_len = max_len
         self.tracer = tracer
@@ -626,6 +784,10 @@ class ServeEngine:
         )
         self._decode_sample = jax.jit(self._decode_sample_impl,
                                       static_argnames=("temperature",))
+
+    def _with_rules(self):
+        return (use_rules(self.meshstate.rules) if self.meshstate
+                else contextlib.nullcontext())
 
     def _decode_sample_impl(self, params, caches, tok, idx, key, *, temperature):
         caches, logits = self.model.decode_step(params, caches, tok, idx)
@@ -641,11 +803,13 @@ class ServeEngine:
         batch = {"tokens": jnp.asarray(prompts, jnp.int32), **(extras or {})}
         tr = self.tracer
         if tr:
-            with tr.phase(ev.PHASE_EVAL), tr.user_function(name="prefill"):
+            with tr.phase(ev.PHASE_EVAL), tr.user_function(name="prefill"), \
+                    self._with_rules():
                 caches, logits = self._prefill(self.params, batch)
                 jax.block_until_ready(logits)
         else:
-            caches, logits = self._prefill(self.params, batch)
+            with self._with_rules():
+                caches, logits = self._prefill(self.params, batch)
 
         key = jax.random.PRNGKey(seed)
         out = np.zeros((b, num_tokens), np.int32)
@@ -657,13 +821,14 @@ class ServeEngine:
             idx = jnp.int32(start + i - 1)
             sub = jax.random.fold_in(key, i)
             if tr:
-                with tr.user_function(name="decode_step"):
+                with tr.user_function(name="decode_step"), self._with_rules():
                     caches, tok = self._decode_sample(
                         self.params, caches, tok, idx, sub, temperature=temperature)
                 tr.emit(EV_TOKENS_DECODED, i)
             else:
-                caches, tok = self._decode_sample(
-                    self.params, caches, tok, idx, sub, temperature=temperature)
+                with self._with_rules():
+                    caches, tok = self._decode_sample(
+                        self.params, caches, tok, idx, sub, temperature=temperature)
             out[:, i] = np.asarray(tok)
             self.host_syncs += 1
         return out

@@ -244,3 +244,74 @@ def padded_vocab(vocab_size: int, multiple: int = 128) -> int:
     """Vocab padded for TP divisibility + MXU alignment (embedding rows that
     never receive gradient; logits for pad ids are masked to -inf)."""
     return (vocab_size + multiple - 1) // multiple * multiple
+
+
+# ----------------------------------------------------------------------
+# Serve-side rules (paged continuous-batching engine over a mesh)
+# ----------------------------------------------------------------------
+
+
+def make_serve_rules(cfg, mesh: Mesh, *, overrides: dict | None = None) -> Rules:
+    """Rules for the tensor-parallel serve stack.
+
+    Parameters follow the training decisions (Megatron TP over "model",
+    FSDP over "data" when present).  The *decode* working set differs from
+    training:
+
+      * pooled attention K/V ``[layers, num_blocks, block_size, Kh, D]`` —
+        kv-head sharding when ``Kh % model == 0`` (GQA heads split across
+        the model axis), head_dim as last resort, else replicated;
+      * scheduler state (block tables, token/position registers, active
+        mask) stays replicated — it is O(slots) and host-mastered;
+      * slot batches stay replicated over "data" (slot admission groups
+        have data-dependent sizes; dp>1 replicates engine compute and is
+        used for the trace process model / multi-host layout).
+
+    Fails loudly when the model axis is >1 but NOTHING in the arch can
+    shard over it — a misconfigured mesh should die here, not deep inside
+    the first compile.
+    """
+    rules = make_rules(cfg, mesh, shape=None)
+    model_sz = mesh.shape.get("model", 1) if "model" in mesh.axis_names else 1
+    mapping = dict(rules.mapping)
+    kv_tp = mapping["kv_heads"] is not None
+    mapping.update({
+        "act_batch": None,
+        "cache_batch": None,
+        "cache_seq": None,  # the block_size dim is never sharded
+        "act_seq_resid": None,
+        "cache_hd": ("model" if (not kv_tp and model_sz > 1
+                                 and _divides(cfg.head_dim, model_sz))
+                     else None),
+    })
+    if overrides:
+        unknown = set(overrides) - set(mapping)
+        if unknown:
+            raise KeyError(f"unknown rule overrides: {unknown}")
+        mapping.update(overrides)
+    if model_sz > 1 and not any(
+        mapping[k] is not None
+        for k in ("q_heads", "kv_heads", "mlp", "vocab", "experts",
+                  "expert_mlp", "ssm_inner", "lru", "cache_hd")
+    ):
+        raise ValueError(
+            f"{cfg.name}: nothing shards over the {model_sz}-way model axis "
+            f"(heads {cfg.num_heads}/kv {cfg.num_kv_heads}/ff {cfg.d_ff}/"
+            f"vocab {padded_vocab(cfg.vocab_size)} all indivisible) — "
+            f"shrink the model axis or pick a compatible arch")
+    return Rules(mapping=mapping, mesh=mesh)
+
+
+def describe_shardings(rules: Rules, axes_tree: PyTree, *,
+                       prefix: str = "") -> list[str]:
+    """Human-readable ``path: PartitionSpec`` lines for an axes tree — the
+    serve CLI prints this before compiling so a misconfigured mesh is
+    visible (and diffable) up front.  Goes through :meth:`Rules.tree_pspecs`
+    so the summary can never diverge from the shardings actually applied."""
+    pspecs = rules.tree_pspecs(axes_tree)  # PartitionSpec leaves
+    out = []
+    for path, spec in jax.tree_util.tree_flatten_with_path(pspecs)[0]:
+        name = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+        out.append(f"{prefix}{name}: {spec}")
+    return out

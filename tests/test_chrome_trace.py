@@ -1,0 +1,96 @@
+"""Chrome-trace export of SERVE-engine traces: states/counters/spans land
+with the right phase types, and multi-task records (the mesh_data process
+model) map to distinct Perfetto process rows (pid = task)."""
+from __future__ import annotations
+
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import events as ev
+from repro.core.chrome_trace import write_chrome_trace
+from repro.core.comm_replay import replay_step
+from repro.core.hlo_comm import CollectiveOp
+from repro.core.tracer import Tracer
+from repro.models.model import build_model
+from repro.serve.engine import ContinuousServeEngine
+
+
+@pytest.fixture(scope="module")
+def serve_trace():
+    """A traced serve run plus an injected second task (the shape a mesh
+    run produces: host records on task 0, replayed collectives on every
+    mesh endpoint) — single-device so the module test stays cheap."""
+    cfg = reduced(get_config("granite-8b"), num_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompts = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (3, 16)).astype(np.int32)
+    tracer = Tracer("serve-chrome").init()
+    eng = ContinuousServeEngine(cfg, params, num_slots=2, max_len=48,
+                                block_size=16, tracer=tracer)
+    eng.serve_batch(prompts, num_tokens=6)
+    # replay one synthetic all-reduce onto two (task, thread) endpoints,
+    # exactly what the mesh engine does with the compiled burst schedule
+    op = CollectiveOp(name="ar", kind="all-reduce", result_bytes=1024,
+                      operand_bytes=1024, group_size=2, num_groups=1,
+                      replica_groups=((0, 1),))
+    endpoints = {0: (0, 0), 1: (1, 0)}
+    import time
+
+    t1 = time.perf_counter_ns()
+    replay_step(tracer, [op], t1 - 2_000_000, t1, endpoints)
+    trace = tracer.finish()
+    return trace
+
+
+def _load(trace, tmp_path):
+    path = write_chrome_trace(trace, tmp_path / "serve.chrome.json")
+    return json.loads(path.read_text())["traceEvents"]
+
+
+def test_multi_task_events_on_distinct_process_rows(serve_trace, tmp_path):
+    out = _load(serve_trace, tmp_path)
+    pids = {e["pid"] for e in out if e.get("ph") != "M"}
+    assert {0, 1} <= pids, pids  # host task AND the replayed endpoint
+    # process metadata names one row per task
+    meta = {e["pid"]: e["args"]["name"] for e in out if e.get("ph") == "M"}
+    assert 0 in meta and 1 in meta and meta[0] != meta[1]
+    # the replayed collective produced B/E spans on BOTH tasks
+    spans = [e for e in out if e.get("cat") == "XLA collective"]
+    assert {e["pid"] for e in spans} == {0, 1}
+    for pid in (0, 1):
+        b = sum(1 for e in spans if e["pid"] == pid and e["ph"] == "B")
+        e_ = sum(1 for e in spans if e["pid"] == pid and e["ph"] == "E")
+        assert b == e_ == 1, (pid, b, e_)
+
+
+def test_serve_counters_and_phases_exported(serve_trace, tmp_path):
+    out = _load(serve_trace, tmp_path)
+    counters = {e["name"] for e in out if e["ph"] == "C"}
+    assert ev.SERVE_CTR_LABELS[ev.EV_QUEUE_DEPTH] in counters
+    assert ev.SERVE_CTR_LABELS[ev.EV_TOKENS_TOTAL] in counters
+    # serve phases arrive as balanced B/E span pairs
+    phase = [e for e in out if e.get("cat") == "Trainer phase"]
+    assert sum(e["ph"] == "B" for e in phase) == sum(e["ph"] == "E" for e in phase)
+    names = {e["name"] for e in phase if e["ph"] == "B"}
+    assert "serve_prefill" in names and "serve_decode" in names
+    # counter values are integers riding in args
+    tok = [e for e in out if e["ph"] == "C"
+           and e["name"] == ev.SERVE_CTR_LABELS[ev.EV_TOKENS_TOTAL]]
+    assert tok and tok[-1]["args"]["value"] == 18  # 3 reqs x 6 tokens
+
+
+def test_comm_records_become_flow_arrows(serve_trace, tmp_path):
+    out = _load(serve_trace, tmp_path)
+    flows = [e for e in out if e.get("cat") == "comm"]
+    starts = [e for e in flows if e["ph"] == "s"]
+    ends = [e for e in flows if e["ph"] == "f"]
+    assert len(starts) == len(ends) == len(serve_trace.comms) > 0
+    # ring all-reduce between tasks 0 and 1: arrows cross process rows
+    assert {(e["pid"]) for e in starts} == {0, 1}
+    for s, f in zip(starts, ends):
+        assert f["ts"] > s["ts"]
