@@ -1,11 +1,12 @@
-"""Serving throughput: seed loop vs continuous batching, paged vs contiguous.
+"""Serving throughput: seed loop vs the unified token-budget engine.
 
-Four sections, all emitted as CSV rows AND collected into machine-readable
-``BENCH_serve.json`` (repo root; CI uploads it as an artifact so the perf
-trajectory is tracked across PRs):
+Five sections, all emitted as CSV rows AND collected into machine-readable
+``BENCH_serve.json`` (repo root, gitignored; CI uploads it as an artifact so
+the perf trajectory is tracked across PRs):
 
-  1. seed fixed-batch loop vs the paged continuous engine (tok/s, host
-     round-trips) — the PR-1 comparison, now running on the paged pool;
+  1. seed fixed-batch loop vs the unified-step engine (tok/s, host
+     round-trips) — the PR-1 comparison, now measuring the production
+     unified hot path over the paged pool;
   2. equal KV-memory budget: a contiguous per-slot layout reserves
      ``max_len`` tokens per slot, so budget/max_len slots is the concurrency
      ceiling; the paged pool spends the SAME budget block-by-block on
@@ -13,7 +14,12 @@ trajectory is tracked across PRs):
      slots + blocks in use reported);
   3. prefix-hit speedup on a shared-prompt workload (system-prompt shape):
      warm vs cold wall time and prefilled-token counts;
-  4. sharded: the mesh-parallel engine at mp=1 vs mp=2 on FORCED CPU
+  4. mixed load (long-prompt + short-prompt blend, diverse lengths): the
+     grouped-prefill engine vs the unified step — p95 TTFT (the grouped
+     engine head-of-line-blocks decode behind whole prefills AND mints one
+     compile per distinct prompt length), decode TPOT, and the
+     decode-stall fraction (wall blocked in synchronous prefill / total);
+  5. sharded: the mesh-parallel engine at mp=1 vs mp=2 on FORCED CPU
      devices (tok/s + host-syncs/iter; run in a subprocess so the forced
      device count cannot leak into this process's backend).
 
@@ -82,7 +88,7 @@ def _bench_seed_vs_paged(cfg, model, params, results):
     total = N_REQ * GEN
     REPS = 5
 
-    from repro.serve.engine import ContinuousServeEngine
+    from repro.serve.step import UnifiedServeEngine
 
     prefill = jax.jit(lambda p, b: model.prefill(p, b, max_len=max_len))
     decode = jax.jit(model.decode_step)
@@ -94,8 +100,10 @@ def _bench_seed_vs_paged(cfg, model, params, results):
                                                 max_len, prefill, decode)
         dt_seed = min(dt_seed, time.perf_counter() - t0)
 
-    eng = ContinuousServeEngine(cfg, params, num_slots=N_REQ, max_len=max_len,
-                                max_prefills_per_iter=N_REQ)
+    # throughput-tuned: 4 concurrent prefill streams (the legacy comparison
+    # point used max_prefills_per_iter=N_REQ for the same reason)
+    eng = UnifiedServeEngine(cfg, params, num_slots=N_REQ, max_len=max_len,
+                             chunk_rows=4, max_prefills_per_iter=N_REQ)
     eng.serve_batch(prompts, num_tokens=GEN)  # warmup wave
     dt_cont = float("inf")
     for _ in range(REPS):
@@ -105,7 +113,7 @@ def _bench_seed_vs_paged(cfg, model, params, results):
         dt_cont = min(dt_cont, time.perf_counter() - t0)
     stats = {"decode_syncs": eng.stats["decode_syncs"] - syncs0,
              "iterations": eng.stats["iterations"] - iters0}
-    assert np.array_equal(out, ref), "paged engine diverged from seed loop"
+    assert np.array_equal(out, ref), "unified engine diverged from seed loop"
 
     tok_s_seed = total / dt_seed
     tok_s_cont = total / dt_cont
@@ -119,10 +127,10 @@ def _bench_seed_vs_paged(cfg, model, params, results):
            f"{tok_s_seed:.0f} tok/s; {(fetches + eager) / GEN:.1f} host "
            f"round-trips/token ({fetches / GEN:.0f} blocking fetch + "
            f"{eager / GEN:.0f} eager sample)")
-    yield (f"serve_continuous_paged,{dt_cont / total * 1e6:.1f},"
+    yield (f"serve_unified_paged,{dt_cont / total * 1e6:.1f},"
            f"{tok_s_cont:.0f} tok/s; {syncs_per_iter:.2f} "
            f"host syncs/decode iteration")
-    yield (f"serve_paged_speedup,,{tok_s_cont / tok_s_seed:.2f}x tok/s "
+    yield (f"serve_unified_speedup,,{tok_s_cont / tok_s_seed:.2f}x tok/s "
            f"({N_REQ} reqs x {GEN} tokens, {ARCH} reduced)")
 
 
@@ -227,6 +235,61 @@ def _bench_prefix_hits(cfg, model, params, results):
            f"{dt_warm * 1e3:.0f} ms wall = {dt_cold / dt_warm:.2f}x")
 
 
+def _bench_mixed_load(cfg, model, params, results):
+    """Long-prompt + short-prompt blend with DIVERSE lengths: the grouped
+    engine head-of-line-blocks every decode slot behind each whole prefill
+    and mints one prefill executable per distinct length; the unified step
+    streams the long prompts in as fixed-size chunks between decode tokens
+    (one compile shape).  Fresh engines, compile included — the compile
+    cascade IS the grouped engine's tail latency on scenario-diverse
+    traffic."""
+    from repro.serve.engine import ContinuousServeEngine
+    from repro.serve.step import UnifiedServeEngine
+
+    lens = [64, 5, 9, 13, 64, 7, 11, 15]
+    gen, max_len, slots = 16, 96, 4
+
+    def run(make):
+        rng = np.random.default_rng(4)
+        prompts = [rng.integers(0, cfg.vocab_size, (L,)).astype(np.int32)
+                   for L in lens]
+        eng = make()
+        t0 = time.perf_counter()
+        reqs = [eng.submit(p, gen) for p in prompts]
+        eng.run()
+        wall = time.perf_counter() - t0
+        ttft_ms = np.array([r.ttft_ns() / 1e6 for r in reqs])
+        tpot_ms = np.array([r.tpot_ns() / 1e6 for r in reqs])
+        return {
+            "wall_s": wall,
+            "p95_ttft_ms": float(np.percentile(ttft_ms, 95)),
+            "p50_ttft_ms": float(np.percentile(ttft_ms, 50)),
+            "p50_tpot_ms": float(np.percentile(tpot_ms, 50)),
+            "decode_stall_fraction":
+                eng.stats["prefill_seconds"] / max(wall, 1e-9),
+        }
+
+    grouped = run(lambda: ContinuousServeEngine(
+        cfg, params, num_slots=slots, max_len=max_len, block_size=16))
+    unified = run(lambda: UnifiedServeEngine(
+        cfg, params, num_slots=slots, max_len=max_len, block_size=16,
+        chunk_size=16))
+    results["mixed_load"] = {
+        "lens": lens, "gen": gen, "grouped": grouped, "unified": unified,
+        "p95_ttft_improvement": grouped["p95_ttft_ms"] / unified["p95_ttft_ms"],
+        "tpot_ratio": unified["p50_tpot_ms"] / max(grouped["p50_tpot_ms"], 1e-9),
+    }
+    yield (f"serve_mixed_grouped,,p95 TTFT {grouped['p95_ttft_ms']:.0f} ms; "
+           f"TPOT p50 {grouped['p50_tpot_ms']:.1f} ms; decode-stall "
+           f"{grouped['decode_stall_fraction']:.0%} of wall")
+    yield (f"serve_mixed_unified,,p95 TTFT {unified['p95_ttft_ms']:.0f} ms; "
+           f"TPOT p50 {unified['p50_tpot_ms']:.1f} ms; decode-stall "
+           f"{unified['decode_stall_fraction']:.0%} of wall")
+    yield (f"serve_mixed_ttft_gain,,{grouped['p95_ttft_ms'] / unified['p95_ttft_ms']:.2f}x "
+           f"p95 TTFT (long+short blend, {len(lens)} reqs, "
+           f"{len(set(lens))} distinct prompt lengths)")
+
+
 def _sharded_child():
     """Child process (forced 2 CPU devices via the parent's env): paged
     engine at mp=1 vs mp=2, greedy-equal outputs asserted, one JSON line on
@@ -322,6 +385,7 @@ def bench(results: dict | None = None):
     yield from _bench_seed_vs_paged(cfg, model, params, results)
     yield from _bench_equal_budget(cfg, model, params, results)
     yield from _bench_prefix_hits(cfg, model, params, results)
+    yield from _bench_mixed_load(cfg, model, params, results)
     yield from _bench_sharded(results)
     JSON_PATH.write_text(json.dumps(results, indent=2) + "\n")
     yield f"serve_bench_json,,{JSON_PATH.name} written"

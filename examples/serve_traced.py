@@ -1,13 +1,17 @@
-"""Serve a small model with continuous batching, traced end-to-end.
+"""Serve a small model through the unified token-budget step, traced
+end-to-end.
 
-8 variable-arrival requests flow through a 4-slot continuous-batching
-engine over the paged KV-block pool (sliding-window arch — the window is
-a mask over absolute positions, not a ring); the trace records every
-scheduler AND allocator decision (queue depth, slot occupancy, blocks
-free/cached, admit/retire, per-request TTFT/TPOT) plus prefill/decode
-user-function regions, and is streamed to disk mid-run (EV_FLUSH-bracketed
-segments) then segment-merged into one Paraver trace — analyzed with the
-same tooling as training traces.
+8 variable-arrival requests flow through a 4-slot unified-step engine over
+the paged KV-block pool (sliding-window arch — the window is a mask over
+absolute positions, not a ring): each scheduler iteration mixes decode
+tokens with chunked-prefill slices under a token budget, so prompts stream
+in without head-of-line-blocking decode (docs/chunked_prefill.md).  The
+trace records every scheduler AND allocator decision (queue depth, slot
+occupancy, blocks free/cached, admit/retire, per-request TTFT/TPOT) plus
+the per-iteration budget triple EV_STEP_BUDGET / EV_CHUNK_TOKENS /
+EV_DECODE_TOKENS, and is streamed to disk mid-run (EV_FLUSH-bracketed
+segments) then segment-merged into one Paraver trace — the prefill/decode
+interleave is read back from the merged ``.prv`` below.
 
     PYTHONPATH=src python examples/serve_traced.py
 """
@@ -23,22 +27,22 @@ from repro import core as xtrace
 from repro.core import events as ev
 from repro.configs import get_config, reduced
 from repro.models.model import build_model
-from repro.serve.engine import ContinuousServeEngine
+from repro.serve.step import UnifiedServeEngine
 
 OUT = pathlib.Path(__file__).resolve().parent / "out"
 
 
 def main():
     OUT.mkdir(exist_ok=True)
-    # a sliding-window arch exercises the masked-window paged decode path
+    # a sliding-window arch exercises the masked-window paged span path
     cfg = reduced(get_config("mixtral-8x22b"), num_layers=2)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
 
     tracer = xtrace.init("serve")
-    engine = ContinuousServeEngine(
-        cfg, params, num_slots=4, max_len=128, tracer=tracer,
-        flush_every=24, flush_base=OUT / "serve",
+    engine = UnifiedServeEngine(
+        cfg, params, num_slots=4, max_len=128, chunk_size=16,
+        tracer=tracer, flush_every=24, flush_base=OUT / "serve",
     )
 
     prompts = np.random.default_rng(0).integers(
@@ -61,9 +65,21 @@ def main():
               f"tpot {r.tpot_ns() / 1e6:6.1f} ms")
 
     # analysis runs on the merged trace (reparse the .prv: flushed segments
-    # are on disk, not in the in-memory Trace)
+    # are on disk, not in the in-memory Trace) — the budget counters prove
+    # the chunked-prefill/decode interleave survived the segment merge
     merged = xtrace.parse_prv(paths["prv"])
-    print("\nTime fractions per serving region (merged trace):")
+    evs = merged.events
+    by = {code: evs[evs["type"] == code]["value"]
+          for code in (ev.EV_STEP_BUDGET, ev.EV_CHUNK_TOKENS,
+                       ev.EV_DECODE_TOKENS)}
+    mixed = int(((by[ev.EV_CHUNK_TOKENS] > 0)
+                 & (by[ev.EV_DECODE_TOKENS] > 0)).sum())
+    assert mixed > 0, "no mixed chunk+decode iteration in the merged .prv"
+    print(f"\nbudget counters in merged .prv: {len(by[ev.EV_STEP_BUDGET])} "
+          f"iterations, {mixed} mixing chunked prefill WITH decode "
+          f"(peak step {int(by[ev.EV_STEP_BUDGET].max())} tokens "
+          f"of budget {engine.max_step_tokens})")
+    print("Time fractions per serving region (merged trace):")
     for name, st in xtrace.time_fractions(merged, ev.EV_USER_FUNC).items():
         print(f"  {name:12s} {st['mean'] * 100:6.2f}%")
 

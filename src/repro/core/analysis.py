@@ -177,6 +177,36 @@ def bandwidth_timeline(trace: Trace, *, buckets: int = 100, by: str = "node"):
 
 
 # ----------------------------------------------------------------------
+# Serving latency summary (per-request TTFT/TPOT trace counters)
+# ----------------------------------------------------------------------
+
+
+def serve_latency_summary(trace: Trace) -> dict:
+    """Fold the per-request ``EV_REQ_TTFT_US`` / ``EV_REQ_TPOT_US`` events
+    (one each per retirement) into distribution statistics for the run.
+
+    Returns ``{"ttft_us": {...}, "tpot_us": {...}}`` where each entry holds
+    ``count`` / ``p50`` / ``p95`` / ``max`` (floats, microseconds; zeros when
+    the trace carries no serve events) — the summary the serve CLI prints at
+    exit and the mixed-load bench gates on.
+    """
+    out: dict[str, dict] = {}
+    for name, code in (("ttft_us", ev.EV_REQ_TTFT_US),
+                       ("tpot_us", ev.EV_REQ_TPOT_US)):
+        vals = trace.events[trace.events["type"] == code]["value"].astype(float)
+        if len(vals):
+            out[name] = {
+                "count": int(len(vals)),
+                "p50": float(np.percentile(vals, 50)),
+                "p95": float(np.percentile(vals, 95)),
+                "max": float(vals.max()),
+            }
+        else:
+            out[name] = {"count": 0, "p50": 0.0, "p95": 0.0, "max": 0.0}
+    return out
+
+
+# ----------------------------------------------------------------------
 # Straggler detection (consumed by the trainer's mitigation hook)
 # ----------------------------------------------------------------------
 

@@ -36,9 +36,15 @@ def write_chrome_trace(trace: Trace, path: str | Path) -> Path:
         code, val = int(r["type"]), int(r["value"])
         et = trace.event_types.get(code)
         if code in _COUNTER_TYPES:
+            # counter tracks keep their canonical label even when the type
+            # was never register()ed in this trace (e.g. budget/chunk
+            # counters parsed back from a foreign .prv) — a bare numeric
+            # name would split the track per trace
+            name = (et.desc if et else
+                    ev.SERVE_CTR_LABELS.get(code) or ev.CTR_LABELS.get(code)
+                    or str(code))
             out.append({"ph": "C", "pid": int(r["task"]), "tid": int(r["thread"]),
-                        "ts": r["time"] / 1e3,
-                        "name": et.desc if et else str(code),
+                        "ts": r["time"] / 1e3, "name": name,
                         "args": {"value": val}})
         elif code in _SPAN_TYPES:
             name = (et.values.get(val) if et else None) or (et.desc if et else str(code))

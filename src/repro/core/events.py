@@ -112,6 +112,13 @@ EV_BLOCKS_ACTIVE = 42200006  # counter: KV blocks referenced by live requests
 EV_REQ_TTFT_US = 42200010  # per-request time-to-first-token (us), at retire
 EV_REQ_TPOT_US = 42200011  # per-request mean time-per-output-token (us)
 EV_PREFIX_HIT_TOKENS = 42200012  # per-admit: prompt tokens served from cache
+# unified token-budget step (chunked prefill + decode in one mixed batch):
+# one triple per scheduler iteration, so the prefill/decode interleave is a
+# first-class Paraver timeline (EV_CHUNK_TOKENS > 0 while EV_DECODE_TOKENS
+# > 0 IS the chunked-prefill overlap)
+EV_STEP_BUDGET = 42200013  # counter: tokens scheduled this step (of budget)
+EV_CHUNK_TOKENS = 42200014  # counter: prefill-chunk tokens this step
+EV_DECODE_TOKENS = 42200015  # counter: decode tokens this step
 EV_REQ_ADMIT = 40000060  # value = request id + 1 when a request enters a slot
 EV_REQ_RETIRE = 40000061  # value = request id + 1 when it completes
 EV_EVICT = 40000062  # value = evicted KV block id (prefix cache eviction)
@@ -128,6 +135,9 @@ SERVE_CTR_LABELS = {
     EV_REQ_TTFT_US: "Request time-to-first-token (us)",
     EV_REQ_TPOT_US: "Request mean time-per-output-token (us)",
     EV_PREFIX_HIT_TOKENS: "Prefix-cache hit tokens (per admit)",
+    EV_STEP_BUDGET: "Serve step tokens scheduled (of budget)",
+    EV_CHUNK_TOKENS: "Serve step prefill-chunk tokens",
+    EV_DECODE_TOKENS: "Serve step decode tokens",
 }
 
 # ---- sampler ----

@@ -1,2 +1,6 @@
-from repro.kernels.paged_attention.ops import paged_attention  # noqa: F401
-from repro.kernels.paged_attention.ref import paged_attention_ref  # noqa: F401
+from repro.kernels.paged_attention.ops import (  # noqa: F401
+    paged_attention, paged_span_attention,
+)
+from repro.kernels.paged_attention.ref import (  # noqa: F401
+    paged_attention_ref, paged_span_ref,
+)

@@ -86,6 +86,126 @@ def _paged_decode_kernel(
         o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
 
 
+def _paged_span_kernel(
+    bt_ref, start_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+    m_scr, l_scr, acc_scr,
+    *, scale: float, window: int | None, bs: int, num_w: int, gq: int,
+):
+    """Ragged multi-query variant: each batch row carries ``len_ref[b]``
+    query tokens at absolute positions ``start_ref[b] + j`` (the unified
+    serve step's mixed rows — 1-token decode or a Q-token prefill chunk).
+    The q tile folds the span into the GQA group dim ([Q*G, D]; query j of
+    group g sits at row j*G + g), so the online-softmax state is per
+    (query, group) lane and the block walk stays identical to the decode
+    kernel.  Blocks past the row's last valid token, or entirely below the
+    FIRST query's sliding window, are skipped whole; everything else is
+    masked per (query, position) pair.  Padded queries (j >= len) are NOT
+    zeroed: their causal mask still admits the row's walked prefix, so they
+    produce well-defined garbage attention over it (all-masked only when
+    the row has no walkable blocks, where the l == 0 guard yields zeros) —
+    callers MUST discard pad rows, as the engine and the tests'
+    ``_mask_pad`` do; only ``paged_span_ref`` zeroes them.
+    """
+    b = pl.program_id(0)
+    w = pl.program_id(2)
+
+    @pl.when(w == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    start = start_ref[b]
+    last = start + len_ref[b] - 1  # last valid query position
+    k_lo = w * bs
+    not_future = k_lo <= last
+    in_window = (
+        jnp.bool_(True) if window is None else (k_lo + bs - 1) > (start - window)
+    )
+
+    @pl.when(jnp.logical_and(not_future, in_window))
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale  # [Q*G, d]
+        k = k_ref[0, 0].astype(jnp.float32)  # [bs, d]
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )  # [Q*G, bs]
+
+        q_pos = start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // gq
+        pos = k_lo + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = pos <= q_pos
+        if window is not None:
+            mask &= pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        l_prev = l_scr[...]
+        m_cur = jnp.max(s, axis=1, keepdims=True)  # [Q*G, 1]
+        m_new = jnp.maximum(m_prev, m_cur)
+        corr = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)  # [Q*G, bs]
+        l_new = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p, v_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        acc_scr[...] = acc_scr[...] * corr + pv
+        m_scr[...] = m_new
+        l_scr[...] = l_new
+
+    @pl.when(w == num_w - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def paged_span_fwd(
+    q, k_pages, v_pages, block_tables, row_start, row_len, *, group: int,
+    window: int | None = None, interpret: bool = False,
+):
+    """q: [B, Hkv, Q*G, D] (query-major span fold: row j*G + g is query j of
+    GQA group ``g``, G = ``group``); k/v_pages: [Hkv, NB, bs, D];
+    block_tables: [B, W] int32; row_start/row_len: [B] int32.
+    Returns [B, Hkv, Q*G, D].
+    """
+    b, hkv, qg, d = q.shape
+    if qg % group:
+        raise ValueError(f"span fold {qg} not divisible by group {group}")
+    bs = k_pages.shape[2]
+    num_w = block_tables.shape[1]
+    grid = (b, hkv, num_w)
+
+    kernel = functools.partial(
+        _paged_span_kernel, scale=1.0 / (d ** 0.5), window=window,
+        bs=bs, num_w=num_w, gq=group,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,  # block_tables, row_start, row_len
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, qg, d), lambda b_, h, w, bt, st, ln: (b_, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, d),
+                         lambda b_, h, w, bt, st, ln: (h, bt[b_, w], 0, 0)),
+            pl.BlockSpec((1, 1, bs, d),
+                         lambda b_, h, w, bt, st, ln: (h, bt[b_, w], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, qg, d),
+                               lambda b_, h, w, bt, st, ln: (b_, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((qg, 1), jnp.float32),
+            pltpu.VMEM((qg, 1), jnp.float32),
+            pltpu.VMEM((qg, d), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, hkv, qg, d), q.dtype),
+        interpret=interpret,
+    )(block_tables, row_start, row_len, q, k_pages, v_pages)
+
+
 def paged_decode_fwd(
     q, k_pages, v_pages, block_tables, index, *, window: int | None = None,
     interpret: bool = False,

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.kernels.paged_attention.kernel import paged_decode_fwd
+from repro.kernels.paged_attention.kernel import paged_decode_fwd, paged_span_fwd
 
 
 @functools.partial(jax.jit, static_argnames=("window", "interpret"))
@@ -32,6 +32,35 @@ def paged_attention(cache, q, block_tables, index, *, window: int | None = None,
         jnp.asarray(index, jnp.int32), window=window, interpret=interpret,
     )
     return out.reshape(b, 1, hq, d)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def paged_span_attention(cache, q, block_tables, row_start, row_len, *,
+                         window: int | None = None,
+                         interpret: bool | None = None):
+    """Ragged multi-query paged attention (the unified serve step's mixed
+    rows).  cache: {"k","v"} [NB, bs, Hkv, D] pooled blocks; q: [B, Q, Hq, D]
+    — row ``b`` holds ``row_len[b]`` valid queries at absolute positions
+    ``row_start[b] + j``; block_tables: [B, W] int32.
+    Returns [B, Q, Hq, D] (padded query rows are garbage, caller discards).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    b, qlen, hq, d = q.shape
+    hkv = cache["k"].shape[2]
+    g = hq // hkv
+    # query-major span fold per kv head: kernel row j*G + g_ = (query j, group g_)
+    qt = q.reshape(b, qlen, hkv, g, d).transpose(0, 2, 1, 3, 4)
+    qt = qt.reshape(b, hkv, qlen * g, d)
+    kp = jnp.transpose(cache["k"], (2, 0, 1, 3))  # [Hkv, NB, bs, D]
+    vp = jnp.transpose(cache["v"], (2, 0, 1, 3))
+    out = paged_span_fwd(
+        qt, kp, vp, jnp.asarray(block_tables, jnp.int32),
+        jnp.asarray(row_start, jnp.int32), jnp.asarray(row_len, jnp.int32),
+        group=g, window=window, interpret=interpret,
+    )
+    out = out.reshape(b, hkv, qlen, g, d).transpose(0, 2, 1, 3, 4)
+    return out.reshape(b, qlen, hq, d)
 
 
 def paged_attention_sharded(cache, q, block_tables, index, *,
@@ -64,3 +93,32 @@ def paged_attention_sharded(cache, q, block_tables, index, *,
         out_specs=q_spec,
     )
     return fn(cache["k"], cache["v"], q, block_tables, index)
+
+
+def paged_span_attention_sharded(cache, q, block_tables, row_start, row_len, *,
+                                 window: int | None, rules,
+                                 interpret: bool | None = None):
+    """Tensor-parallel span attention: same per-shard kv-head slicing as
+    :func:`paged_attention_sharded` (q heads are kv-major, so a contiguous
+    Hq split follows a contiguous Hkv split), with the span registers
+    replicated — heads stay embarrassingly parallel across queries."""
+    from repro.compat import shard_map
+    from repro.models.cache_utils import PAGED_POOL_AXES
+
+    kv_spec = rules.pspec(PAGED_POOL_AXES)
+    q_spec = P(None, None, kv_spec[2], kv_spec[3])
+    hkv = cache["k"].shape[2]
+    shards = rules.axis_size(kv_spec[2]) if kv_spec[2] is not None else 1
+    if kv_spec[2] is not None and hkv % shards:
+        raise ValueError(f"kv heads {hkv} not divisible by {shards}-way shard")
+
+    def per_shard(kp, vp, qs, bt, st, ln):
+        return paged_span_attention({"k": kp, "v": vp}, qs, bt, st, ln,
+                                    window=window, interpret=interpret)
+
+    fn = shard_map(
+        per_shard, mesh=rules.mesh,
+        in_specs=(kv_spec, kv_spec, q_spec, P(None, None), P(None), P(None)),
+        out_specs=q_spec,
+    )
+    return fn(cache["k"], cache["v"], q, block_tables, row_start, row_len)

@@ -36,3 +36,33 @@ def paged_attention_ref(q, k_pages, v_pages, block_tables, index, *,
     p = jax.nn.softmax(scores, axis=-1)
     out = jnp.einsum("bhqs,bshd->bqhd", p, vf.astype(jnp.float32))
     return out.astype(q.dtype)
+
+
+def paged_span_ref(q, k_pages, v_pages, block_tables, row_start, row_len, *,
+                   window: int | None = None):
+    """Ragged multi-query oracle: q [B, Q, Hq, D] — row ``b`` holds
+    ``row_len[b]`` valid queries at absolute positions ``row_start[b] + j``.
+    Dense gather, fp32 softmax, per-(query, position) causal/window masks;
+    padded query rows (j >= row_len) are zeroed for comparison hygiene.
+    Returns [B, Q, Hq, D] in q.dtype.
+    """
+    b, qlen, hq, d = q.shape
+    bs, hkv = k_pages.shape[1], k_pages.shape[2]
+    w = block_tables.shape[1]
+    g = hq // hkv
+    kg = k_pages[block_tables].reshape(b, w * bs, hkv, d)
+    vg = v_pages[block_tables].reshape(b, w * bs, hkv, d)
+    kf = jnp.repeat(kg, g, axis=2)
+    vf = jnp.repeat(vg, g, axis=2)
+    scores = jnp.einsum("bqhd,bshd->bhqs", q.astype(jnp.float32),
+                        kf.astype(jnp.float32)) / (d ** 0.5)
+    q_pos = row_start[:, None] + jnp.arange(qlen)[None, :]  # [B, Q]
+    pos = jnp.arange(w * bs)[None, None, :]  # [1, 1, S]
+    mask = pos <= q_pos[:, :, None]
+    if window is not None:
+        mask &= pos > q_pos[:, :, None] - window
+    scores = jnp.where(mask[:, None, :, :], scores, -2.0e38)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqs,bshd->bqhd", p, vf.astype(jnp.float32))
+    valid = (jnp.arange(qlen)[None, :] < row_len[:, None])[..., None, None]
+    return jnp.where(valid, out, 0.0).astype(q.dtype)

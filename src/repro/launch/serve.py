@@ -6,14 +6,20 @@
     # tensor-parallel over a 1x2 device mesh (CPU: devices are forced)
     PYTHONPATH=src python -m repro.launch.serve --mp 2 --trace
 
-Default mode is the continuous-batching engine (``--mode continuous``):
-requests are queued with staggered prompt lengths and flow through a
-fixed slot pool whose attention K/V lives in a paged block pool
+Default mode is the unified token-budget engine (``--mode unified``):
+each scheduler iteration assembles ONE mixed batch under
+``--max-step-tokens`` — every decode slot gets a token and the in-flight
+prompt streams ``--chunk-size`` prefill chunks from the remainder, so
+long prompts never head-of-line-block decode (docs/chunked_prefill.md).
+``--mode continuous`` keeps the legacy two-path engine (grouped
+same-length prefill + decode bursts; the unified engine's equivalence
+oracle) and ``--mode static`` the rectangular-batch path over contiguous
+caches.  Both continuous modes pool attention K/V in a paged block pool
 (``--block-size`` / ``--num-blocks`` size it; ``--no-prefix-cache``
-disables prompt prefix reuse); ``--mode static`` keeps the legacy
-rectangular-batch path over contiguous caches.  With ``--trace
---flush-every N`` the trace is streamed to disk mid-run and
-segment-merged into the final ``.prv``.
+disables prompt prefix reuse).  With ``--trace --flush-every N`` the
+trace is streamed to disk mid-run and segment-merged into the final
+``.prv``; traced runs print a TTFT/TPOT latency summary at exit
+(:func:`repro.core.analysis.serve_latency_summary`).
 
 ``--mesh dp,mp`` (or the ``--mp N`` shorthand) runs the engine
 tensor-parallel over a ``data x model`` mesh: parameters and the paged KV
@@ -85,7 +91,19 @@ def _request_extras(cfg, rng, n):
 def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--arch", default="granite-8b")
-    p.add_argument("--mode", default="continuous", choices=["continuous", "static"])
+    p.add_argument("--mode", default="unified",
+                   choices=["unified", "continuous", "static"])
+    p.add_argument("--max-step-tokens", type=int, default=0,
+                   help="unified-step token budget per scheduler iteration "
+                        "(0 = slots + chunk-size)")
+    p.add_argument("--chunk-size", type=int, default=0,
+                   help="prefill chunk length for the unified step "
+                        "(0 = max(2*block-size, 16))")
+    p.add_argument("--chunk-rows", type=int, default=2,
+                   help="concurrent prefill streams per unified step")
+    p.add_argument("--mixed-burst", type=int, default=4,
+                   help="decode steps scanned per chunk-carrying dispatch "
+                        "(1 = strict per-iteration budget)")
     p.add_argument("--mesh", default="",
                    help="dp,mp — serve tensor-parallel over a data x model "
                         "device mesh (CPU devices are forced as needed)")
@@ -120,8 +138,10 @@ def main(argv=None):
     from repro import core as xtrace
     from repro.compat import make_mesh
     from repro.configs import all_arch_names, get_config, reduced
+    from repro.core.analysis import serve_latency_summary
     from repro.models.model import build_model
     from repro.serve.engine import ContinuousServeEngine, ServeEngine
+    from repro.serve.step import UnifiedServeEngine
 
     if args.arch not in all_arch_names():
         p.error(f"unknown --arch {args.arch!r} (choose from "
@@ -149,7 +169,15 @@ def main(argv=None):
     else:
         if args.flush_every:
             out.mkdir(parents=True, exist_ok=True)
-        engine = ContinuousServeEngine(
+        cls = (UnifiedServeEngine if args.mode == "unified"
+               else ContinuousServeEngine)
+        unified_kw = {}
+        if args.mode == "unified":
+            unified_kw = dict(
+                max_step_tokens=args.max_step_tokens or None,
+                chunk_size=args.chunk_size or None,
+                chunk_rows=args.chunk_rows, mixed_burst=args.mixed_burst)
+        engine = cls(
             cfg, params, num_slots=min(args.slots, args.requests), max_len=max_len,
             block_size=args.block_size,
             num_blocks=args.num_blocks or None,
@@ -157,7 +185,7 @@ def main(argv=None):
             tracer=tracer, temperature=args.temperature,
             flush_every=args.flush_every,
             flush_base=out / "serve" if args.flush_every else None,
-            mesh=mesh,
+            mesh=mesh, **unified_kw,
         )
         if mesh is not None:
             # fail loudly before compile: every param pspec + the KV-pool
@@ -179,12 +207,18 @@ def main(argv=None):
           f"{stats['tokens']} tokens in "
           f"{stats['seconds']:.2f}s = {stats['tok_per_s']:.1f} tok/s "
           f"(host syncs: {stats.get('host_syncs', '?')}; CPU smoke scale)")
-    if args.mode == "continuous" and engine.pool is not None:
+    if args.mode != "static" and engine.pool is not None:
         print(f"[serve] paged pool: {engine.num_blocks - 1} blocks x "
               f"{engine.block_size} tokens; peak {stats['peak_blocks']} in use, "
               f"{stats['prefix_hit_tokens']} prefix-hit tokens, "
               f"{stats['preemptions']} preemptions, "
               f"{stats.get('evictions', 0)} cache evictions")
+    if args.mode == "unified":
+        note = ("on" if engine.chunkable
+                else "off — state-carrying family, whole-prompt admission")
+        print(f"[serve] unified step: budget {engine.max_step_tokens} "
+              f"tokens/iteration, chunk {engine.chunk_size} "
+              f"(chunked prefill {note})")
     if tracer:
         segments = list(tracer.segments)
         trace = xtrace.finish()
@@ -192,6 +226,16 @@ def main(argv=None):
         paths = xtrace.write_prv(trace, out / "serve", segments=segments)
         seg_note = f", merged {len(segments)} flushed segments" if segments else ""
         print(f"[serve] trace: {paths['prv']}  ({trace.summary()}{seg_note})")
+        # flushed events live in the segment files, not the in-memory trace:
+        # summarize the MERGED .prv so every retired request counts
+        lat = serve_latency_summary(xtrace.parse_prv(paths["prv"])
+                                    if segments else trace)
+        if lat["ttft_us"]["count"]:
+            t, o = lat["ttft_us"], lat["tpot_us"]
+            print(f"[serve] latency over {t['count']} requests: "
+                  f"TTFT p50 {t['p50']:.0f}us / p95 {t['p95']:.0f}us / "
+                  f"max {t['max']:.0f}us; TPOT p50 {o['p50']:.0f}us / "
+                  f"p95 {o['p95']:.0f}us")
     return 0
 
 

@@ -241,7 +241,7 @@ PAGED_LEAF_MASK = {"k": True, "v": True}
 def attention_block(
     params, x, cfg, *, positions, cache=None, index=None,
     window=None, causal=True, use_rope=True, kv_x=None, kv_valid=None,
-    cross=False, cache_len=None, block_tables=None, ring=True,
+    cross=False, cache_len=None, block_tables=None, ring=True, row_len=None,
 ):
     """Returns (y, new_cache).
 
@@ -253,6 +253,13 @@ def attention_block(
       token; Sq == 1.  With ``block_tables`` ([B, W] int32) the cache is the
       pooled ``[num_blocks, block_size, Kh, D]`` layout and reads/writes go
       through the table (:func:`_paged_decode_attend`).
+    * per-row query spans (``block_tables`` given AND ``row_len`` [B] given):
+      row ``b`` of x holds ``row_len[b]`` valid tokens at absolute positions
+      ``index[b] + j`` — one decode token (``row_len == 1``) or a prefill
+      chunk; K/V are scattered into the pool first, then every query attends
+      its own block table causally at absolute positions
+      (:func:`_paged_span_attend` — subsumes both the single-token paged
+      decode and the gather-concat chunk path for the unified serve step).
     * chunked prefill (``cache`` given, ``index is None``): x is the TAIL of
       a prompt whose first ``P`` positions are already cached (prefix-cache
       hit); attends over prefix+tail, returns tail K/V only.
@@ -299,6 +306,9 @@ def attention_block(
         new_cache = _build_cache(k, v, window if ring else None, cache_len)
     elif index is None:
         o, new_cache = _chunk_attend(q, k, v, cache, positions, window, cfg)
+    elif block_tables is not None and row_len is not None:
+        o, new_cache = _paged_span_attend(q, k, v, cache, index, row_len,
+                                          positions, block_tables, window, cfg)
     elif block_tables is not None:
         o, new_cache = _paged_decode_attend(q, k, v, cache, index,
                                             block_tables, window, cfg)
@@ -438,5 +448,58 @@ def _paged_decode_attend(q, k_new, v_new, cache, index, block_tables, window, cf
         o = multi_head_attention(
             q, kg, vg, q_pos=q_pos, kv_pos=kv_pos, causal=True,
             window=window, kv_valid=kv_valid, block_kv=0,
+        )
+    return o, {"k": kp, "v": vp}
+
+
+def _paged_span_attend(q, k_new, v_new, cache, row_start, row_len, positions,
+                       block_tables, window, cfg):
+    """Per-row query-span attention against the pooled block cache: the
+    mixed-batch primitive of the unified serve step.
+
+    q/k_new/v_new: [B, Q, ...]; row ``b`` carries ``row_len[b]`` valid
+    tokens at absolute positions ``row_start[b] + j`` — a 1-token decode row
+    and a Q-token prefill chunk are the same operation at different spans.
+    The span's K/V are scattered into their blocks FIRST (padding columns
+    land in the NULL block), then every query attends its row's gathered
+    block table with plain causal/window masks at absolute positions —
+    intra-chunk causality needs no special casing because chunk tokens sit
+    at their final pool positions before the gather.  Positions covered by
+    the causal mask are always row-owned writes (prefix + this span), so
+    stale block contents beyond the span are never read with weight; padded
+    queries (j >= row_len) produce garbage rows the caller discards.
+    """
+    kp, vp = cache["k"], cache["v"]
+    bs = kp.shape[1]
+    b, w = block_tables.shape
+    kp, vp = cache_utils.paged_span_write(kp, vp, k_new, v_new,
+                                          block_tables, row_start, row_len)
+
+    rules = current_rules()
+    kv_shards = (rules.axis_size(rules.axis("cache_kv"))
+                 if rules is not None else 1)
+    hd_shards = (rules.axis_size(rules.axis("cache_hd"))
+                 if rules is not None else 1)
+    if getattr(cfg, "use_paged_kernel", False) and hd_shards == 1:
+        from repro.kernels.paged_attention import ops as pa_ops
+
+        if kv_shards > 1:
+            o = pa_ops.paged_span_attention_sharded(
+                {"k": kp, "v": vp}, q, block_tables, row_start, row_len,
+                window=window, rules=rules)
+        else:
+            o = pa_ops.paged_span_attention(
+                {"k": kp, "v": vp}, q, block_tables, row_start, row_len,
+                window=window)
+    else:
+        kg = kp[block_tables].reshape(b, w * bs, *kp.shape[2:])
+        vg = vp[block_tables].reshape(b, w * bs, *vp.shape[2:])
+        kg = constrain(kg, ("act_batch", None, "act_kv", "cache_hd"))
+        vg = constrain(vg, ("act_batch", None, "act_kv", "cache_hd"))
+        kv_pos = jnp.broadcast_to(
+            jnp.arange(w * bs, dtype=jnp.int32)[None], (b, w * bs))
+        o = multi_head_attention(
+            q, kg, vg, q_pos=positions, kv_pos=kv_pos, causal=True,
+            window=window, block_kv=0,
         )
     return o, {"k": kp, "v": vp}

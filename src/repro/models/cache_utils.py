@@ -76,6 +76,34 @@ def slot_cache_write(kc, vc, k_new, v_new, index, window: int | None):
     return kc, vc
 
 
+def paged_span_write(kp, vp, k_new, v_new, block_tables, row_start, row_len):
+    """Write a per-row query span into the pooled [NB, bs, Kh, D] layout.
+
+    k_new/v_new: [B, Q, Kh, D] — row ``b`` holds ``row_len[b]`` valid tokens
+    at absolute positions ``row_start[b] + j``; padding columns
+    (``j >= row_len``) are routed into the NULL block so a fixed-shape chunk
+    batch never scribbles on live blocks.  Valid destinations are unique
+    (disjoint block tables per row), so the flat scatter is deterministic
+    everywhere a read can land.
+    """
+    nb, bs = kp.shape[0], kp.shape[1]
+    b, q = k_new.shape[0], k_new.shape[1]
+    j = jnp.arange(q, dtype=jnp.int32)[None, :]  # [1, Q]
+    pos = row_start[:, None] + j  # [B, Q] absolute positions
+    valid = j < row_len[:, None]
+    w = jnp.clip(pos // bs, 0, block_tables.shape[1] - 1)
+    blk = jnp.take_along_axis(block_tables, w, axis=1)  # [B, Q]
+    # padding lands in the NULL block's [0, bs) range (garbage nobody reads)
+    dest = jnp.where(valid, blk * bs + pos % bs, pos % bs).reshape(-1)
+    kf = kp.reshape((nb * bs,) + kp.shape[2:])
+    vf = vp.reshape((nb * bs,) + vp.shape[2:])
+    kf = kf.at[dest].set(k_new.reshape((b * q,) + k_new.shape[2:]).astype(kf.dtype))
+    vf = vf.at[dest].set(v_new.reshape((b * q,) + v_new.shape[2:]).astype(vf.dtype))
+    kp = constrain(kf.reshape(kp.shape), PAGED_POOL_AXES)
+    vp = constrain(vf.reshape(vp.shape), PAGED_POOL_AXES)
+    return kp, vp
+
+
 def paged_cache_write(kp, vp, k_new, v_new, block_tables, index):
     """Write one token per slot into the pooled [NB, bs, Kh, D] layout.
 

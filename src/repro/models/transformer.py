@@ -229,7 +229,7 @@ def stack_paged_cache_axes(cfg):
 
 
 def apply_layer(params, x, cfg, kind, *, positions, cache, index, cache_len=None,
-                block_tables=None, ring=True):
+                block_tables=None, ring=True, row_len=None):
     """One layer. Returns (x, new_cache, aux)."""
     aux = jnp.zeros((), jnp.float32)
     if kind == "ssm":
@@ -246,6 +246,7 @@ def apply_layer(params, x, cfg, kind, *, positions, cache, index, cache_len=None
             params["attn"], h, cfg, positions=positions, cache=cache,
             index=index, window=window, causal=cfg.causal, use_rope=cfg.use_rope,
             cache_len=cache_len, block_tables=block_tables, ring=ring,
+            row_len=row_len,
         )
     x = x + y
     x = constrain(x, ("act_batch", "act_seq_resid", "act_embed"))
@@ -261,12 +262,12 @@ def apply_layer(params, x, cfg, kind, *, positions, cache, index, cache_len=None
 
 
 def apply_unit(params, x, cfg, kinds, *, positions, cache, index, cache_len=None,
-               block_tables=None, ring=True):
+               block_tables=None, ring=True, row_len=None):
     aux = jnp.zeros((), jnp.float32)
     if len(kinds) == 1:
         return apply_layer(params, x, cfg, kinds[0], positions=positions,
                            cache=cache, index=index, cache_len=cache_len,
-                           block_tables=block_tables, ring=ring)
+                           block_tables=block_tables, ring=ring, row_len=row_len)
     new_cache = {}
     for i, kind in enumerate(kinds):
         sub = f"sub{i}"
@@ -274,6 +275,7 @@ def apply_unit(params, x, cfg, kinds, *, positions, cache, index, cache_len=None
             params[sub], x, cfg, kind, positions=positions,
             cache=None if cache is None else cache[sub], index=index,
             cache_len=cache_len, block_tables=block_tables, ring=ring,
+            row_len=row_len,
         )
         new_cache[sub] = c
         aux = aux + a
@@ -288,13 +290,15 @@ _REMAT_POLICIES = {
 
 
 def apply_stack(params, x, cfg, *, positions, caches=None, index=None, mode="train",
-                cache_len=None, block_tables=None, ring=True):
+                cache_len=None, block_tables=None, ring=True, row_len=None):
     """Run the whole stack.  Returns (x, new_caches_or_None, aux).
 
     ``block_tables`` routes decode-time attention through the pooled paged
     cache; ``ring=False`` makes prefill keep full-length K/V under SWA
     (paged storage holds absolute positions).  "decode" mode also serves
-    chunked tail prefill: caches given, ``index=None``, Sq > 1.
+    chunked tail prefill (caches given, ``index=None``, Sq > 1) and — with
+    ``row_len`` [B] given — per-row query spans for the unified serve step
+    (row b: ``row_len[b]`` tokens at absolute positions ``index[b] + j``).
     """
     kinds = unit_kinds(cfg)
     nb, rem = scan_counts(cfg)
@@ -328,7 +332,7 @@ def apply_stack(params, x, cfg, *, positions, caches=None, index=None, mode="tra
             p, c = inp
             xo, cache_out, a = apply_unit(p, xc, cfg, sub_kinds, positions=positions,
                                           cache=c, index=index, cache_len=cache_len,
-                                          block_tables=block_tables)
+                                          block_tables=block_tables, row_len=row_len)
             return (xo, auxc + a), cache_out
 
         (x, aux), caches_out = jax.lax.scan(body, (x, aux), (stack_params, stack_caches))

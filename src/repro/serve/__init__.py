@@ -3,11 +3,14 @@
     queue.py      — Request lifecycle + FIFO admission queue (preemption-aware)
     block_pool.py — ref-counted fixed-size KV blocks, hash-based prefix reuse
     scheduler.py  — slot + block admission bookkeeping, every decision traced
-    engine.py     — ContinuousServeEngine (paged caches, prefix-hit tail
-                    prefill, preemption-by-eviction, on-device sampling) +
-                    the contiguous fixed-batch ServeEngine oracle
+    step.py       — UnifiedServeEngine: chunked prefill + decode mixed into
+                    ONE token-budget step per iteration (the production path)
+    engine.py     — ContinuousServeEngine (grouped prefill / decode-burst
+                    split; the unified engine's equivalence oracle) + the
+                    contiguous fixed-batch ServeEngine oracle
 """
 from repro.serve.block_pool import NULL_BLOCK, BlockPool  # noqa: F401
 from repro.serve.engine import ContinuousServeEngine, ServeEngine  # noqa: F401
 from repro.serve.queue import Request, RequestQueue, RequestState  # noqa: F401
 from repro.serve.scheduler import Scheduler  # noqa: F401
+from repro.serve.step import UnifiedServeEngine  # noqa: F401

@@ -1,6 +1,13 @@
 """Serving engines: continuous batching over a paged KV pool + legacy fixed batch.
 
-:class:`ContinuousServeEngine` (the production path) admits variable-length
+The production serve path is :class:`repro.serve.step.UnifiedServeEngine`
+(one token-budget mixed chunk+decode step per iteration — see
+docs/chunked_prefill.md); it subclasses :class:`ContinuousServeEngine` for
+the pool/admission/preemption machinery below, while this class's own
+two-path loop (grouped same-length prefill + decode bursts) survives as
+the unified step's bit-exact equivalence oracle.
+
+:class:`ContinuousServeEngine` admits variable-length
 requests from a :class:`~repro.serve.queue.RequestQueue` into a fixed pool of
 ``num_slots`` decode slots whose attention K/V lives in a shared **paged
 block pool** (``serve/block_pool.py``): fixed-size blocks, ref-counted,
@@ -190,6 +197,10 @@ class ContinuousServeEngine:
         # prefill-time start position per slot (request input_ids() grows as
         # generated tokens drain — decode block math needs the pinned start)
         self._slot_start = np.zeros((self.num_slots,), np.int64)
+        # tokens already folded INTO the start position (a preemption-resumed
+        # request re-prefills its generated tokens, but req.scheduled keeps
+        # counting them — position math must not count them twice)
+        self._slot_sched0 = np.zeros((self.num_slots,), np.int64)
         self._admit_plan = None  # (req, hits, hashes): can_admit -> on_admit
         self._req_hashes: dict[int, list[int]] = {}  # rid -> prompt hash chain
         self._chain_memo: dict[int, tuple[int, list[int]]] = {}  # rid -> (len, chain)
@@ -226,7 +237,8 @@ class ContinuousServeEngine:
         self.stats = {"iterations": 0, "prefills": 0, "tokens_decoded": 0,
                       "prefill_tokens": 0, "prefix_hit_tokens": 0,
                       "preemptions": 0, "peak_active": 0, "peak_blocks": 0,
-                      "host_syncs": 0, "decode_syncs": 0, "seconds": 0.0}
+                      "host_syncs": 0, "decode_syncs": 0, "seconds": 0.0,
+                      "prefill_seconds": 0.0}
 
     # ------------------------------------------------------------------
     # mesh plumbing
@@ -325,15 +337,13 @@ class ContinuousServeEngine:
         return (pool, tok_buf.at[slots].set(first_toks),
                 idx_buf.at[slots].set(start_idxs))
 
-    def _burst_impl(self, params, caches, tok, idx, active, tables, key, *, steps):
-        """``steps`` decode iterations over the whole pool in ONE executable:
-        each step is a batched paged decode (per-slot block tables, per-slot
-        absolute positions) + on-device sampling; inactive slots are frozen
-        (their token/index don't advance; their stale writes land in blocks
-        they still own, or the NULL block once retired).  Returns the
-        [steps, num_slots] token block for a single host fetch."""
-        bt = tables if self._has_paged else None
-
+    def _decode_scan(self, params, caches, tok, idx, active, bt, key, steps):
+        """``steps`` scanned decode iterations: batched paged decode
+        (``bt`` block tables, per-slot absolute positions) + on-device
+        sampling; inactive slots are frozen (token/index don't advance).
+        ONE definition shared by the legacy burst AND the unified step's
+        decode sub-batch — the unified-vs-legacy bit-exactness contract
+        rests on these being the same traced ops, so don't fork it."""
         def body(carry, k):
             caches, tok, idx = carry
             new_caches, logits = self.model.decode_step(
@@ -347,6 +357,14 @@ class ContinuousServeEngine:
         (caches, tok, idx), toks = jax.lax.scan(
             body, (caches, tok, idx), jnp.arange(steps))
         return caches, tok, idx, toks
+
+    def _burst_impl(self, params, caches, tok, idx, active, tables, key, *, steps):
+        """``steps`` decode iterations over the whole pool in ONE executable
+        (:meth:`_decode_scan`); frozen slots' stale writes land in blocks
+        they still own, or the NULL block once retired.  Returns the
+        [steps, num_slots] token block for a single host fetch."""
+        bt = tables if self._has_paged else None
+        return self._decode_scan(params, caches, tok, idx, active, bt, key, steps)
 
     # ------------------------------------------------------------------
     # admission policy (Scheduler callback): blocks, not slots, gate entry
@@ -458,6 +476,7 @@ class ContinuousServeEngine:
         return list(groups.values())
 
     def _do_prefill(self, members: list[tuple[int, Request]]):
+        t_wall0 = time.perf_counter()
         tr = self.tracer
         reqs = [r for _, r in members]
         slots = [s for s, _ in members]
@@ -503,8 +522,9 @@ class ContinuousServeEngine:
                 jnp.asarray(slots, jnp.int32), jnp.asarray(block_ids, jnp.int32),
                 tok1, jnp.asarray(starts, jnp.int32),
             )
-        for slot, st in zip(slots, starts):
+        for slot, st, req in zip(slots, starts, reqs):
             self._slot_start[slot] = st
+            self._slot_sched0[slot] = len(req.tokens)  # re-prefilled tokens
         firsts = np.asarray(tok1)  # TTFT: first tokens materialized here
         self.stats["host_syncs"] += 1
         self.stats["prefills"] += len(reqs)
@@ -520,6 +540,9 @@ class ContinuousServeEngine:
                     self.pool.register(self._slot_blocks[slot][j], h)
         t_first = _now_ns()
         self._replay(coll_ops, t_admit, t_first)
+        # wall spent blocked on prefill while decode slots waited — the
+        # grouped-prefill engine's head-of-line stall (mixed-load bench)
+        self.stats["prefill_seconds"] += time.perf_counter() - t_wall0
         for (slot, req), first in zip(members, firsts):
             req.t_admit_ns = t_admit
             if req.t_first_ns < 0:
@@ -559,29 +582,35 @@ class ContinuousServeEngine:
         self.stats["preemptions"] += 1
         return pairs
 
-    def _ensure_blocks(self, pairs):
+    def _ensure_blocks(self, pairs, max_steps: int | None = None):
         """Allocate the blocks this burst will write, preempting (newest
         first) when the pool cannot cover every active slot.  Returns the
-        surviving pairs and the burst length."""
+        surviving pairs and the burst length.  ``max_steps`` caps the burst
+        below ``max_decode_burst`` (the unified step dispatches single
+        iterations whenever prefill chunks share the batch)."""
+        cap = self.max_decode_burst if max_steps is None else max_steps
         while pairs:
             need = min(r.max_new_tokens - r.scheduled for _, r in pairs)
             steps = 1
             while steps < need:
                 steps *= 2
-            steps = min(steps, self.max_decode_burst)
+            steps = min(steps, cap)
             if self.pool is None:
                 return pairs, steps
             # the power-of-two bucket may overshoot a slot's remaining cache
-            # capacity (writes land at start+scheduled-1 .. +steps-2): clamp
-            # so no burst ever demands a block-table entry past W.  The
+            # capacity (writes land at start+(scheduled-sched0)-1 .. +steps-2,
+            # sched0 = tokens already re-prefilled into the start): clamp so
+            # no burst ever demands a block-table entry past W.  The
             # submit() capacity check guarantees headroom >= need >= 1.
             steps = min(steps, min(
-                self.capacity + 1 - int(self._slot_start[s]) - r.scheduled
+                self.capacity + 1 - int(self._slot_start[s])
+                - (r.scheduled - int(self._slot_sched0[s]))
                 for s, r in pairs))
             shortfall: list[tuple[int, int]] = []  # (slot, missing blocks)
             total = 0
             for slot, req in pairs:
-                last_pos = int(self._slot_start[slot]) + req.scheduled + steps - 2
+                last_pos = (int(self._slot_start[slot]) + req.scheduled
+                            - int(self._slot_sched0[slot]) + steps - 2)
                 missing = last_pos // self.block_size + 1 - len(self._slot_blocks[slot])
                 if missing > 0:
                     shortfall.append((slot, missing))
@@ -610,7 +639,8 @@ class ContinuousServeEngine:
             # its compiled collective schedule onto the mesh endpoints
             self._replay(coll_ops, t_dispatch, _now_ns())
         self.stats["host_syncs"] += 1
-        self.stats["decode_syncs"] += 1
+        if len(toks):  # chunk-only unified dispatches carry no decode rows
+            self.stats["decode_syncs"] += 1
         for row in toks:
             for slot, req in pairs:
                 if req.done or len(req.tokens) >= req.max_new_tokens:
@@ -621,7 +651,10 @@ class ContinuousServeEngine:
                     if self.scheduler.slots[req.slot] is req:
                         self._finish(req)
         self.stats["iterations"] += len(toks)
-        self._since_flush += len(toks)
+        # flush cadence counts DISPATCHES, floor 1: a prefill-dominated
+        # phase of chunk-only steps (len(toks) == 0) must still stream its
+        # records to disk instead of growing the buffers unbounded
+        self._since_flush += max(len(toks), 1)
         if tr:
             tr.emit(EV_TOKENS_DECODED, self.stats["tokens_decoded"])
             tr.emit(ev.EV_TOKENS_TOTAL, self.stats["tokens_decoded"])

@@ -9,7 +9,11 @@ iteration:
     ``max_prefills_per_iter``) — admission is gated on **block
     availability**, not just a free slot: the engine-provided ``admission``
     policy answers "do enough free/evictable blocks exist for this
-    prompt?", so slot count stops being the capacity bound;
+    prompt?", so slot count stops being the capacity bound.  The unified
+    token-budget engine admits one request at a time (:meth:`admit_one`)
+    and its policy demands blocks for the FIRST prefill chunk only — the
+    rest allocates just-in-time as chunks stream through the step
+    (serve/step.py);
   * when a request is finished, returning its slot to the pool;
   * when the engine must *preempt* a request (block pool dry mid-decode),
     recording the back-transition.
@@ -75,29 +79,43 @@ class Scheduler:
         skipping it would starve long prompts behind short ones.  Returns
         [(slot, request)] for the engine to prefill."""
         out: list[tuple[int, Request]] = []
-        for slot in range(self.num_slots):
-            if len(out) >= self.max_prefills_per_iter or not self.queue:
+        while len(out) < self.max_prefills_per_iter:
+            pair = self.admit_one()
+            if pair is None:
                 break
-            if self.slots[slot] is not None:
-                continue
-            head = self.queue.peek()
-            if self.admission is not None and not self.admission.can_admit(head):
-                break
-            req = self.queue.pop()
-            req.state = RequestState.ACTIVE
-            req.slot = slot
-            req.admit_seq = self._admit_seq
-            self._admit_seq += 1
-            self.slots[slot] = req
-            if self.admission is not None:
-                self.admission.on_admit(slot, req)
-            out.append((slot, req))
-            self._emit(ev.EV_REQ_ADMIT, req.rid + 1)
-            self._emit(ev.EV_SLOT_BASE + slot, req.rid + 1)
+            out.append(pair)
         if out:
             self._emit(ev.EV_QUEUE_DEPTH, len(self.queue))
             self._emit(ev.EV_SLOTS_ACTIVE, self.occupancy())
         return out
+
+    def admit_one(self) -> tuple[int, Request] | None:
+        """Admit the queue head into the lowest free slot, if the admission
+        policy allows it (for the unified token-budget step the policy only
+        demands blocks for the request's FIRST prefill chunk — the rest is
+        allocated just-in-time as chunks stream in).  Returns (slot, req) or
+        None when the queue is empty, no slot is free, or the head is
+        blocked (FIFO: a blocked head blocks the queue)."""
+        if not self.queue:
+            return None
+        slot = next((s for s in range(self.num_slots)
+                     if self.slots[s] is None), None)
+        if slot is None:
+            return None
+        head = self.queue.peek()
+        if self.admission is not None and not self.admission.can_admit(head):
+            return None
+        req = self.queue.pop()
+        req.state = RequestState.ACTIVE
+        req.slot = slot
+        req.admit_seq = self._admit_seq
+        self._admit_seq += 1
+        self.slots[slot] = req
+        if self.admission is not None:
+            self.admission.on_admit(slot, req)
+        self._emit(ev.EV_REQ_ADMIT, req.rid + 1)
+        self._emit(ev.EV_SLOT_BASE + slot, req.rid + 1)
+        return slot, req
 
     def retire(self, req: Request):
         """Return a finished request's slot to the pool."""

@@ -1,0 +1,479 @@
+"""Unified token-budget serve step: chunked prefill + decode in one batch.
+
+:class:`UnifiedServeEngine` collapses the legacy engine's two jitted paths —
+grouped same-length prefill and K-step decode bursts — into ONE scheduler
+iteration under a configurable token budget (``max_step_tokens``):
+
+  * every decode-active slot gets 1 token;
+  * the remainder of the budget goes to prefill **chunks**: up to
+    ``chunk_rows`` in-flight prompts (admitted or preemption-resumed)
+    stream fixed-size ``chunk_size`` slices into the paged pool over
+    several iterations, interleaved with decode — a long prompt no longer
+    head-of-line-blocks the active decode slots, and the chunk shape
+    ``[chunk_rows, chunk_size]`` is the ONLY prefill compile shape (the
+    legacy engine mints one executable per distinct prompt length);
+  * one jitted :meth:`UnifiedServeEngine._unified_impl` executes the whole
+    mixed batch — the decode sub-batch scans exactly like the legacy burst
+    (bit-identical math by construction) and the chunk sub-batch runs the
+    per-row query-span attention path
+    (:func:`repro.models.attention._paged_span_attend`), scattering into the
+    pool and sampling ONLY rows that completed their prompt.
+
+Block allocation is just-in-time per chunk: admission demands blocks for the
+request's FIRST chunk only (+1 decode headroom), later chunks allocate as
+they stream, and a dry pool preempts decode slots newest-first exactly like
+the legacy engine.  Prefix-cache hits skip whole leading chunks (the cursor
+starts at the hit boundary); full prompt blocks are registered when the
+prompt completes, so a preemption-resumed request re-hits its own prompt.
+
+Chunked streaming requires an attention-only, fully-paged stack (dense/moe —
+the same gate as the prefix cache): recurrent and cross-attention state
+cannot be chunk-resumed, and MoE capacity dispatch couples tokens across the
+batch (drop-free at test scale, see docs/chunked_prefill.md).  Other
+families keep budget-looped whole-prompt admission through the inherited
+grouped-prefill path while their decode flows through the unified step.
+
+Every budget decision is a first-class trace event: per-iteration
+``EV_STEP_BUDGET`` / ``EV_CHUNK_TOKENS`` / ``EV_DECODE_TOKENS`` counters
+paint the prefill/decode interleave straight into the ``.prv``/chrome
+timeline.  The legacy two-path :class:`ContinuousServeEngine` survives as
+the equivalence oracle — greedy decode through the unified step must match
+it bit-for-bit (tests/test_serve_unified.py).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import events as ev
+from repro.core.sampling import sample_logits
+from repro.serve.block_pool import NULL_BLOCK
+from repro.serve.engine import ContinuousServeEngine
+from repro.serve.queue import Request, _now_ns
+
+
+@dataclasses.dataclass
+class ChunkPlan:
+    """One prefill chunk scheduled into the current unified step."""
+    slot: int
+    req: Request
+    start: int  # absolute position of the chunk's first token
+    length: int  # valid tokens (<= chunk_size)
+    tokens: np.ndarray  # [length] int32
+    sample: bool  # True when this chunk completes the prompt
+
+
+class UnifiedServeEngine(ContinuousServeEngine):
+    """Continuous batching through the unified token-budget step."""
+
+    def __init__(self, cfg, params, *, max_step_tokens: int | None = None,
+                 chunk_size: int | None = None, chunk_rows: int = 2,
+                 mixed_burst: int = 4, **kwargs):
+        super().__init__(cfg, params, **kwargs)
+        self.chunk_size = int(chunk_size or max(2 * self.block_size, 16))
+        if self.chunk_size < 1:
+            raise ValueError("chunk_size must be >= 1")
+        # chunk_rows: concurrent prefill streams per step (the chunk
+        # sub-batch is [chunk_rows, chunk_size]); mixed_burst: decode steps
+        # scanned in a chunk-carrying dispatch (1 = strict one-iteration
+        # steps; higher amortizes dispatch overhead — the chunk rides the
+        # first iteration of the burst)
+        self.chunk_rows = max(1, int(chunk_rows))
+        self.mixed_burst = max(1, min(int(mixed_burst), self.max_decode_burst))
+        self.max_step_tokens = int(
+            max_step_tokens
+            or (self.num_slots + self.chunk_size * self.chunk_rows))
+        if self.max_step_tokens < self.num_slots:
+            # decode slots always get their token; with budget >= num_slots a
+            # pending prefill (which itself occupies a non-decoding slot) is
+            # guaranteed >= 1 chunk token per iteration — no starvation
+            raise ValueError(
+                f"max_step_tokens {self.max_step_tokens} < num_slots "
+                f"{self.num_slots}: decode alone would overrun the budget")
+        self.chunkable = (self.pool is not None and self.model.fully_paged()
+                          and cfg.family in ("dense", "moe"))
+        # per-slot prefill cursors (chunked streaming state)
+        self._progress = np.zeros((self.num_slots,), np.int64)
+        self._target = np.zeros((self.num_slots,), np.int64)
+        self._prefilling = np.zeros((self.num_slots,), bool)
+        # whole-prompt tokens prefilled since the last dispatch (non-chunkable
+        # families) — folded into the next dispatch's counter triple so the
+        # one-triple-per-iteration cadence holds for every engine config
+        self._whole_tokens = 0
+        if self.tracer is not None:
+            for code in (ev.EV_STEP_BUDGET, ev.EV_CHUNK_TOKENS,
+                         ev.EV_DECODE_TOKENS):
+                self.tracer.register(code, ev.SERVE_CTR_LABELS[code])
+        if self.meshstate is not None:
+            r = self.meshstate.replicated
+            self._unified = jax.jit(
+                self._unified_impl, donate_argnums=(1,),  # caches
+                static_argnames=("steps", "chunk"),
+                out_shardings=(self._cache_sh, r, r, r, r))
+        else:
+            self._unified = jax.jit(self._unified_impl, donate_argnums=(1,),
+                                    static_argnames=("steps", "chunk"))
+
+    # ------------------------------------------------------------------
+    # the jitted mixed-batch step
+    # ------------------------------------------------------------------
+    def _unified_impl(self, params, caches, tok, idx, active, tables,
+                      ck_tokens, ck_start, ck_len, ck_slot, ck_sample, key,
+                      *, steps, chunk):
+        """One token-budget iteration in ONE executable.
+
+        Decode sub-batch: ``steps`` scanned iterations over the slot pool,
+        byte-equivalent to the legacy burst for active rows; inactive rows'
+        block tables are masked to the NULL block so a mid-prefill slot's
+        stale registers can never scribble on blocks its chunks are
+        streaming into.  Chunk sub-batch (``chunk=True``): up to
+        ``chunk_rows`` span rows scatter into the pool (slots disjoint from
+        every decode write) and sample only where ``ck_sample`` marks a
+        completed prompt; each sampled first token and its decode position
+        are folded into the slot registers on device — the slot starts
+        decoding next dispatch without a host round-trip.
+        """
+        bt = (jnp.where(active[:, None], tables, NULL_BLOCK)
+              if self._has_paged else None)
+        if steps:
+            caches, tok, idx, toks = self._decode_scan(
+                params, caches, tok, idx, active, bt, key, steps)
+        else:
+            toks = jnp.zeros((0, self.num_slots), jnp.int32)
+
+        ck_tok = jnp.zeros(ck_start.shape, jnp.int32)
+        if chunk:
+            ck_tables = tables[ck_slot]  # [C, W]
+            caches, logits = self.model.span_step(
+                params, caches, ck_tokens, ck_start, ck_len, ck_tables)
+            last = jnp.take_along_axis(
+                logits, jnp.maximum(ck_len - 1, 0)[:, None, None], axis=1)[:, 0]
+            ck_key = (key if self.temperature <= 0.0
+                      else jax.random.fold_in(key, 1 << 18))
+            ck_tok = sample_logits(last, ck_key, self.temperature,
+                                   self.cfg.vocab_size)
+            # fold completed-prompt rows into the slot registers (exact:
+            # <= 1 chunk per slot per step, int one-hot sum)
+            onehot = ((ck_slot[:, None] == jnp.arange(self.num_slots)[None, :])
+                      & ck_sample[:, None])  # [C, S]
+            hit = onehot.any(axis=0)
+            tok = jnp.where(hit, (onehot * ck_tok[:, None]).sum(0)
+                            .astype(tok.dtype), tok)
+            idx = jnp.where(hit, (onehot * (ck_start + ck_len)[:, None]).sum(0)
+                            .astype(idx.dtype), idx)
+        return caches, tok, idx, toks, ck_tok
+
+    # ------------------------------------------------------------------
+    # admission policy: blocks for the FIRST chunk only (JIT per chunk)
+    # ------------------------------------------------------------------
+    def can_admit(self, req: Request) -> bool:
+        if not self.chunkable:
+            return super().can_admit(req)
+        pool = self.pool
+        hits, _ = self._lookup_hits(req)
+        start = len(hits) * self.block_size
+        first = min(self.chunk_size, self._start_index(req) - start)
+        need = pool.blocks_for(start + first) - len(hits)
+        evictable_hits = sum(1 for b in hits if pool.ref(b) == 0)
+        ok = pool.available() >= need + evictable_hits + 1
+        if not ok:
+            self._admit_plan = None
+        return ok
+
+    def on_admit(self, slot: int, req: Request):
+        if not self.chunkable:
+            return super().on_admit(slot, req)
+        pool = self.pool
+        hits, hashes = self._lookup_hits(req)
+        self._admit_plan = None
+        self._chain_memo.pop(req.rid, None)
+        if self.prefix_cache:
+            self._req_hashes[req.rid] = hashes
+        pool.claim(hits)
+        self._slot_blocks[slot] = list(hits)
+        self._tables[slot] = NULL_BLOCK
+        self._tables[slot, :len(hits)] = hits
+        self._tables_dirty = True
+        req.prefix_hit_tokens = len(hits) * self.block_size
+        self.stats["prefix_hit_tokens"] += req.prefix_hit_tokens
+        if self.tracer is not None:
+            self.tracer.emit(ev.EV_PREFIX_HIT_TOKENS, req.prefix_hit_tokens)
+        # the prefill cursor starts at the hit boundary: resident chunks
+        # are never recomputed
+        self._progress[slot] = req.prefix_hit_tokens
+        self._target[slot] = self._start_index(req)
+        self._slot_start[slot] = self._target[slot]
+        self._slot_sched0[slot] = len(req.tokens)  # re-prefilled on resume
+        self._prefilling[slot] = True
+        self.stats["prefills"] += 1
+
+    # ------------------------------------------------------------------
+    # per-iteration budget planning
+    # ------------------------------------------------------------------
+    def _plan_one_chunk(self, slot, req, budget, pairs) -> ChunkPlan | None:
+        """Size one slot's next chunk to the remaining budget, with
+        just-in-time block allocation — preempting decode slots (newest
+        first) when the pool runs dry, or shrinking the chunk to what
+        fits."""
+        progress, target = int(self._progress[slot]), int(self._target[slot])
+        length = min(self.chunk_size, budget, target - progress)
+        if length < 1:
+            return None
+        pool = self.pool
+        missing = pool.blocks_for(progress + length) - len(self._slot_blocks[slot])
+        while missing > pool.available() and pairs:
+            self._preempt_one(pairs)  # mutates pairs in place
+        if missing > pool.available():
+            fit = (len(self._slot_blocks[slot]) + pool.available()) \
+                * self.block_size - progress
+            length = min(length, fit)
+            if length < 1:
+                return None
+            missing = pool.blocks_for(progress + length) \
+                - len(self._slot_blocks[slot])
+        if missing > 0:
+            fresh = pool.alloc(missing)
+            a = len(self._slot_blocks[slot])
+            self._tables[slot, a:a + missing] = fresh
+            self._slot_blocks[slot].extend(fresh)
+            self._tables_dirty = True
+        tokens = np.asarray(req.input_ids()[progress:progress + length],
+                            np.int32)
+        return ChunkPlan(slot, req, progress, length, tokens,
+                         sample=progress + length >= target)
+
+    def _plan_chunks(self, pairs) -> list[ChunkPlan]:
+        """Pick this iteration's prefill chunks — resumes first (oldest
+        admission first), then FIFO admissions — up to ``chunk_rows``
+        streams sharing the budget left after decode."""
+        if not self.chunkable:
+            return []
+        budget = self.max_step_tokens - len(pairs)
+        plans: list[ChunkPlan] = []
+        live = sorted((s for s in range(self.num_slots) if self._prefilling[s]),
+                      key=lambda s: self.scheduler.slots[s].admit_seq)
+        for slot in live:
+            if len(plans) >= self.chunk_rows or budget < 1:
+                break
+            plan = self._plan_one_chunk(slot, self.scheduler.slots[slot],
+                                        budget, pairs)
+            if plan is not None:
+                plans.append(plan)
+                budget -= plan.length
+        admitted_any = False
+        while len(plans) < self.chunk_rows and budget >= 1 and self.queue:
+            admitted = self.scheduler.admit_one()
+            if admitted is None:
+                break
+            admitted_any = True
+            slot, req = admitted
+            plan = self._plan_one_chunk(slot, req, budget, pairs)
+            if plan is not None:
+                plans.append(plan)
+                budget -= plan.length
+            else:
+                break  # admitted but unfundable this step: resume next step
+        if admitted_any and self.tracer is not None:
+            self.tracer.emit(ev.EV_QUEUE_DEPTH, len(self.queue))
+            self.tracer.emit(ev.EV_SLOTS_ACTIVE, self.scheduler.occupancy())
+        return plans
+
+    def _relieve_stalled_prefill(self):
+        """Forward-progress safety valve: if nothing is dispatchable while
+        several prefill streams jointly hold the pool dry, preempt the
+        NEWEST stream (its blocks return to the pool; the request requeues
+        for recompute resume) so the oldest can finish."""
+        live = sorted((s for s in range(self.num_slots) if self._prefilling[s]),
+                      key=lambda s: self.scheduler.slots[s].admit_seq)
+        if len(live) < 2:
+            return False
+        slot = live[-1]
+        victim = self.scheduler.slots[slot]
+        self._prefilling[slot] = False
+        self._release_blocks(slot)
+        self.scheduler.preempt(victim)
+        self._preempted.append(victim)
+        self.stats["preemptions"] += 1
+        return True
+
+    # ------------------------------------------------------------------
+    # dispatch / fetch
+    # ------------------------------------------------------------------
+    def _dispatch(self, pairs, steps, chunks: list[ChunkPlan]):
+        tr = self.tracer
+        if not pairs and not chunks:
+            return None
+        key = (self._key if self.temperature <= 0.0
+               else jax.random.fold_in(self._key, self._dispatches))
+        self._dispatches += 1
+        if self._active_dirty:
+            self._active_dev = self._dev(jnp.asarray(self._active))
+            self._active_dirty = False
+        if self._tables_dirty:
+            self._tables_dev = self._dev(jnp.asarray(self._tables))
+            self._tables_dirty = False
+        rows = self.chunk_rows
+        ck_tokens = np.zeros((rows, self.chunk_size), np.int32)
+        ck_start = np.zeros((rows,), np.int32)
+        ck_len = np.zeros((rows,), np.int32)
+        ck_slot = np.zeros((rows,), np.int32)
+        ck_sample = np.zeros((rows,), bool)
+        for i, c in enumerate(chunks):
+            ck_tokens[i, :c.length] = c.tokens
+            ck_start[i] = c.start
+            ck_len[i] = c.length
+            ck_slot[i] = c.slot
+            ck_sample[i] = c.sample
+        t_dispatch = _now_ns()
+        with (tr.phase(ev.PHASE_DECODE) if tr else contextlib.nullcontext()), \
+                (tr.user_function(name="unified_step") if tr
+                 else contextlib.nullcontext()):
+            (self._caches, self._tok, self._idx, toks, ck_tok), coll_ops = \
+                self._traced_call(
+                    "unified", self._unified,
+                    (self.params, self._caches, self._tok, self._idx,
+                     self._active_dev, self._tables_dev,
+                     self._dev(jnp.asarray(ck_tokens)),
+                     self._dev(jnp.asarray(ck_start)),
+                     self._dev(jnp.asarray(ck_len)),
+                     self._dev(jnp.asarray(ck_slot)),
+                     self._dev(jnp.asarray(ck_sample)), key),
+                    {"steps": steps, "chunk": bool(chunks)})
+        for slot, req in pairs:
+            req.scheduled += steps
+            if req.scheduled >= req.max_new_tokens:
+                self._active[slot] = False
+                self._active_dirty = True
+        n_chunk = 0
+        for c in chunks:
+            n_chunk += c.length
+            slot, req = c.slot, c.req
+            self._progress[slot] += c.length
+            self.stats["prefill_tokens"] += c.length
+            if req.t_admit_ns < 0:
+                req.t_admit_ns = t_dispatch
+            if c.sample:
+                self._prefilling[slot] = False
+                req.scheduled += 1
+                if req.scheduled < req.max_new_tokens:
+                    self._active[slot] = True
+                    self._active_dirty = True
+                if self.prefix_cache:
+                    # publish full PROMPT blocks, now fully streamed in
+                    # (generated tokens are never shared)
+                    hashes = self._req_hashes.pop(req.rid, [])
+                    for j, h in enumerate(hashes[:req.prompt_len
+                                                 // self.block_size]):
+                        self.pool.register(self._slot_blocks[slot][j], h)
+        # per-ITERATION values (a burst is `steps` iterations in one
+        # dispatch, emitted once; its chunks ride the first iteration):
+        # STEP_BUDGET == CHUNK + DECODE at every sample, and chunkable
+        # prefill never pushes it past max_step_tokens — whole-prompt
+        # admissions (non-chunkable families, folded in here to keep the
+        # triple cadence) are the documented budget bypass
+        n_chunk += self._whole_tokens
+        self._whole_tokens = 0
+        if tr:
+            tr.emit(ev.EV_STEP_BUDGET, len(pairs) + n_chunk)
+            tr.emit(ev.EV_CHUNK_TOKENS, n_chunk)
+            tr.emit(ev.EV_DECODE_TOKENS, len(pairs))
+        return toks, ck_tok, pairs, chunks, t_dispatch, coll_ops
+
+    def _process_unified(self, toks_dev, ck_dev, pairs, chunks, t_dispatch,
+                         coll_ops):
+        """Fetch one unified step's tokens (the single host sync, overlapped
+        with the next step's device compute) and run retirement/latency
+        bookkeeping — including the first tokens of prompts whose final
+        chunks rode this step."""
+        toks, ck = jax.device_get((toks_dev, ck_dev))
+        self._process_tokens(toks, pairs, t_dispatch, coll_ops)
+        for i, c in enumerate(chunks):
+            if not c.sample:
+                continue
+            req = c.req
+            if req.t_first_ns < 0:
+                req.t_first_ns = _now_ns()  # resumed requests keep their TTFT
+            req.tokens.append(int(ck[i]))
+            self.stats["tokens_decoded"] += 1
+            if self.tracer is not None:
+                self.tracer.emit(ev.EV_TOKENS_TOTAL,
+                                 self.stats["tokens_decoded"])
+            if len(req.tokens) >= req.max_new_tokens \
+                    and self.scheduler.slots[req.slot] is req:
+                self._finish(req)
+
+    # ------------------------------------------------------------------
+    # serving loop
+    # ------------------------------------------------------------------
+    def run(self) -> dict[int, np.ndarray]:
+        """Serve until queue and slots drain; one unified token-budget step
+        per iteration, pipelined (the fetch of step i overlaps the device
+        compute of step i+1).  Pure-decode dispatches burst up to
+        ``max_decode_burst`` scanned steps; chunk-carrying dispatches scan
+        up to ``mixed_burst`` decode steps (default 4, the chunks riding
+        the first iteration — set ``mixed_burst=1`` for strict
+        one-iteration budget accounting).  Returns {rid: [new_tokens]} for
+        requests completed by THIS call."""
+        tr = self.tracer
+        done0 = len(self.scheduler.completed)
+        pending = None
+        t_run0 = time.perf_counter()
+        while pending is not None or not self.scheduler.drained():
+            if not self.chunkable:
+                # state-carrying families: budget-looped whole-prompt
+                # admission through the inherited grouped-prefill path
+                if self.queue and tr:
+                    with tr.phase(ev.PHASE_ADMIT):
+                        admissions = self.scheduler.admissions()
+                else:
+                    admissions = self.scheduler.admissions()
+                for members in self._prefill_groups(admissions):
+                    # count BEFORE the prefill call: it appends the first
+                    # sampled token, growing input_ids()
+                    self._whole_tokens += sum(
+                        self._start_index(r) - r.prefix_hit_tokens
+                        for _, r in members)
+                    self._do_prefill(members)
+            pairs = [(s, r) for s, r in self.scheduler.active()
+                     if self._active[s]]
+            if self.chunkable and tr and (self.queue or self._prefilling.any()):
+                with tr.phase(ev.PHASE_ADMIT):
+                    chunks = self._plan_chunks(pairs)
+            else:
+                chunks = self._plan_chunks(pairs)
+            pairs, steps = self._ensure_blocks(
+                pairs, max_steps=self.mixed_burst if chunks else None)
+            self.stats["peak_active"] = max(self.stats["peak_active"],
+                                            self.scheduler.occupancy())
+            if self.pool is not None:
+                self.stats["peak_blocks"] = max(self.stats["peak_blocks"],
+                                                self.pool.num_active())
+            dispatched = self._dispatch(pairs, steps, chunks)
+            if dispatched is None and self._whole_tokens and tr:
+                # whole-prompt prefills with nothing left to decode (e.g.
+                # max_new_tokens == 1 retiring at prefill): emit their
+                # triple now — no later dispatch will fold it in
+                tr.emit(ev.EV_STEP_BUDGET, self._whole_tokens)
+                tr.emit(ev.EV_CHUNK_TOKENS, self._whole_tokens)
+                tr.emit(ev.EV_DECODE_TOKENS, 0)
+                self._whole_tokens = 0
+            if dispatched is None and pending is None \
+                    and not self.scheduler.drained():
+                # several prefill streams can jointly wedge the pool with no
+                # decode victims left — preempt the newest so work resumes
+                if not self._relieve_stalled_prefill():
+                    raise RuntimeError(
+                        "serve loop stalled: nothing dispatchable but the "
+                        "scheduler is not drained")
+            if pending is not None:
+                self._process_unified(*pending)  # overlaps current dispatch
+            self._drain_preempted()
+            pending = dispatched
+        self.stats["seconds"] += time.perf_counter() - t_run0
+        return {r.rid: np.asarray(r.tokens, np.int32)
+                for r in self.scheduler.completed[done0:]}

@@ -1,0 +1,40 @@
+"""Shared test harness: a dependency-free per-test timeout.
+
+A hung jit compile (or an engine livelock — see the resumed-request
+position-math regression in test_serve_unified) used to eat the whole CI
+runner until the job-level timeout killed it, losing every subsequent
+test's signal.  Each test body runs under a SIGALRM deadline instead:
+``PYTEST_PER_TEST_TIMEOUT`` seconds (default 540; 0 disables), raising a
+plain ``TimeoutError`` so pytest reports the one offending test and moves
+on.  Caveat: SIGALRM only interrupts Python bytecode — a wedged native
+call still needs the job timeout — and module-scoped fixture setup runs
+outside the alarm window.  POSIX-only; a no-op where SIGALRM is missing.
+"""
+from __future__ import annotations
+
+import os
+import signal
+
+import pytest
+
+_LIMIT = int(os.environ.get("PYTEST_PER_TEST_TIMEOUT", "540"))
+
+
+@pytest.fixture(autouse=True)
+def _per_test_timeout(request):
+    if _LIMIT <= 0 or not hasattr(signal, "SIGALRM"):
+        yield
+        return
+
+    def _on_alarm(signum, frame):
+        raise TimeoutError(
+            f"{request.node.nodeid} exceeded {_LIMIT}s "
+            f"(hung compile or scheduler livelock?)")
+
+    old = signal.signal(signal.SIGALRM, _on_alarm)
+    signal.alarm(_LIMIT)
+    try:
+        yield
+    finally:
+        signal.alarm(0)
+        signal.signal(signal.SIGALRM, old)

@@ -8,7 +8,8 @@ import pytest
 from repro.core import events as ev
 from repro.core.analysis import (
     bandwidth_timeline, connectivity, parallelism_timeline, routine_timeline,
-    straggler_report, time_fractions, ascii_matrix, ascii_series,
+    serve_latency_summary, straggler_report, time_fractions, ascii_matrix,
+    ascii_series,
 )
 from repro.core.comm_replay import replay_running_gaps, replay_step
 from repro.core.hlo_comm import CollectiveOp
@@ -125,6 +126,31 @@ def test_replay_step_injects_schedule():
     assert counts.sum() >= 8
     fr = time_fractions(trace, ev.EV_COLLECTIVE)
     assert "all-reduce" in fr and "collective-permute" in fr
+
+
+def test_serve_latency_summary():
+    """Synthetic per-request TTFT/TPOT events fold into hand-checkable
+    p50/p95/max — the summary the serve CLI prints at exit."""
+    tracer = Tracer("serve-lat").init()
+    t0 = tracer.t0
+    ttfts = [1000, 2000, 3000, 4000, 100000]  # us; one straggler tail
+    tpots = [50, 60, 70, 80, 90]
+    for i, (a, b) in enumerate(zip(ttfts, tpots)):
+        tracer.inject_event(0, 0, t0 + i * 1000, ev.EV_REQ_TTFT_US, a)
+        tracer.inject_event(0, 0, t0 + i * 1000, ev.EV_REQ_TPOT_US, b)
+    trace = tracer.finish()
+    lat = serve_latency_summary(trace)
+    assert lat["ttft_us"]["count"] == 5
+    assert lat["ttft_us"]["p50"] == 3000
+    assert lat["ttft_us"]["max"] == 100000
+    assert 4000 < lat["ttft_us"]["p95"] <= 100000  # tail-dominated
+    assert lat["tpot_us"]["p50"] == 70 and lat["tpot_us"]["max"] == 90
+
+
+def test_serve_latency_summary_empty_trace():
+    tracer = Tracer("serve-lat-empty").init()
+    lat = serve_latency_summary(tracer.finish())
+    assert lat["ttft_us"]["count"] == 0 and lat["tpot_us"]["p95"] == 0.0
 
 
 def test_ascii_renderers():

@@ -84,6 +84,49 @@ def test_serve_counters_and_phases_exported(serve_trace, tmp_path):
     assert tok and tok[-1]["args"]["value"] == 18  # 3 reqs x 6 tokens
 
 
+def test_budget_counters_exported_as_counter_tracks(tmp_path):
+    """The unified engine's per-iteration budget triple arrives as "C"
+    counter tracks whose running values reconstruct the prefill/decode
+    interleave, and an UNREGISTERED budget counter (a foreign .prv) still
+    lands on its canonical track name instead of a bare numeric one."""
+    cfg = reduced(get_config("granite-8b"), num_layers=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    tracer = Tracer("serve-budget-chrome").init()
+    from repro.serve.step import UnifiedServeEngine
+
+    eng = UnifiedServeEngine(cfg, params, num_slots=2, max_len=64,
+                             block_size=16, chunk_size=8, tracer=tracer)
+    rng = np.random.default_rng(0)
+    for L in (5, 40):
+        eng.submit(rng.integers(0, cfg.vocab_size, (L,)).astype(np.int32), 8)
+    eng.run()
+    trace = tracer.finish()
+    out = _load(trace, tmp_path)
+    tracks = {}
+    for code in (ev.EV_STEP_BUDGET, ev.EV_CHUNK_TOKENS, ev.EV_DECODE_TOKENS):
+        name = ev.SERVE_CTR_LABELS[code]
+        rows = [e for e in out if e["ph"] == "C" and e["name"] == name]
+        assert rows, name
+        tracks[code] = [e["args"]["value"] for e in rows]
+    # same emission cadence, budget == chunk + decode, within budget
+    n = len(tracks[ev.EV_STEP_BUDGET])
+    assert all(len(v) == n for v in tracks.values())
+    for s, c, d in zip(*(tracks[k] for k in (ev.EV_STEP_BUDGET,
+                                             ev.EV_CHUNK_TOKENS,
+                                             ev.EV_DECODE_TOKENS))):
+        assert s == c + d <= eng.max_step_tokens
+    assert any(c > 0 and d > 0 for c, d in zip(tracks[ev.EV_CHUNK_TOKENS],
+                                               tracks[ev.EV_DECODE_TOKENS]))
+
+    # unregistered counter type -> canonical label fallback
+    t2 = Tracer("foreign-counter").init()
+    t2.inject_event(0, 0, t2.t0 + 10, ev.EV_STEP_BUDGET, 7)
+    out2 = _load(t2.finish(), tmp_path)
+    rows = [e for e in out2 if e["ph"] == "C"]
+    assert rows and rows[0]["name"] == ev.SERVE_CTR_LABELS[ev.EV_STEP_BUDGET]
+
+
 def test_comm_records_become_flow_arrows(serve_trace, tmp_path):
     out = _load(serve_trace, tmp_path)
     flows = [e for e in out if e.get("cat") == "comm"]

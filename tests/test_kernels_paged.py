@@ -1,11 +1,14 @@
-"""Paged-decode Pallas kernel vs the pure-jnp oracle (interpret mode)."""
+"""Paged-decode + ragged-span Pallas kernels vs pure-jnp oracles
+(interpret mode)."""
 from __future__ import annotations
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.paged_attention import paged_attention, paged_attention_ref
+from repro.kernels.paged_attention import (
+    paged_attention, paged_attention_ref, paged_span_attention, paged_span_ref,
+)
 
 
 def _case(seed, B, W, bs, Hkv, G, D, NB):
@@ -33,6 +36,54 @@ def test_paged_kernel_matches_ref(window, G):
     ref = paged_attention_ref(q, kp, vp, bt, idx, window=window)
     np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
                                atol=2e-6, rtol=2e-6)
+
+
+def _span_case(seed, B, W, bs, Hkv, G, D, NB, Q):
+    """Rows with ragged valid lengths at block-unaligned start positions."""
+    rng = np.random.default_rng(seed)
+    kp = jnp.asarray(rng.standard_normal((NB, bs, Hkv, D)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((NB, bs, Hkv, D)), jnp.float32)
+    q = jnp.asarray(rng.standard_normal((B, Q, Hkv * G, D)), jnp.float32)
+    bt = np.zeros((B, W), np.int32)
+    ids = rng.permutation(np.arange(1, NB))[:B * W].reshape(B, W)
+    row_len = rng.integers(1, Q + 1, B).astype(np.int32)
+    row_start = np.zeros((B,), np.int32)
+    for b in range(B):
+        # enough allocated blocks to cover start + len, start unaligned
+        row_start[b] = int(rng.integers(0, W * bs - row_len[b]))
+        alloc = (row_start[b] + row_len[b] - 1) // bs + 1
+        bt[b, :alloc] = ids[b, :alloc]
+    return q, kp, vp, jnp.asarray(bt), jnp.asarray(row_start), jnp.asarray(row_len)
+
+
+def _mask_pad(out, row_len):
+    q = out.shape[1]
+    valid = (np.arange(q)[None, :] < np.asarray(row_len)[:, None])[..., None, None]
+    return np.where(valid, np.asarray(out), 0.0)
+
+
+@pytest.mark.parametrize("window", [None, 9])
+@pytest.mark.parametrize("G", [1, 4])  # MHA and GQA
+def test_span_kernel_matches_ref(window, G):
+    """Ragged multi-query rows (the unified serve step's mixed batch):
+    padded query rows are compared masked — the engine discards them."""
+    q, kp, vp, bt, st, ln = _span_case(2, B=3, W=4, bs=8, Hkv=2, G=G, D=16,
+                                       NB=32, Q=6)
+    out = paged_span_attention({"k": kp, "v": vp}, q, bt, st, ln,
+                               window=window, interpret=True)
+    ref = paged_span_ref(q, kp, vp, bt, st, ln, window=window)
+    np.testing.assert_allclose(_mask_pad(out, ln), np.asarray(ref),
+                               atol=2e-6, rtol=2e-6)
+
+
+def test_span_kernel_single_token_equals_decode_kernel():
+    """A 1-token span IS a paged decode row: both kernels must agree."""
+    q, kp, vp, bt, idx = _case(3, B=3, W=4, bs=8, Hkv=2, G=2, D=16, NB=32)
+    dec = paged_attention({"k": kp, "v": vp}, q, bt, idx, interpret=True)
+    span = paged_span_attention({"k": kp, "v": vp}, q, bt, idx,
+                                jnp.ones((3,), jnp.int32), interpret=True)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(span),
+                               atol=1e-6, rtol=1e-6)
 
 
 def test_paged_kernel_ignores_null_and_future_blocks():
