@@ -1,6 +1,6 @@
 PYTHONPATH := src
 
-.PHONY: smoke test bench serve-bench lint
+.PHONY: smoke test bench serve-bench property lint
 
 # fail-fast wiring that catches API drift (e.g. cost_analysis format
 # changes) at collection/first-failure time
@@ -13,9 +13,21 @@ test:
 bench:
 	PYTHONPATH=$(PYTHONPATH) python -m benchmarks.run
 
-# paged-vs-contiguous serving comparison; writes BENCH_serve.json (CI artifact)
+# paged-vs-contiguous + speculative serving comparison; writes
+# BENCH_serve.json (CI artifact) and gates on BENCH_baseline.json.
+# The second line is the spec-mode smoke: the regression gate's lane must
+# also come up through the CLI (flags, proposer factory, trace summary).
 serve-bench:
 	PYTHONPATH=$(PYTHONPATH) python benchmarks/bench_serve.py
+	PYTHONPATH=$(PYTHONPATH) python -m repro.launch.serve --mode unified \
+		--spec ngram --spec-k 4 --requests 4 --slots 2 \
+		--prompt-len 24 --gen 12
+
+# hypothesis property layer as its own loud-failure job (a missing
+# hypothesis install must not silently skip it; see tests/test_property.py)
+property:
+	REPRO_REQUIRE_HYPOTHESIS=1 PYTHONPATH=$(PYTHONPATH) \
+		python -m pytest -q tests/test_property.py
 
 # correctness-class lint gate (rules in ruff.toml; mirrored in CI)
 lint:

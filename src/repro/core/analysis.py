@@ -185,10 +185,13 @@ def serve_latency_summary(trace: Trace) -> dict:
     """Fold the per-request ``EV_REQ_TTFT_US`` / ``EV_REQ_TPOT_US`` events
     (one each per retirement) into distribution statistics for the run.
 
-    Returns ``{"ttft_us": {...}, "tpot_us": {...}}`` where each entry holds
-    ``count`` / ``p50`` / ``p95`` / ``max`` (floats, microseconds; zeros when
-    the trace carries no serve events) — the summary the serve CLI prints at
-    exit and the mixed-load bench gates on.
+    Returns ``{"ttft_us": {...}, "tpot_us": {...}, "spec": {...}}`` where the
+    latency entries hold ``count`` / ``p50`` / ``p95`` / ``max`` (floats,
+    microseconds; zeros when the trace carries no serve events) and ``spec``
+    folds the per-dispatch ``EV_SPEC_DRAFTED`` / ``EV_SPEC_ACCEPTED``
+    counters into the run's draft-acceptance rate (zeros when the run was
+    not speculative) — the summary the serve CLI prints at exit and the
+    mixed-load bench gates on.
     """
     out: dict[str, dict] = {}
     for name, code in (("ttft_us", ev.EV_REQ_TTFT_US),
@@ -203,6 +206,17 @@ def serve_latency_summary(trace: Trace) -> dict:
             }
         else:
             out[name] = {"count": 0, "p50": 0.0, "p95": 0.0, "max": 0.0}
+    drafted = trace.events[
+        trace.events["type"] == ev.EV_SPEC_DRAFTED]["value"].astype(np.int64)
+    accepted = trace.events[
+        trace.events["type"] == ev.EV_SPEC_ACCEPTED]["value"].astype(np.int64)
+    out["spec"] = {
+        "dispatches": int(len(drafted)),
+        "drafted": int(drafted.sum()),
+        "accepted": int(accepted.sum()),
+        "acceptance": (float(accepted.sum() / drafted.sum())
+                       if drafted.sum() else 0.0),
+    }
     return out
 
 

@@ -119,6 +119,13 @@ EV_PREFIX_HIT_TOKENS = 42200012  # per-admit: prompt tokens served from cache
 EV_STEP_BUDGET = 42200013  # counter: tokens scheduled this step (of budget)
 EV_CHUNK_TOKENS = 42200014  # counter: prefill-chunk tokens this step
 EV_DECODE_TOKENS = 42200015  # counter: decode tokens this step
+# speculative decode (serve/spec.py): one triple per verify dispatch, so the
+# draft/accept economy is a first-class Paraver timeline — per dispatch,
+# DRAFTED == ACCEPTED + rejected (rejected is the visible gap between the
+# two curves) and K is the adaptive span width the scheduler chose
+EV_SPEC_DRAFTED = 42200016  # counter: draft tokens verified this dispatch
+EV_SPEC_ACCEPTED = 42200017  # counter: draft tokens accepted this dispatch
+EV_SPEC_K = 42200018  # counter: draft span width K in effect
 EV_REQ_ADMIT = 40000060  # value = request id + 1 when a request enters a slot
 EV_REQ_RETIRE = 40000061  # value = request id + 1 when it completes
 EV_EVICT = 40000062  # value = evicted KV block id (prefix cache eviction)
@@ -138,6 +145,9 @@ SERVE_CTR_LABELS = {
     EV_STEP_BUDGET: "Serve step tokens scheduled (of budget)",
     EV_CHUNK_TOKENS: "Serve step prefill-chunk tokens",
     EV_DECODE_TOKENS: "Serve step decode tokens",
+    EV_SPEC_DRAFTED: "Spec draft tokens verified (per dispatch)",
+    EV_SPEC_ACCEPTED: "Spec draft tokens accepted (per dispatch)",
+    EV_SPEC_K: "Spec draft span width K",
 }
 
 # ---- sampler ----

@@ -1,22 +1,133 @@
-"""Shared on-device token sampling for every decode path.
+"""Shared on-device token sampling + speculative propose/accept primitives.
 
-One helper, traced into the jitted prefill/decode executables of both serve
-engines (the previous copies in ``serve/engine.py`` drifted independently).
-Greedy decode (``temperature <= 0``) consumes no randomness, so callers may
-pass any key without burning their RNG stream.
+One helper family, traced into the jitted prefill/decode executables of every
+serve engine (the previous copies in ``serve/engine.py`` drifted
+independently).  Greedy decode (``temperature <= 0``) consumes no randomness
+and ignores the top-k / top-p filters (the argmax survives any filter), so
+callers may pass any key without burning their RNG stream — and so the
+speculative engines' greedy path stays bit-identical to the plain engines'.
+
+The speculative-decoding primitives live here too, shared by every engine:
+
+  * :func:`target_log_probs` — the (temperature, top-k, top-p)-filtered
+    normalized target distribution a verifier scores drafts against;
+  * :func:`spec_accept` — longest-argmax-prefix acceptance for greedy
+    decode, Leviathan-style rejection sampling (accept ``d`` with
+    probability ``min(1, p(d)/q(d))``, resample the first rejection from
+    ``norm(max(p - q, 0))``) for ``temperature > 0``.  Both commit
+    ``n_acc + 1`` tokens per row: the accepted draft prefix plus one
+    correction/bonus token, which is exactly the sequential-decode output
+    when greedy.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+NEG_FILTERED = -2.0e38  # mask value for filtered-out vocab entries
 
-def sample_logits(logits, key, temperature: float, vocab: int):
-    """Greedy or temperature sampling over the unpadded vocab, on device.
 
-    logits: [..., V_padded]; returns int32 token ids of shape logits.shape[:-1].
+def filter_logits(lg, top_k: int = 0, top_p: float = 1.0):
+    """Top-k then nucleus (top-p) filtering over the last axis.
+
+    Filtered entries become ``NEG_FILTERED``; the max-probability token is
+    always kept (top-p keeps at least the head of the sorted distribution,
+    top-k keeps ties with the k-th value rather than splitting them).
+    """
+    if top_k and top_k < lg.shape[-1]:
+        kth = jax.lax.top_k(lg, top_k)[0][..., -1:]
+        lg = jnp.where(lg < kth, NEG_FILTERED, lg)
+    if top_p < 1.0:
+        srt = jnp.sort(lg, axis=-1)[..., ::-1]
+        probs = jax.nn.softmax(srt, axis=-1)
+        exclusive = jnp.cumsum(probs, axis=-1) - probs
+        keep = exclusive < top_p  # column 0 always kept (exclusive cum = 0)
+        thresh = jnp.min(jnp.where(keep, srt, jnp.inf), axis=-1, keepdims=True)
+        lg = jnp.where(lg < thresh, NEG_FILTERED, lg)
+    return lg
+
+
+def sample_logits(logits, key, temperature: float, vocab: int,
+                  top_k: int = 0, top_p: float = 1.0):
+    """Greedy or filtered-temperature sampling over the unpadded vocab.
+
+    logits: [..., V_padded]; returns int32 token ids of shape
+    logits.shape[:-1].  ``temperature <= 0`` is exact argmax regardless of
+    the filters (pinned by tests/test_sampling.py).
     """
     lg = logits[..., :vocab]
     if temperature <= 0.0:
         return jnp.argmax(lg, axis=-1).astype(jnp.int32)
-    return jax.random.categorical(key, lg / temperature, axis=-1).astype(jnp.int32)
+    lg = filter_logits(lg / temperature, top_k, top_p)
+    return jax.random.categorical(key, lg, axis=-1).astype(jnp.int32)
+
+
+def target_log_probs(logits, temperature: float, vocab: int,
+                     top_k: int = 0, top_p: float = 1.0):
+    """Normalized log-probs of the sampling distribution ``sample_logits``
+    draws from — the distribution speculative rejection sampling must
+    preserve.  Only meaningful for ``temperature > 0``."""
+    lg = filter_logits(logits[..., :vocab] / temperature, top_k, top_p)
+    return jax.nn.log_softmax(lg, axis=-1)
+
+
+def spec_accept(logits, drafts, draft_len, draft_q, key, temperature: float,
+                vocab: int, top_k: int = 0, top_p: float = 1.0):
+    """Verify per-row draft spans against the target logits of one span pass.
+
+    logits:    [B, K+1, V_padded] — target logits over the span
+               ``[root, d_0 .. d_{K-1}]``; ``logits[:, j]`` is the target's
+               prediction for the token FOLLOWING span position j.
+    drafts:    [B, K] int32 proposed continuations of the root token.
+    draft_len: [B] int32 — number of real drafts per row (rows with 0 are
+               inactive; their outputs are garbage the caller discards).
+    draft_q:   [B, K, V] proposal probabilities, or ``None`` for a
+               deterministic proposer (point-mass q: accept ``d_j`` with
+               probability ``p(d_j)``, resample excludes ``d_j``).
+    Returns ``(out_tokens [B, K+1] int32, n_acc [B] int32)``: row ``b``
+    commits ``out_tokens[b, :n_acc[b] + 1]`` — the accepted draft prefix
+    plus one correction (first rejection) or bonus (all accepted) token.
+    """
+    lg = logits[..., :vocab]
+    b, k = drafts.shape
+    valid = jnp.arange(k, dtype=jnp.int32)[None, :] < draft_len[:, None]
+    if temperature <= 0.0:
+        tgt = jnp.argmax(lg, axis=-1).astype(jnp.int32)  # [B, K+1]
+        match = (drafts == tgt[:, :k]) & valid
+        n_acc = jnp.cumprod(match.astype(jnp.int32), axis=1).sum(axis=1)
+        final = jnp.take_along_axis(tgt, n_acc[:, None], axis=1)[:, 0]
+    else:
+        logp = target_log_probs(lg, temperature, vocab, top_k, top_p)
+        p = jnp.exp(logp)  # [B, K+1, V]
+        k_u, k_r = jax.random.split(key)
+        p_d = jnp.take_along_axis(p[:, :k], drafts[..., None], axis=-1)[..., 0]
+        if draft_q is None:
+            ratio = p_d  # point-mass proposal: q(d) == 1
+        else:
+            q_d = jnp.take_along_axis(draft_q, drafts[..., None], axis=-1)[..., 0]
+            ratio = p_d / jnp.maximum(q_d, 1e-20)
+        u = jax.random.uniform(k_u, drafts.shape)
+        accept = (u < ratio) & valid
+        n_acc = jnp.cumprod(accept.astype(jnp.int32), axis=1).sum(axis=1)
+        # stop-position distribution: norm(max(p - q, 0)) ONLY when a
+        # rejection actually occurred there (n_acc < draft_len); the bonus
+        # position after a fully-accepted span — n_acc == draft_len, which
+        # can sit anywhere in the padded [0, K] range for ragged rows — was
+        # never accept-tested, so it samples plain p
+        if draft_q is None:
+            q_ext = jax.nn.one_hot(
+                jnp.pad(drafts, ((0, 0), (0, 1))), vocab, dtype=p.dtype)
+        else:
+            q_ext = jnp.pad(draft_q.astype(p.dtype), ((0, 0), (0, 1), (0, 0)))
+        p_at = jnp.take_along_axis(p, n_acc[:, None, None], axis=1)[:, 0]
+        q_at = jnp.take_along_axis(q_ext, n_acc[:, None, None], axis=1)[:, 0]
+        rejected = (n_acc < draft_len)[:, None]
+        res = jnp.where(rejected, jnp.maximum(p_at - q_at, 0.0), p_at)
+        # p == q exactly leaves an empty residual: fall back to p
+        res = jnp.where(res.sum(-1, keepdims=True) > 0, res, p_at)
+        final = jax.random.categorical(
+            k_r, jnp.log(jnp.maximum(res, 1e-38)), axis=-1).astype(jnp.int32)
+    pad = jnp.pad(drafts, ((0, 0), (0, 1)))
+    hit = jnp.arange(k + 1, dtype=jnp.int32)[None, :] == n_acc[:, None]
+    out = jnp.where(hit, final[:, None], pad)
+    return out.astype(jnp.int32), n_acc.astype(jnp.int32)

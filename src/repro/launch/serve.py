@@ -114,6 +114,21 @@ def main(argv=None):
     p.add_argument("--prompt-len", type=int, default=32)
     p.add_argument("--gen", type=int, default=32)
     p.add_argument("--temperature", type=float, default=0.0)
+    p.add_argument("--top-k", type=int, default=0,
+                   help="top-k sampling filter (0 = off; ignored when greedy)")
+    p.add_argument("--top-p", type=float, default=1.0,
+                   help="nucleus sampling filter (1.0 = off)")
+    p.add_argument("--seed", type=int, default=0,
+                   help="engine RNG seed: temperature>0 runs (and spec "
+                        "rejection sampling) are reproducible per seed")
+    p.add_argument("--spec", default="",
+                   help="speculative decoding proposer for the unified "
+                        "engine: 'ngram' (prompt-lookup, zero weights) or "
+                        "'draft:<arch>' (cut-down model sharing the vocab)")
+    p.add_argument("--spec-k", type=int, default=4,
+                   help="max draft tokens verified per slot per dispatch")
+    p.add_argument("--spec-adaptive", action="store_true",
+                   help="walk K down/up with the measured acceptance rate")
     p.add_argument("--block-size", type=int, default=16,
                    help="KV-cache block size (tokens) for the paged pool")
     p.add_argument("--num-blocks", type=int, default=0,
@@ -128,6 +143,8 @@ def main(argv=None):
     args = p.parse_args(argv)
     if args.flush_every and not args.trace:
         p.error("--flush-every streams the trace and requires --trace")
+    if args.spec and args.mode != "unified":
+        p.error("--spec is a unified-engine lane (--mode unified)")
     mesh_shape = _parse_mesh(args, p)
     if mesh_shape is not None:
         _ensure_devices(mesh_shape[0] * mesh_shape[1])
@@ -165,7 +182,10 @@ def main(argv=None):
         engine = ServeEngine(cfg, params, max_len=max_len, tracer=tracer,
                              mesh=mesh)
         stats = engine.throughput_stats(prompts, num_tokens=args.gen,
-                                        extras=extras, temperature=args.temperature)
+                                        extras=extras,
+                                        temperature=args.temperature,
+                                        top_k=args.top_k, top_p=args.top_p,
+                                        seed=args.seed)
     else:
         if args.flush_every:
             out.mkdir(parents=True, exist_ok=True)
@@ -177,12 +197,23 @@ def main(argv=None):
                 max_step_tokens=args.max_step_tokens or None,
                 chunk_size=args.chunk_size or None,
                 chunk_rows=args.chunk_rows, mixed_burst=args.mixed_burst)
+            if args.spec:
+                from repro.serve.spec import make_proposer
+
+                unified_kw.update(
+                    spec=make_proposer(
+                        args.spec, cfg,
+                        num_slots=min(args.slots, args.requests),
+                        max_len=max_len, temperature=args.temperature,
+                        top_k=args.top_k, top_p=args.top_p, seed=args.seed),
+                    spec_k=args.spec_k, spec_adaptive=args.spec_adaptive)
         engine = cls(
             cfg, params, num_slots=min(args.slots, args.requests), max_len=max_len,
             block_size=args.block_size,
             num_blocks=args.num_blocks or None,
             prefix_cache=not args.no_prefix_cache,
             tracer=tracer, temperature=args.temperature,
+            top_k=args.top_k, top_p=args.top_p, seed=args.seed,
             flush_every=args.flush_every,
             flush_base=out / "serve" if args.flush_every else None,
             mesh=mesh, **unified_kw,
@@ -219,6 +250,15 @@ def main(argv=None):
         print(f"[serve] unified step: budget {engine.max_step_tokens} "
               f"tokens/iteration, chunk {engine.chunk_size} "
               f"(chunked prefill {note})")
+        if args.spec:
+            drafted = max(engine.stats["spec_drafted"], 1)
+            print(f"[serve] speculative ({args.spec}): "
+                  f"{engine.stats['spec_dispatches']} verify dispatches, "
+                  f"{engine.stats['spec_accepted']}/"
+                  f"{engine.stats['spec_drafted']} drafts accepted "
+                  f"({engine.stats['spec_accepted'] / drafted:.0%}), "
+                  f"{engine.stats['spec_rollback_blocks']} blocks rolled "
+                  f"back, K={engine._spec_k}")
     if tracer:
         segments = list(tracer.segments)
         trace = xtrace.finish()
@@ -236,6 +276,12 @@ def main(argv=None):
                   f"TTFT p50 {t['p50']:.0f}us / p95 {t['p95']:.0f}us / "
                   f"max {t['max']:.0f}us; TPOT p50 {o['p50']:.0f}us / "
                   f"p95 {o['p95']:.0f}us")
+        if lat["spec"]["dispatches"]:
+            sp = lat["spec"]
+            print(f"[serve] spec (from trace): {sp['accepted']}/"
+                  f"{sp['drafted']} drafts accepted "
+                  f"({sp['acceptance']:.0%}) over {sp['dispatches']} "
+                  f"verify dispatches")
     return 0
 
 

@@ -468,6 +468,14 @@ def _paged_span_attend(q, k_new, v_new, cache, row_start, row_len, positions,
     the causal mask are always row-owned writes (prefix + this span), so
     stale block contents beyond the span are never read with weight; padded
     queries (j >= row_len) produce garbage rows the caller discards.
+
+    This write-then-mask discipline is also what makes speculative
+    decoding's rejected drafts provably inert (docs/speculative.md): a
+    rejected draft's K/V sits at an absolute position at or past the
+    committed frontier, the next span starts AT that frontier and rewrites
+    every position it can reach before attending (overwrite-on-next-span),
+    and absolute-position masking — unlike a ring — can never alias the
+    residue back into causal range.
     """
     kp, vp = cache["k"], cache["v"]
     bs = kp.shape[1]

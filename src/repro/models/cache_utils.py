@@ -81,17 +81,20 @@ def paged_span_write(kp, vp, k_new, v_new, block_tables, row_start, row_len):
 
     k_new/v_new: [B, Q, Kh, D] — row ``b`` holds ``row_len[b]`` valid tokens
     at absolute positions ``row_start[b] + j``; padding columns
-    (``j >= row_len``) are routed into the NULL block so a fixed-shape chunk
-    batch never scribbles on live blocks.  Valid destinations are unique
-    (disjoint block tables per row), so the flat scatter is deterministic
-    everywhere a read can land.
+    (``j >= row_len``) and positions past the table's last entry are routed
+    into the NULL block so a fixed-shape chunk/draft batch never scribbles
+    on live blocks (an out-of-range clamp would alias the write into the
+    slot's LAST block, corrupting committed K/V).  Valid destinations are
+    unique (disjoint block tables per row), so the flat scatter is
+    deterministic everywhere a read can land.
     """
     nb, bs = kp.shape[0], kp.shape[1]
     b, q = k_new.shape[0], k_new.shape[1]
     j = jnp.arange(q, dtype=jnp.int32)[None, :]  # [1, Q]
     pos = row_start[:, None] + j  # [B, Q] absolute positions
-    valid = j < row_len[:, None]
-    w = jnp.clip(pos // bs, 0, block_tables.shape[1] - 1)
+    w_raw = pos // bs
+    valid = (j < row_len[:, None]) & (w_raw < block_tables.shape[1])
+    w = jnp.clip(w_raw, 0, block_tables.shape[1] - 1)
     blk = jnp.take_along_axis(block_tables, w, axis=1)  # [B, Q]
     # padding lands in the NULL block's [0, bs) range (garbage nobody reads)
     dest = jnp.where(valid, blk * bs + pos % bs, pos % bs).reshape(-1)

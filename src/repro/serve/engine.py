@@ -110,7 +110,8 @@ class ContinuousServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, num_slots: int, max_len: int,
                  block_size: int = 16, num_blocks: int | None = None,
                  prefix_cache: bool = True, tracer: Tracer | None = None,
-                 temperature: float = 0.0, seed: int = 0,
+                 temperature: float = 0.0, top_k: int = 0, top_p: float = 1.0,
+                 seed: int = 0,
                  max_prefills_per_iter: int = 1, max_decode_burst: int = 8,
                  flush_every: int = 0, flush_base=None,
                  mesh=None, rules=None):
@@ -127,6 +128,8 @@ class ContinuousServeEngine:
         self.blocks_per_slot = self.capacity // bs
         self.tracer = tracer
         self.temperature = float(temperature)  # fixed per engine (jit-traced)
+        self.top_k = int(top_k)  # sampling filters, traced like temperature
+        self.top_p = float(top_p)
         self.max_decode_burst = max(1, int(max_decode_burst))
         self.flush_every = int(flush_every)
         self.flush_base = flush_base
@@ -296,7 +299,7 @@ class ContinuousServeEngine:
         caches, last_logits = self.model.prefill(params, batch,
                                                  max_len=cache_len, ring=False)
         tok = sample_logits(last_logits, key, self.temperature,
-                            self.cfg.vocab_size)
+                            self.cfg.vocab_size, self.top_k, self.top_p)
         return caches, tok
 
     def _chunk_impl(self, params, pool, batch, prefix_ids, key, *, start, cache_len):
@@ -315,7 +318,7 @@ class ContinuousServeEngine:
             lambda t: jnp.pad(t, ((0, 0), (0, 0), (0, pad)) + ((0, 0),) * (t.ndim - 3)),
             tail)
         tok = sample_logits(last_logits, key, self.temperature,
-                            self.cfg.vocab_size)
+                            self.cfg.vocab_size, self.top_k, self.top_p)
         return tail, tok
 
     def _admit_impl(self, pool, new, tok_buf, idx_buf, slots, block_ids,
@@ -349,7 +352,8 @@ class ContinuousServeEngine:
             new_caches, logits = self.model.decode_step(
                 params, caches, tok, idx, block_tables=bt)
             sub = key if self.temperature <= 0.0 else jax.random.fold_in(key, k)
-            nxt = sample_logits(logits, sub, self.temperature, self.cfg.vocab_size)
+            nxt = sample_logits(logits, sub, self.temperature,
+                                self.cfg.vocab_size, self.top_k, self.top_p)
             tok = jnp.where(active, nxt, tok)
             idx = jnp.where(active, idx + 1, idx)
             return (new_caches, tok, idx), tok
@@ -437,6 +441,17 @@ class ContinuousServeEngine:
             self._slot_blocks[slot] = []
             self._tables[slot] = NULL_BLOCK
             self._tables_dirty = True
+
+    def _grow_slot_blocks(self, slot: int, missing: int):
+        """Append ``missing`` freshly-allocated blocks to a slot's table
+        (the ONE place the table/ownership/dirty-flag bookkeeping lives —
+        decode bursts, prefill chunks, and speculative spans all grow
+        through here)."""
+        fresh = self.pool.alloc(missing)
+        a = len(self._slot_blocks[slot])
+        self._tables[slot, a:a + missing] = fresh
+        self._slot_blocks[slot].extend(fresh)
+        self._tables_dirty = True
 
     # ------------------------------------------------------------------
     # request intake
@@ -617,11 +632,7 @@ class ContinuousServeEngine:
                     total += missing
             if total <= self.pool.available():
                 for slot, missing in shortfall:
-                    fresh = self.pool.alloc(missing)
-                    a = len(self._slot_blocks[slot])
-                    self._tables[slot, a:a + missing] = fresh
-                    self._slot_blocks[slot].extend(fresh)
-                    self._tables_dirty = True
+                    self._grow_slot_blocks(slot, missing)
                 return pairs, steps
             pairs = self._preempt_one(pairs)
         return pairs, 0
@@ -815,20 +826,24 @@ class ServeEngine:
         self._prefill = jax.jit(
             lambda p, b: self.model.prefill(p, b, max_len=max_len)
         )
-        self._decode_sample = jax.jit(self._decode_sample_impl,
-                                      static_argnames=("temperature",))
+        self._decode_sample = jax.jit(
+            self._decode_sample_impl,
+            static_argnames=("temperature", "top_k", "top_p"))
 
     def _with_rules(self):
         return (use_rules(self.meshstate.rules) if self.meshstate
                 else contextlib.nullcontext())
 
-    def _decode_sample_impl(self, params, caches, tok, idx, key, *, temperature):
+    def _decode_sample_impl(self, params, caches, tok, idx, key, *,
+                            temperature, top_k=0, top_p=1.0):
         caches, logits = self.model.decode_step(params, caches, tok, idx)
-        nxt = sample_logits(logits, key, temperature, self.cfg.vocab_size)
+        nxt = sample_logits(logits, key, temperature, self.cfg.vocab_size,
+                            top_k, top_p)
         return caches, nxt
 
     def generate(self, prompts: np.ndarray, *, num_tokens: int,
                  extras: dict | None = None, temperature: float = 0.0,
+                 top_k: int = 0, top_p: float = 1.0,
                  seed: int = 0) -> np.ndarray:
         """prompts: [B, S] int32.  Returns [B, num_tokens] generated ids."""
         b, s = prompts.shape
@@ -847,7 +862,7 @@ class ServeEngine:
         key = jax.random.PRNGKey(seed)
         out = np.zeros((b, num_tokens), np.int32)
         tok = sample_logits(logits, jax.random.fold_in(key, 0), temperature,
-                            self.cfg.vocab_size)
+                            self.cfg.vocab_size, top_k, top_p)
         out[:, 0] = np.asarray(tok)
         self.host_syncs += 1
         for i in range(1, num_tokens):
@@ -856,22 +871,26 @@ class ServeEngine:
             if tr:
                 with tr.user_function(name="decode_step"), self._with_rules():
                     caches, tok = self._decode_sample(
-                        self.params, caches, tok, idx, sub, temperature=temperature)
+                        self.params, caches, tok, idx, sub,
+                        temperature=temperature, top_k=top_k, top_p=top_p)
                 tr.emit(EV_TOKENS_DECODED, i)
             else:
                 with self._with_rules():
                     caches, tok = self._decode_sample(
-                        self.params, caches, tok, idx, sub, temperature=temperature)
+                        self.params, caches, tok, idx, sub,
+                        temperature=temperature, top_k=top_k, top_p=top_p)
             out[:, i] = np.asarray(tok)
             self.host_syncs += 1
         return out
 
     def throughput_stats(self, prompts, num_tokens: int, extras=None,
-                         temperature: float = 0.0) -> dict:
+                         temperature: float = 0.0, top_k: int = 0,
+                         top_p: float = 1.0, seed: int = 0) -> dict:
         syncs0 = self.host_syncs
         t0 = time.perf_counter()
         self.generate(prompts, num_tokens=num_tokens, extras=extras,
-                      temperature=temperature)
+                      temperature=temperature, top_k=top_k, top_p=top_p,
+                      seed=seed)
         dt = time.perf_counter() - t0
         total = prompts.shape[0] * num_tokens
         return {"tokens": total, "seconds": dt, "tok_per_s": total / dt,

@@ -13,7 +13,11 @@ iteration:
     token-budget engine admits one request at a time (:meth:`admit_one`)
     and its policy demands blocks for the FIRST prefill chunk only — the
     rest allocates just-in-time as chunks stream through the step
-    (serve/step.py);
+    (serve/step.py).  Speculative dispatches extend the same discipline
+    to draft positions: blocks for the K speculative slots allocate
+    just-in-time per span, roll back when drafts are rejected, and
+    draft+verify positions are charged against the step budget before
+    chunk planning sees the remainder (docs/speculative.md);
   * when a request is finished, returning its slot to the pool;
   * when the engine must *preempt* a request (block pool dry mid-decode),
     recording the back-transition.

@@ -1,0 +1,270 @@
+"""Draft proposers for speculative decoding through the unified serve step.
+
+The unified engine's spec mode (``serve/step.py``) turns the one-token
+decode lane into variable-width verified spans: each decode-active slot
+proposes ``K`` draft tokens, the TARGET model scores all ``K + 1`` span
+positions in ONE pass through the paged span-attention path, and the
+accepted prefix commits (``core/sampling.spec_accept``).  Proposers supply
+the drafts; two built-ins:
+
+  * :class:`NGramProposer` — prompt-lookup drafting: the longest recent
+    n-gram of the committed context is matched against its own history and
+    the continuation after the match is proposed.  Deterministic, zero
+    extra weights, pure host numpy — runs on CPU CI.  Its proposal
+    distribution is a point mass, so rejection sampling accepts draft
+    ``d`` with probability ``p_target(d)``.
+  * :class:`DraftModelProposer` — a cut-down model sharing the target's
+    vocab, decoding autoregressively over its own slot-indexed contiguous
+    cache.  The cache is position-addressed, so speculative writes from
+    rejected drafts are inert: every position is rewritten in order by the
+    actual committed token (catch-up) before any later query can attend it
+    with weight — the same overwrite-on-next-span rewind discipline the
+    paged pool uses for the target (see docs/speculative.md).
+
+Both expose one interface the engine consumes::
+
+    reset_slot(slot)                  # new occupant admitted into `slot`
+    propose(slots, contexts, k)       # -> (drafts [n, k] int32,
+                                      #     q [n, k, V] float32 | None)
+
+``contexts[i]`` is the full committed token context (prompt + generated)
+of engine slot ``slots[i]``; ``q is None`` declares a deterministic
+proposer (one-hot proposal distribution).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sampling import target_log_probs
+
+
+class DraftProposer:
+    """Interface consumed by the spec-mode unified engine."""
+
+    name = "base"
+
+    def reset_slot(self, slot: int) -> None:
+        """A new request was admitted into ``slot`` — drop any per-slot
+        drafting state (called from the engine's ``on_admit``)."""
+
+    def propose(self, slots, contexts, k: int):
+        raise NotImplementedError
+
+
+class NGramProposer(DraftProposer):
+    """Prompt-lookup drafting: propose the continuation after the most
+    recent earlier occurrence of the context's trailing n-gram (longest
+    ``n`` in ``[min_ngram, max_ngram]`` wins; the fallback repeats the last
+    token, which is as good a deterministic guess as any)."""
+
+    name = "ngram"
+
+    def __init__(self, max_ngram: int = 3, min_ngram: int = 1):
+        if not 1 <= min_ngram <= max_ngram:
+            raise ValueError("need 1 <= min_ngram <= max_ngram")
+        self.max_ngram = int(max_ngram)
+        self.min_ngram = int(min_ngram)
+
+    def _continuation(self, ctx: np.ndarray, k: int) -> np.ndarray:
+        out = np.full((k,), int(ctx[-1]) if len(ctx) else 0, np.int32)
+        ln = len(ctx)
+        for n in range(min(self.max_ngram, ln - 1), self.min_ngram - 1, -1):
+            pat = ctx[ln - n:]
+            # windows over ctx[:-1]: a match always has >= 1 continuation
+            # token and can never be the trailing pattern itself
+            wins = np.lib.stride_tricks.sliding_window_view(ctx[:ln - 1], n)
+            hits = np.nonzero((wins == pat[None, :]).all(axis=1))[0]
+            if len(hits):
+                p = int(hits[-1]) + n
+                cont = ctx[p:p + k]
+                out[:len(cont)] = cont
+                break
+        return out
+
+    def propose(self, slots, contexts, k: int):
+        drafts = np.zeros((len(slots), k), np.int32)
+        for i, ctx in enumerate(contexts):
+            drafts[i] = self._continuation(np.asarray(ctx), k)
+        return drafts, None  # deterministic: point-mass proposal
+
+
+class DraftModelProposer(DraftProposer):
+    """Small-model drafting over a slot-indexed contiguous cache.
+
+    The draft model shares the target's vocab but nothing else; its cache
+    holds one contiguous region per engine slot (``model.cache_specs``)
+    and ``_len[slot]`` tracks how many COMMITTED positions are
+    materialized.  Each ``propose`` call:
+
+      1. *prefill* — a slot seen for the first time since ``reset_slot``
+         runs a whole-context prefill scattered into its cache region
+         (one compile per context length, like the legacy grouped prefill);
+      2. *catch-up* — slots whose committed context grew past ``_len``
+         (accepted drafts + the correction token from the last verify)
+         replay those tokens through a scanned batched decode, so the
+         draft cache always re-materializes the ACTUAL committed tokens at
+         their positions — rejected speculative writes are overwritten in
+         order before anything can attend them;
+      3. *proposal* — ``k`` scanned decode steps propose the continuation
+         (argmax when the engine is greedy; filtered temperature sampling
+         with the proposal distribution returned for rejection sampling
+         otherwise).
+
+    Rows not proposing this call still flow through the batched scans with
+    a frozen-inert write pattern (their writes land at/after ``_len``,
+    which the next catch-up rewrites before first read).
+    """
+
+    name = "draft"
+
+    def __init__(self, cfg, params=None, *, num_slots: int, max_len: int,
+                 temperature: float = 0.0, top_k: int = 0, top_p: float = 1.0,
+                 seed: int = 0):
+        from repro.models.model import build_model
+
+        if cfg.family not in ("dense", "moe"):
+            raise ValueError("draft model must be an attention-only family")
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        # params=None: fresh init (this repro has no trained weights, so an
+        # initialized draft stands in for 'a small model distilled from the
+        # target')
+        self.params = (params if params is not None
+                       else self.model.init(jax.random.PRNGKey(seed + 1)))
+        self.num_slots = int(num_slots)
+        self.capacity = int(max_len)
+        self.temperature = float(temperature)
+        self.top_k = int(top_k)
+        self.top_p = float(top_p)
+        specs = self.model.cache_specs(self.num_slots, self.capacity)
+        self._caches = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), specs)
+        self._len = np.zeros((self.num_slots,), np.int64)
+        self._key = jax.random.PRNGKey(seed)
+        self._calls = 0  # proposal counter (drives the draft RNG stream)
+        self._prefill = jax.jit(self._prefill_impl, donate_argnums=(1,))
+        self._advance = jax.jit(self._advance_impl, donate_argnums=(1,),
+                                static_argnames=("steps",))
+        self._propose = jax.jit(self._propose_impl, donate_argnums=(1,),
+                                static_argnames=("k",))
+
+    def reset_slot(self, slot: int) -> None:
+        self._len[slot] = 0
+
+    # ------------------------------------------------------------------
+    def _prefill_impl(self, params, caches, slot, tokens):
+        """Prefill one context ([1, L]) and scatter its cache region into
+        the slot-indexed pool (leaves are [layers, num_slots, ...])."""
+        new, _ = self.model.prefill(params, {"tokens": tokens},
+                                    max_len=self.capacity)
+        return jax.tree.map(
+            lambda pool, nw: pool.at[:, slot].set(nw[:, 0].astype(pool.dtype)),
+            caches, new)
+
+    def _advance_impl(self, params, caches, tokens, idx0, *, steps):
+        """Write ``steps`` committed tokens per row at consecutive
+        positions (logits discarded — this is pure cache catch-up)."""
+        def body(carry, t):
+            caches, idx = carry
+            caches, _ = self.model.decode_step(params, caches, tokens[:, t], idx)
+            return (caches, idx + 1), None
+
+        (caches, _), _ = jax.lax.scan(
+            body, (caches, idx0), jnp.arange(steps))
+        return caches
+
+    def _propose_impl(self, params, caches, tok, idx, key, *, k):
+        """-> (caches, drafts [S, k], q [S, k, V] | None).  Greedy drafting
+        skips the proposal distribution entirely (the verifier's argmax
+        acceptance never reads q — materializing a [S, k, V] one-hot per
+        dispatch would be pure waste)."""
+        vocab = self.cfg.vocab_size
+        greedy = self.temperature <= 0.0
+
+        def body(carry, j):
+            caches, tok, idx = carry
+            caches, lg = self.model.decode_step(params, caches, tok, idx)
+            if greedy:
+                nxt = jnp.argmax(lg[..., :vocab], axis=-1).astype(jnp.int32)
+                return (caches, nxt, idx + 1), nxt
+            logp = target_log_probs(lg, self.temperature, vocab,
+                                    self.top_k, self.top_p)
+            nxt = jax.random.categorical(
+                jax.random.fold_in(key, j), logp).astype(jnp.int32)
+            return (caches, nxt, idx + 1), (nxt, jnp.exp(logp)
+                                            .astype(jnp.float32))
+
+        (caches, _, _), out = jax.lax.scan(
+            body, (caches, tok, idx), jnp.arange(k))
+        if greedy:
+            return caches, out.T, None
+        drafts, qs = out
+        return caches, drafts.T, qs.transpose(1, 0, 2)
+
+    # ------------------------------------------------------------------
+    def propose(self, slots, contexts, k: int):
+        contexts = [np.asarray(c, np.int64) for c in contexts]
+        # 1) whole-context prefill for slots reset since their last proposal
+        for s, ctx in zip(slots, contexts):
+            if self._len[s] == 0 and len(ctx) > 1:
+                self._caches = self._prefill(
+                    self.params, self._caches, jnp.int32(s),
+                    jnp.asarray(ctx[None, :-1], jnp.int32))
+                self._len[s] = len(ctx) - 1
+        # 2) batched catch-up of committed tokens past _len (rows with
+        # nothing to replay advance inertly: writes at/after their _len are
+        # rewritten in order before they are ever attended)
+        need = {s: max(len(ctx) - 1 - int(self._len[s]), 0)
+                for s, ctx in zip(slots, contexts)}
+        t_max = max(need.values(), default=0)
+        if t_max > 0:
+            feed = np.zeros((self.num_slots, t_max), np.int32)
+            for s, ctx in zip(slots, contexts):
+                take = ctx[self._len[s]:self._len[s] + need[s]]
+                feed[s, :len(take)] = take
+            idx0 = np.minimum(self._len, self.capacity - 1).astype(np.int32)
+            self._caches = self._advance(
+                self.params, self._caches, jnp.asarray(feed),
+                jnp.asarray(idx0), steps=t_max)
+            for s in slots:
+                self._len[s] += need[s]
+        # 3) k-step scanned proposal seeded with each row's last token
+        tok = np.zeros((self.num_slots,), np.int32)
+        idx = np.minimum(self._len, self.capacity - 1).astype(np.int32)
+        for s, ctx in zip(slots, contexts):
+            if len(ctx):
+                tok[s] = ctx[-1]
+                idx[s] = min(len(ctx) - 1, self.capacity - 1)
+        key = jax.random.fold_in(self._key, self._calls)
+        self._calls += 1
+        self._caches, drafts, qs = self._propose(
+            self.params, self._caches, jnp.asarray(tok), jnp.asarray(idx),
+            key, k=k)
+        for s, ctx in zip(slots, contexts):
+            self._len[s] = len(ctx)  # the last-token feed materialized L-1
+        drafts = np.asarray(drafts)[list(slots)]
+        # q stays a DEVICE array (the engine scatters it into the verify
+        # batch on device — a [n, k, V] host round trip per dispatch would
+        # sit on the critical path speculation exists to shorten)
+        q = qs[jnp.asarray(list(slots))] if qs is not None else None
+        return drafts.astype(np.int32), q
+
+
+def make_proposer(spec: str, cfg, *, num_slots: int, max_len: int,
+                  temperature: float = 0.0, top_k: int = 0,
+                  top_p: float = 1.0, seed: int = 0):
+    """CLI factory: ``ngram`` or ``draft:<arch>`` (a reduced single-layer
+    config of ``<arch>`` sharing the target's vocab, freshly initialized
+    by the proposer itself)."""
+    if spec == "ngram":
+        return NGramProposer()
+    if spec.startswith("draft:"):
+        from repro.configs import get_config, reduced
+
+        dcfg = reduced(get_config(spec[len("draft:"):]), num_layers=1)
+        dcfg = dcfg.replace(vocab_size=cfg.vocab_size)
+        return DraftModelProposer(
+            dcfg, num_slots=num_slots, max_len=max_len,
+            temperature=temperature, top_k=top_k, top_p=top_p, seed=seed)
+    raise ValueError(f"unknown --spec {spec!r} (ngram | draft:<arch>)")

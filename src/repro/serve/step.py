@@ -39,6 +39,27 @@ paint the prefill/decode interleave straight into the ``.prv``/chrome
 timeline.  The legacy two-path :class:`ContinuousServeEngine` survives as
 the equivalence oracle — greedy decode through the unified step must match
 it bit-for-bit (tests/test_serve_unified.py).
+
+**Speculative decoding** (``spec=`` a :mod:`repro.serve.spec` proposer)
+refactors the decode lane once more, from fixed one-token steps to
+variable-width verified spans: each decode-active slot proposes up to
+``K`` draft tokens, and ONE span pass per dispatch scores all ``K + 1``
+positions per slot — the same :func:`_paged_span_attend` path the chunk
+sub-batch uses, so draft verification and chunked prefill ride one
+executable.  On-device accept/reject
+(:func:`repro.core.sampling.spec_accept`: greedy longest-argmax-prefix,
+Leviathan rejection sampling for temperature > 0) commits the accepted
+prefix plus one correction/bonus token.  Rejected drafts leave garbage
+K/V in the pool, which is provably inert: the committed frontier never
+passes a garbage position without overwriting it first (the next span
+starts at the frontier and spans are contiguous), and absolute-position
+causal masking keeps queries from ever weighting positions past their
+own span.  Trailing blocks holding ONLY rejected-draft garbage are rolled
+back to the pool after each dispatch; draft + verify positions are
+charged against ``max_step_tokens``, and the per-dispatch
+``EV_SPEC_DRAFTED`` / ``EV_SPEC_ACCEPTED`` / ``EV_SPEC_K`` counter triple
+makes the draft economy a first-class trace.  Greedy spec decode is
+bit-identical to the non-spec unified engine (tests/test_serve_spec.py).
 """
 from __future__ import annotations
 
@@ -51,9 +72,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import events as ev
-from repro.core.sampling import sample_logits
+from repro.core.sampling import sample_logits, spec_accept
 from repro.serve.block_pool import NULL_BLOCK
-from repro.serve.engine import ContinuousServeEngine
+from repro.serve.engine import EV_TOKENS_DECODED, ContinuousServeEngine
 from repro.serve.queue import Request, _now_ns
 
 
@@ -73,7 +94,8 @@ class UnifiedServeEngine(ContinuousServeEngine):
 
     def __init__(self, cfg, params, *, max_step_tokens: int | None = None,
                  chunk_size: int | None = None, chunk_rows: int = 2,
-                 mixed_burst: int = 4, **kwargs):
+                 mixed_burst: int = 4, spec=None, spec_k: int = 4,
+                 spec_adaptive: bool = False, **kwargs):
         super().__init__(cfg, params, **kwargs)
         self.chunk_size = int(chunk_size or max(2 * self.block_size, 16))
         if self.chunk_size < 1:
@@ -118,6 +140,32 @@ class UnifiedServeEngine(ContinuousServeEngine):
         else:
             self._unified = jax.jit(self._unified_impl, donate_argnums=(1,),
                                     static_argnames=("steps", "chunk"))
+        # --- speculative decoding: draft/verify spans through the span path
+        self.spec = spec
+        self.spec_k_max = max(1, int(spec_k))
+        self.spec_adaptive = bool(spec_adaptive)
+        self._spec_k = self.spec_k_max  # current width (adaptive shrinks it)
+        self._accept_ema = 1.0  # optimistic start: first dispatches run wide
+        if spec is not None:
+            if not self.chunkable:
+                raise ValueError(
+                    "speculative decoding needs the fully-paged span path "
+                    f"(dense/moe families); {cfg.family!r} cannot run it")
+            self.stats.update(spec_dispatches=0, spec_drafted=0,
+                              spec_accepted=0, spec_rollback_blocks=0)
+            if self.tracer is not None:
+                for code in (ev.EV_SPEC_DRAFTED, ev.EV_SPEC_ACCEPTED,
+                             ev.EV_SPEC_K):
+                    self.tracer.register(code, ev.SERVE_CTR_LABELS[code])
+            if self.meshstate is not None:
+                r = self.meshstate.replicated
+                self._spec_step = jax.jit(
+                    self._spec_impl, donate_argnums=(1,),  # caches
+                    static_argnames=("chunk",),
+                    out_shardings=(self._cache_sh, r, r, r, r, r))
+            else:
+                self._spec_step = jax.jit(self._spec_impl, donate_argnums=(1,),
+                                          static_argnames=("chunk",))
 
     # ------------------------------------------------------------------
     # the jitted mixed-batch step
@@ -151,22 +199,86 @@ class UnifiedServeEngine(ContinuousServeEngine):
             ck_tables = tables[ck_slot]  # [C, W]
             caches, logits = self.model.span_step(
                 params, caches, ck_tokens, ck_start, ck_len, ck_tables)
-            last = jnp.take_along_axis(
-                logits, jnp.maximum(ck_len - 1, 0)[:, None, None], axis=1)[:, 0]
-            ck_key = (key if self.temperature <= 0.0
-                      else jax.random.fold_in(key, 1 << 18))
-            ck_tok = sample_logits(last, ck_key, self.temperature,
-                                   self.cfg.vocab_size)
-            # fold completed-prompt rows into the slot registers (exact:
-            # <= 1 chunk per slot per step, int one-hot sum)
-            onehot = ((ck_slot[:, None] == jnp.arange(self.num_slots)[None, :])
-                      & ck_sample[:, None])  # [C, S]
-            hit = onehot.any(axis=0)
-            tok = jnp.where(hit, (onehot * ck_tok[:, None]).sum(0)
-                            .astype(tok.dtype), tok)
-            idx = jnp.where(hit, (onehot * (ck_start + ck_len)[:, None]).sum(0)
-                            .astype(idx.dtype), idx)
+            tok, idx, ck_tok = self._fold_chunk_rows(
+                logits, ck_start, ck_len, ck_slot, ck_sample, key, tok, idx)
         return caches, tok, idx, toks, ck_tok
+
+    def _fold_chunk_rows(self, logits, ck_start, ck_len, ck_slot, ck_sample,
+                         key, tok, idx):
+        """Sample completed-prompt chunk rows and fold their first token +
+        decode position into the slot registers — the trickiest on-device
+        logic in the engine, shared verbatim by the unified and spec
+        executables (exact: <= 1 chunk per slot per step, int one-hot
+        sum)."""
+        last = jnp.take_along_axis(
+            logits, jnp.maximum(ck_len - 1, 0)[:, None, None], axis=1)[:, 0]
+        ck_key = (key if self.temperature <= 0.0
+                  else jax.random.fold_in(key, 1 << 18))
+        ck_tok = sample_logits(last, ck_key, self.temperature,
+                               self.cfg.vocab_size, self.top_k, self.top_p)
+        onehot = ((ck_slot[:, None] == jnp.arange(self.num_slots)[None, :])
+                  & ck_sample[:, None])  # [C, S]
+        hit = onehot.any(axis=0)
+        tok = jnp.where(hit, (onehot * ck_tok[:, None]).sum(0)
+                        .astype(tok.dtype), tok)
+        idx = jnp.where(hit, (onehot * (ck_start + ck_len)[:, None]).sum(0)
+                        .astype(idx.dtype), idx)
+        return tok, idx, ck_tok
+
+    # ------------------------------------------------------------------
+    # the jitted draft/verify span step (spec mode)
+    # ------------------------------------------------------------------
+    def _spec_impl(self, params, caches, tok, idx, active, tables, drafts,
+                   draft_q, spec_len, ck_tokens, ck_start, ck_len, ck_slot,
+                   ck_sample, key, *, chunk):
+        """One speculative dispatch in ONE span pass.
+
+        Every slot contributes a row ``[tok, d_0 .. d_{K-1}]`` at absolute
+        positions ``idx .. idx + K`` with ``spec_len`` valid tokens
+        (``k_eff + 1`` for decode-active slots, 0 otherwise — inactive rows
+        scatter only NULL-routed padding and their outputs are discarded);
+        up to ``chunk_rows`` prefill-chunk rows ride the SAME span batch.
+        The target scores all span positions at once, `spec_accept` commits
+        the accepted draft prefix + one correction/bonus token, and
+        completed-prompt chunk rows sample their first token — all on
+        device, one executable, one fetch.
+        """
+        s, kmax = self.num_slots, self.spec_k_max
+        width = max(kmax + 1, self.chunk_size) if chunk else kmax + 1
+        spec_toks = jnp.concatenate([tok[:, None], drafts], axis=1)
+        spec_toks = jnp.pad(spec_toks, ((0, 0), (0, width - (kmax + 1))))
+        spec_bt = jnp.where(active[:, None], tables, NULL_BLOCK)
+        row_tokens, row_start, row_len, row_bt = \
+            spec_toks, idx, spec_len, spec_bt
+        if chunk:
+            ck_pad = jnp.pad(ck_tokens,
+                             ((0, 0), (0, width - self.chunk_size)))
+            row_tokens = jnp.concatenate([spec_toks, ck_pad])
+            row_start = jnp.concatenate([idx, ck_start])
+            row_len = jnp.concatenate([spec_len, ck_len])
+            row_bt = jnp.concatenate([spec_bt, tables[ck_slot]])
+        caches, logits = self.model.span_step(
+            params, caches, row_tokens, row_start, row_len, row_bt)
+
+        k_acc = (key if self.temperature <= 0.0
+                 else jax.random.fold_in(key, 1 << 17))
+        out_toks, n_acc = spec_accept(
+            logits[:s, :kmax + 1], drafts, jnp.maximum(spec_len - 1, 0),
+            draft_q, k_acc, self.temperature, self.cfg.vocab_size,
+            self.top_k, self.top_p)
+        # belt-and-braces: gate on `active` too, so a slot whose span was
+        # dropped host-side after planning can never advance its registers
+        spec_active = (spec_len > 0) & active
+        final = jnp.take_along_axis(out_toks, n_acc[:, None], axis=1)[:, 0]
+        tok = jnp.where(spec_active, final, tok)
+        idx = jnp.where(spec_active, idx + n_acc + 1, idx)
+
+        ck_tok = jnp.zeros(ck_start.shape, jnp.int32)
+        if chunk:
+            tok, idx, ck_tok = self._fold_chunk_rows(
+                logits[s:, :self.chunk_size], ck_start, ck_len, ck_slot,
+                ck_sample, key, tok, idx)
+        return caches, tok, idx, out_toks, n_acc, ck_tok
 
     # ------------------------------------------------------------------
     # admission policy: blocks for the FIRST chunk only (JIT per chunk)
@@ -186,6 +298,10 @@ class UnifiedServeEngine(ContinuousServeEngine):
         return ok
 
     def on_admit(self, slot: int, req: Request):
+        if self.spec is not None:
+            # every occupant change passes through here — the proposer's
+            # per-slot drafting state (draft-model cache cursor) resets
+            self.spec.reset_slot(slot)
         if not self.chunkable:
             return super().on_admit(slot, req)
         pool = self.pool
@@ -237,23 +353,24 @@ class UnifiedServeEngine(ContinuousServeEngine):
             missing = pool.blocks_for(progress + length) \
                 - len(self._slot_blocks[slot])
         if missing > 0:
-            fresh = pool.alloc(missing)
-            a = len(self._slot_blocks[slot])
-            self._tables[slot, a:a + missing] = fresh
-            self._slot_blocks[slot].extend(fresh)
-            self._tables_dirty = True
+            self._grow_slot_blocks(slot, missing)
         tokens = np.asarray(req.input_ids()[progress:progress + length],
                             np.int32)
         return ChunkPlan(slot, req, progress, length, tokens,
                          sample=progress + length >= target)
 
-    def _plan_chunks(self, pairs) -> list[ChunkPlan]:
+    def _plan_chunks(self, pairs, decode_tokens: int | None = None
+                     ) -> list[ChunkPlan]:
         """Pick this iteration's prefill chunks — resumes first (oldest
         admission first), then FIFO admissions — up to ``chunk_rows``
-        streams sharing the budget left after decode."""
+        streams sharing the budget left after decode.  ``decode_tokens``
+        overrides the decode charge (spec mode charges draft + verify
+        positions, not one token per slot)."""
         if not self.chunkable:
             return []
-        budget = self.max_step_tokens - len(pairs)
+        if decode_tokens is None:
+            decode_tokens = len(pairs)
+        budget = self.max_step_tokens - decode_tokens
         plans: list[ChunkPlan] = []
         live = sorted((s for s in range(self.num_slots) if self._prefilling[s]),
                       key=lambda s: self.scheduler.slots[s].admit_seq)
@@ -304,10 +421,10 @@ class UnifiedServeEngine(ContinuousServeEngine):
     # ------------------------------------------------------------------
     # dispatch / fetch
     # ------------------------------------------------------------------
-    def _dispatch(self, pairs, steps, chunks: list[ChunkPlan]):
-        tr = self.tracer
-        if not pairs and not chunks:
-            return None
+    def _prep_dispatch(self, chunks: list[ChunkPlan]):
+        """Shared dispatch preamble (unified AND spec): derive the step's
+        RNG key, refresh dirty device registers, and pack the chunk plans
+        into the fixed-shape [chunk_rows, chunk_size] buffers."""
         key = (self._key if self.temperature <= 0.0
                else jax.random.fold_in(self._key, self._dispatches))
         self._dispatches += 1
@@ -329,6 +446,14 @@ class UnifiedServeEngine(ContinuousServeEngine):
             ck_len[i] = c.length
             ck_slot[i] = c.slot
             ck_sample[i] = c.sample
+        return key, ck_tokens, ck_start, ck_len, ck_slot, ck_sample
+
+    def _dispatch(self, pairs, steps, chunks: list[ChunkPlan]):
+        tr = self.tracer
+        if not pairs and not chunks:
+            return None
+        key, ck_tokens, ck_start, ck_len, ck_slot, ck_sample = \
+            self._prep_dispatch(chunks)
         t_dispatch = _now_ns()
         with (tr.phase(ev.PHASE_DECODE) if tr else contextlib.nullcontext()), \
                 (tr.user_function(name="unified_step") if tr
@@ -349,6 +474,24 @@ class UnifiedServeEngine(ContinuousServeEngine):
             if req.scheduled >= req.max_new_tokens:
                 self._active[slot] = False
                 self._active_dirty = True
+        n_chunk = self._advance_chunks(chunks, t_dispatch)
+        # per-ITERATION values (a burst is `steps` iterations in one
+        # dispatch, emitted once; its chunks ride the first iteration):
+        # STEP_BUDGET == CHUNK + DECODE at every sample, and chunkable
+        # prefill never pushes it past max_step_tokens — whole-prompt
+        # admissions (non-chunkable families, folded in here to keep the
+        # triple cadence) are the documented budget bypass
+        n_chunk += self._whole_tokens
+        self._whole_tokens = 0
+        if tr:
+            tr.emit(ev.EV_STEP_BUDGET, len(pairs) + n_chunk)
+            tr.emit(ev.EV_CHUNK_TOKENS, n_chunk)
+            tr.emit(ev.EV_DECODE_TOKENS, len(pairs))
+        return toks, ck_tok, pairs, chunks, t_dispatch, coll_ops
+
+    def _advance_chunks(self, chunks: list[ChunkPlan], t_dispatch) -> int:
+        """Dispatch-side chunk bookkeeping (cursor advance, prompt-block
+        registration at completion); returns the chunk token count."""
         n_chunk = 0
         for c in chunks:
             n_chunk += c.length
@@ -370,28 +513,11 @@ class UnifiedServeEngine(ContinuousServeEngine):
                     for j, h in enumerate(hashes[:req.prompt_len
                                                  // self.block_size]):
                         self.pool.register(self._slot_blocks[slot][j], h)
-        # per-ITERATION values (a burst is `steps` iterations in one
-        # dispatch, emitted once; its chunks ride the first iteration):
-        # STEP_BUDGET == CHUNK + DECODE at every sample, and chunkable
-        # prefill never pushes it past max_step_tokens — whole-prompt
-        # admissions (non-chunkable families, folded in here to keep the
-        # triple cadence) are the documented budget bypass
-        n_chunk += self._whole_tokens
-        self._whole_tokens = 0
-        if tr:
-            tr.emit(ev.EV_STEP_BUDGET, len(pairs) + n_chunk)
-            tr.emit(ev.EV_CHUNK_TOKENS, n_chunk)
-            tr.emit(ev.EV_DECODE_TOKENS, len(pairs))
-        return toks, ck_tok, pairs, chunks, t_dispatch, coll_ops
+        return n_chunk
 
-    def _process_unified(self, toks_dev, ck_dev, pairs, chunks, t_dispatch,
-                         coll_ops):
-        """Fetch one unified step's tokens (the single host sync, overlapped
-        with the next step's device compute) and run retirement/latency
-        bookkeeping — including the first tokens of prompts whose final
-        chunks rode this step."""
-        toks, ck = jax.device_get((toks_dev, ck_dev))
-        self._process_tokens(toks, pairs, t_dispatch, coll_ops)
+    def _emit_chunk_tokens(self, chunks: list[ChunkPlan], ck) -> None:
+        """Fetch-side chunk bookkeeping: append the first sampled token of
+        each completed prompt and retire single-token requests."""
         for i, c in enumerate(chunks):
             if not c.sample:
                 continue
@@ -407,6 +533,224 @@ class UnifiedServeEngine(ContinuousServeEngine):
                     and self.scheduler.slots[req.slot] is req:
                 self._finish(req)
 
+    def _process_unified(self, toks_dev, ck_dev, pairs, chunks, t_dispatch,
+                         coll_ops):
+        """Fetch one unified step's tokens (the single host sync, overlapped
+        with the next step's device compute) and run retirement/latency
+        bookkeeping — including the first tokens of prompts whose final
+        chunks rode this step."""
+        toks, ck = jax.device_get((toks_dev, ck_dev))
+        self._process_tokens(toks, pairs, t_dispatch, coll_ops)
+        self._emit_chunk_tokens(chunks, ck)
+
+    # ------------------------------------------------------------------
+    # speculative decoding (spec mode)
+    # ------------------------------------------------------------------
+    def _slot_pos(self, slot: int, req: Request) -> int:
+        """Absolute position of the slot's pending token — the last sampled,
+        not-yet-written token the next draft/verify span roots at."""
+        return int(self._slot_start[slot]) + len(req.tokens) \
+            - int(self._slot_sched0[slot]) - 1
+
+    def _plan_spec(self, pairs):
+        """Clamp each decode-active slot's draft width to the step budget /
+        remaining generation / cache capacity, then allocate the blocks its
+        span will write — just-in-time, oldest admissions first, each span
+        shrinking to what the pool can fund (width 0 is a plain one-token
+        decode) and the NEWEST request preempted when even the pending
+        token cannot be funded.  Returns (surviving pairs, spec_len [S])
+        where ``spec_len[slot] = k_eff + 1`` for planned slots."""
+        pool = self.pool
+        while True:
+            spec_len = np.zeros((self.num_slots,), np.int32)
+            if not pairs:
+                return pairs, spec_len
+            k_base = max(0, min(self._spec_k,
+                                self.max_step_tokens // len(pairs) - 1))
+            ok = True
+            for slot, req in sorted(pairs, key=lambda sr: sr[1].admit_seq):
+                pos = self._slot_pos(slot, req)
+                rem = req.max_new_tokens - len(req.tokens)
+                k = max(0, min(k_base, rem - 1, self.capacity - 1 - pos))
+                missing = pool.blocks_for(pos + k + 1) \
+                    - len(self._slot_blocks[slot])
+                while k > 0 and missing > pool.available():
+                    k -= 1
+                    missing = pool.blocks_for(pos + k + 1) \
+                        - len(self._slot_blocks[slot])
+                if missing > pool.available():
+                    ok = False  # even the pending token cannot be funded
+                    break
+                if missing > 0:
+                    self._grow_slot_blocks(slot, missing)
+                spec_len[slot] = k + 1
+            if ok:
+                return pairs, spec_len
+            # blocks granted to older slots this attempt stay owned (they
+            # are needed regardless; unused tails roll back after the
+            # dispatch) — evict the newest request and replan
+            self._preempt_one(pairs)
+
+    def _rollback_spec_blocks(self, slot: int, next_pos: int) -> None:
+        """Return trailing blocks holding ONLY rejected-draft garbage to
+        the pool.  Committed content occupies positions [0, next_pos) and
+        the pending token writes AT ``next_pos``, so every block past
+        ``next_pos``'s own block is pure speculation residue — freeing it
+        here is the rewind that keeps worst-case pool pressure at the
+        committed frontier, not the drafted one."""
+        keep = self.pool.blocks_for(next_pos + 1)
+        blocks = self._slot_blocks[slot]
+        if len(blocks) > keep:
+            extra = blocks[keep:]
+            del blocks[keep:]
+            self._tables[slot, keep:] = NULL_BLOCK
+            self._tables_dirty = True
+            self.pool.free(extra)
+            self.stats["spec_rollback_blocks"] += len(extra)
+
+    def _run_spec(self) -> dict[int, np.ndarray]:
+        """Speculative serving loop: per iteration, ONE draft/verify span
+        dispatch covers every decode-active slot (up to ``K`` drafts each,
+        all ``K + 1`` positions scored in one target pass) with prefill
+        chunks riding the same span batch.  Synchronous by construction —
+        the next span's drafts depend on this dispatch's committed tokens,
+        so there is nothing to pipeline; the win is committing up to
+        ``K + 1`` tokens per target forward instead of one."""
+        tr = self.tracer
+        done0 = len(self.scheduler.completed)
+        t_run0 = time.perf_counter()
+        while not self.scheduler.drained():
+            pairs = [(s, r) for s, r in self.scheduler.active()
+                     if self._active[s]]
+            pairs, spec_len = self._plan_spec(pairs)
+            decode_tokens = int(spec_len.sum())
+            if tr and (self.queue or self._prefilling.any()):
+                with tr.phase(ev.PHASE_ADMIT):
+                    chunks = self._plan_chunks(pairs,
+                                               decode_tokens=decode_tokens)
+            else:
+                chunks = self._plan_chunks(pairs, decode_tokens=decode_tokens)
+            # chunk planning can itself preempt a spec-planned decode victim
+            # (just-in-time chunk allocation, newest-first): drop the
+            # victim's span so the budget counters never charge positions
+            # that will not dispatch and its registers stay frozen
+            live = {s for s, _ in pairs}
+            for s in np.nonzero(spec_len)[0]:
+                if int(s) not in live:
+                    spec_len[s] = 0
+            decode_tokens = int(spec_len.sum())
+            self.stats["peak_active"] = max(self.stats["peak_active"],
+                                            self.scheduler.occupancy())
+            self.stats["peak_blocks"] = max(self.stats["peak_blocks"],
+                                            self.pool.num_active())
+            if not pairs and not chunks:
+                if not self.scheduler.drained() and not self._preempted:
+                    if not self._relieve_stalled_prefill():
+                        raise RuntimeError(
+                            "serve loop stalled: nothing dispatchable but "
+                            "the scheduler is not drained")
+                self._drain_preempted()
+                continue
+
+            # ---- host drafts from each slot's committed context ----
+            kmax = self.spec_k_max
+            drafts_all = np.zeros((self.num_slots, kmax), np.int32)
+            q_all = None
+            k_ask = max((int(spec_len[s]) - 1 for s, _ in pairs), default=0)
+            if k_ask > 0:
+                slots_ = [s for s, _ in pairs]
+                dr, q = self.spec.propose(
+                    slots_, [r.input_ids() for _, r in pairs], k_ask)
+                drafts_all[slots_, :k_ask] = dr[:, :k_ask]
+                if q is not None and self.temperature > 0.0:
+                    # device-side scatter: q may be a device array straight
+                    # from the draft model's propose scan
+                    q_all = jnp.zeros(
+                        (self.num_slots, kmax, self.cfg.vocab_size),
+                        jnp.float32)
+                    q_all = q_all.at[
+                        jnp.asarray(slots_, jnp.int32), :k_ask].set(
+                        jnp.asarray(q, jnp.float32)[:, :k_ask])
+
+            # ---- one span dispatch, fetched synchronously ----
+            key, ck_tokens, ck_start, ck_len, ck_slot, ck_sample = \
+                self._prep_dispatch(chunks)
+            t_dispatch = _now_ns()
+            with (tr.phase(ev.PHASE_DECODE) if tr
+                  else contextlib.nullcontext()), \
+                    (tr.user_function(name="spec_step") if tr
+                     else contextlib.nullcontext()):
+                (self._caches, self._tok, self._idx, out_toks, n_acc,
+                 ck_tok), coll_ops = self._traced_call(
+                    "spec", self._spec_step,
+                    (self.params, self._caches, self._tok, self._idx,
+                     self._active_dev, self._tables_dev,
+                     self._dev(jnp.asarray(drafts_all)),
+                     None if q_all is None else self._dev(jnp.asarray(q_all)),
+                     self._dev(jnp.asarray(spec_len)),
+                     self._dev(jnp.asarray(ck_tokens)),
+                     self._dev(jnp.asarray(ck_start)),
+                     self._dev(jnp.asarray(ck_len)),
+                     self._dev(jnp.asarray(ck_slot)),
+                     self._dev(jnp.asarray(ck_sample)), key),
+                    {"chunk": bool(chunks)})
+                out, nacc, ck = jax.device_get((out_toks, n_acc, ck_tok))
+            self.stats["host_syncs"] += 1
+            self._replay(coll_ops, t_dispatch, _now_ns())
+            n_chunk = self._advance_chunks(chunks, t_dispatch)
+
+            # ---- commit accepted prefixes + correction/bonus tokens ----
+            drafted = accepted = 0
+            for slot, req in pairs:
+                if spec_len[slot] == 0:
+                    continue
+                m = int(nacc[slot]) + 1
+                drafted += int(spec_len[slot]) - 1
+                accepted += int(nacc[slot])
+                req.tokens.extend(int(t) for t in out[slot, :m])
+                req.scheduled = len(req.tokens)
+                self.stats["tokens_decoded"] += m
+                if len(req.tokens) >= req.max_new_tokens:
+                    self._finish(req)  # releases every block, garbage incl.
+                else:
+                    self._rollback_spec_blocks(slot, self._slot_pos(slot, req))
+            self._emit_chunk_tokens(chunks, ck)
+            self.stats["spec_dispatches"] += 1 if pairs else 0
+            self.stats["spec_drafted"] += drafted
+            self.stats["spec_accepted"] += accepted
+            if pairs:
+                self.stats["iterations"] += 1
+                self.stats["decode_syncs"] += 1
+            k_used = self._spec_k  # width actually in effect this dispatch
+            if drafted > 0:
+                self._accept_ema = (0.7 * self._accept_ema
+                                    + 0.3 * accepted / drafted)
+                if self.spec_adaptive:
+                    if self._accept_ema > 0.7:
+                        self._spec_k = min(self._spec_k + 1, self.spec_k_max)
+                    elif self._accept_ema < 0.35:
+                        self._spec_k = max(1, self._spec_k - 1)
+            self._since_flush += 1
+            if tr:
+                tr.emit(ev.EV_STEP_BUDGET, decode_tokens + n_chunk)
+                tr.emit(ev.EV_CHUNK_TOKENS, n_chunk)
+                tr.emit(ev.EV_DECODE_TOKENS, decode_tokens)
+                if pairs:
+                    tr.emit(ev.EV_SPEC_DRAFTED, drafted)
+                    tr.emit(ev.EV_SPEC_ACCEPTED, accepted)
+                    tr.emit(ev.EV_SPEC_K, k_used)
+                tr.emit(EV_TOKENS_DECODED, self.stats["tokens_decoded"])
+                tr.emit(ev.EV_TOKENS_TOTAL, self.stats["tokens_decoded"])
+                tr.emit(ev.EV_QUEUE_DEPTH, len(self.queue))
+                if self.flush_every and self._since_flush >= self.flush_every:
+                    tr.flush(self.flush_base,
+                             split_tasks=self.meshstate is not None)
+                    self._since_flush = 0
+            self._drain_preempted()
+        self.stats["seconds"] += time.perf_counter() - t_run0
+        return {r.rid: np.asarray(r.tokens, np.int32)
+                for r in self.scheduler.completed[done0:]}
+
     # ------------------------------------------------------------------
     # serving loop
     # ------------------------------------------------------------------
@@ -419,6 +763,8 @@ class UnifiedServeEngine(ContinuousServeEngine):
         the first iteration — set ``mixed_burst=1`` for strict
         one-iteration budget accounting).  Returns {rid: [new_tokens]} for
         requests completed by THIS call."""
+        if self.spec is not None:
+            return self._run_spec()
         tr = self.tracer
         done0 = len(self.scheduler.completed)
         pending = None

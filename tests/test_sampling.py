@@ -1,0 +1,223 @@
+"""Unit tests for core/sampling: top-k / top-p filtering and the
+speculative propose/accept primitives."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.sampling import (
+    filter_logits, sample_logits, spec_accept, target_log_probs,
+)
+
+V = 16
+
+
+def _logits(shape=(4,), seed=0, vocab=V, pad=3):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.standard_normal(shape + (vocab + pad,)), jnp.float32)
+
+
+# ----------------------------------------------------------------------
+# sample_logits
+# ----------------------------------------------------------------------
+def test_greedy_equals_temperature_zero_and_ignores_filters():
+    """The satellite pin: greedy == temperature-0, and the top-k/top-p
+    filters never change the argmax path."""
+    lg = _logits((8,), seed=1)
+    key = jax.random.PRNGKey(0)
+    base = sample_logits(lg, key, 0.0, V)
+    np.testing.assert_array_equal(base, jnp.argmax(lg[..., :V], -1))
+    for tk, tp in ((0, 1.0), (3, 1.0), (0, 0.5), (2, 0.3)):
+        np.testing.assert_array_equal(
+            base, sample_logits(lg, key, 0.0, V, top_k=tk, top_p=tp))
+        np.testing.assert_array_equal(
+            base, sample_logits(lg, key, -1.0, V, top_k=tk, top_p=tp))
+
+
+def test_top_k_one_is_argmax_at_any_temperature():
+    lg = _logits((6,), seed=2)
+    for t in (0.1, 1.0, 4.0):
+        out = sample_logits(lg, jax.random.PRNGKey(3), t, V, top_k=1)
+        np.testing.assert_array_equal(out, jnp.argmax(lg[..., :V], -1))
+
+
+def test_tiny_top_p_is_argmax():
+    lg = _logits((6,), seed=3)
+    out = sample_logits(lg, jax.random.PRNGKey(4), 1.5, V, top_p=1e-6)
+    np.testing.assert_array_equal(out, jnp.argmax(lg[..., :V], -1))
+
+
+def test_top_k_samples_stay_in_top_k_set():
+    lg = _logits((1,), seed=4)
+    k = 4
+    topk = set(np.asarray(jax.lax.top_k(lg[0, :V], k)[1]).tolist())
+    for i in range(64):
+        tok = int(sample_logits(lg, jax.random.PRNGKey(i), 1.0, V, top_k=k)[0])
+        assert tok in topk
+
+
+def test_top_p_mass_threshold():
+    """Filtered support is the smallest prefix of the sorted distribution
+    with exclusive cumulative mass < p (the head is always kept)."""
+    lg = _logits((1,), seed=5)
+    p = 0.6
+    kept = filter_logits(lg[..., :V], top_p=p) > -1e37
+    probs = np.asarray(jax.nn.softmax(lg[0, :V]))
+    order = np.argsort(probs)[::-1]
+    expect = np.zeros(V, bool)
+    acc = 0.0
+    for i in order:
+        expect[i] = True
+        acc += probs[i]
+        if acc >= p:
+            break
+    np.testing.assert_array_equal(np.asarray(kept[0]), expect)
+
+
+def test_target_log_probs_normalized_over_filtered_support():
+    lg = _logits((3,), seed=6)
+    logp = target_log_probs(lg, 0.7, V, top_k=5, top_p=0.9)
+    p = np.exp(np.asarray(logp))
+    np.testing.assert_allclose(p.sum(-1), 1.0, rtol=1e-5)
+    assert (np.sort(p, axis=-1)[:, : V - 5] < 1e-12).all()  # <= top_k alive
+
+
+# ----------------------------------------------------------------------
+# spec_accept
+# ----------------------------------------------------------------------
+def _span_logits(rows):
+    """Build [B, K+1, V] logits whose argmax chain is ``rows`` (a list of
+    K+1 token ids per batch row)."""
+    b, k1 = len(rows), len(rows[0])
+    lg = np.zeros((b, k1, V), np.float32)
+    for i, chain in enumerate(rows):
+        for j, t in enumerate(chain):
+            lg[i, j, t] = 5.0
+    return jnp.asarray(lg)
+
+
+def test_spec_accept_greedy_longest_prefix():
+    # target chains: row 0 accepts both drafts, row 1 rejects at j=1,
+    # row 2 rejects immediately, row 3 is inactive (draft_len 0)
+    lg = _span_logits([[3, 4, 5], [3, 9, 5], [7, 1, 2], [0, 0, 0]])
+    drafts = jnp.asarray([[3, 4], [3, 4], [3, 4], [3, 4]], jnp.int32)
+    draft_len = jnp.asarray([2, 2, 2, 0], jnp.int32)
+    out, n_acc = spec_accept(lg, drafts, draft_len, None,
+                             jax.random.PRNGKey(0), 0.0, V)
+    np.testing.assert_array_equal(n_acc, [2, 1, 0, 0])
+    # committed tokens = accepted drafts + the correction/bonus target token
+    np.testing.assert_array_equal(np.asarray(out[0, :3]), [3, 4, 5])
+    np.testing.assert_array_equal(np.asarray(out[1, :2]), [3, 9])
+    np.testing.assert_array_equal(np.asarray(out[2, :1]), [7])
+
+
+def test_spec_accept_greedy_matches_sequential_argmax():
+    """For ANY logits, committing the accepted prefix + correction must
+    reproduce the sequential argmax chain truncated at the first draft
+    mismatch — the bit-identity lemma in miniature."""
+    rng = np.random.default_rng(9)
+    lg = jnp.asarray(rng.standard_normal((5, 4, V)), jnp.float32)
+    drafts = jnp.asarray(rng.integers(0, V, (5, 3)), jnp.int32)
+    draft_len = jnp.asarray([3, 3, 2, 1, 0], jnp.int32)
+    out, n_acc = spec_accept(lg, drafts, draft_len, None,
+                             jax.random.PRNGKey(0), 0.0, V)
+    tgt = np.asarray(jnp.argmax(lg, -1))
+    for b in range(5):
+        m = int(n_acc[b])
+        k_eff = int(draft_len[b])
+        assert m <= k_eff
+        for j in range(m):
+            assert int(drafts[b, j]) == tgt[b, j]  # accepted == target chain
+        if m < k_eff:
+            assert int(drafts[b, m]) != tgt[b, m]  # first rejection is real
+        np.testing.assert_array_equal(np.asarray(out[b, : m + 1]),
+                                      tgt[b, : m + 1])
+
+
+def test_spec_accept_certain_target_accepts_all():
+    """When the target distribution is (numerically) a point mass on the
+    drafts, rejection sampling must accept everything and the bonus token
+    must follow the chain."""
+    chain = [[2, 6, 9], [1, 3, 8]]
+    lg = _span_logits(chain) * 8.0  # ~certain after softmax
+    drafts = jnp.asarray([r[:2] for r in chain], jnp.int32)
+    draft_len = jnp.asarray([2, 2], jnp.int32)
+    out, n_acc = spec_accept(lg, drafts, draft_len, None,
+                             jax.random.PRNGKey(1), 0.8, V)
+    np.testing.assert_array_equal(n_acc, [2, 2])
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(chain))
+
+
+def test_spec_accept_sampling_reproducible_and_key_sensitive():
+    rng = np.random.default_rng(10)
+    lg = jnp.asarray(rng.standard_normal((4, 4, V)), jnp.float32)
+    drafts = jnp.asarray(rng.integers(0, V, (4, 3)), jnp.int32)
+    draft_len = jnp.full((4,), 3, jnp.int32)
+    q = jax.nn.softmax(jnp.asarray(rng.standard_normal((4, 3, V)),
+                                   jnp.float32), axis=-1)
+    a1 = spec_accept(lg, drafts, draft_len, q, jax.random.PRNGKey(5), 1.0, V)
+    a2 = spec_accept(lg, drafts, draft_len, q, jax.random.PRNGKey(5), 1.0, V)
+    np.testing.assert_array_equal(a1[0], a2[0])
+    np.testing.assert_array_equal(a1[1], a2[1])
+    outs = {tuple(np.asarray(
+        spec_accept(lg, drafts, draft_len, q, jax.random.PRNGKey(s), 1.0, V
+                    )[0]).ravel().tolist()) for s in range(8)}
+    assert len(outs) > 1  # keys actually steer the acceptance/resample
+
+
+def test_spec_accept_rejection_preserves_target_distribution():
+    """One draft position, point-mass proposal: over many keys, the
+    committed first token's empirical distribution must match the target
+    distribution (Leviathan's guarantee), not the proposal's."""
+    probs = np.array([0.5, 0.3, 0.2] + [0.0] * (V - 3))
+    lg = jnp.log(jnp.asarray(probs + 1e-12, jnp.float32))[None, None, :]
+    lg = jnp.tile(lg, (1, 2, 1))  # [1, K+1=2, V]
+    drafts = jnp.asarray([[1]], jnp.int32)  # draft the 0.3 token
+    draft_len = jnp.asarray([1], jnp.int32)
+    counts = np.zeros(V)
+    n = 400
+    for s in range(n):
+        out, n_acc = spec_accept(lg, drafts, draft_len, None,
+                                 jax.random.PRNGKey(s), 1.0, V)
+        counts[int(out[0, 0])] += 1
+    emp = counts / n
+    np.testing.assert_allclose(emp[:3], probs[:3], atol=0.08)
+
+
+def test_spec_accept_bonus_after_short_fully_accepted_span_is_plain_p():
+    """A ragged row (draft_len < K) whose drafts are ALL accepted samples
+    its bonus token from plain p — position n_acc == draft_len was never
+    accept-tested, so no residual subtraction applies there (regression:
+    the padded q used to zero out the pad-token's mass at the bonus
+    position, skewing the committed distribution)."""
+    probs = np.full(V, 0.0)
+    probs[:8] = 1.0 / 8  # uniform target over 8 tokens (incl. token 0)
+    lg = jnp.tile(jnp.log(jnp.asarray(probs + 1e-12, jnp.float32))[None, None],
+                  (1, 4, 1))  # K+1 = 4 span positions, same dist everywhere
+    # draft token 3 at the single real position: accepted w.p. p(3) = 1/8;
+    # run until we hit an all-accepted span, then check the bonus token
+    drafts = jnp.asarray([[3, 0, 0]], jnp.int32)  # cols >= draft_len are pad
+    draft_len = jnp.asarray([1], jnp.int32)
+    counts = np.zeros(V)
+    n_bonus = 0
+    for s in range(1200):
+        out, n_acc = spec_accept(lg, drafts, draft_len, None,
+                                 jax.random.PRNGKey(s), 1.0, V)
+        if int(n_acc[0]) == 1:  # fully accepted: out[0, 1] is the bonus
+            counts[int(out[0, 1])] += 1
+            n_bonus += 1
+    assert n_bonus > 60
+    emp = counts / n_bonus
+    # token 0 (the pad id) must keep its full 1/8 mass at the bonus position
+    np.testing.assert_allclose(emp[:8], probs[:8], atol=0.09)
+
+
+@pytest.mark.parametrize("temperature", [0.0, 0.9])
+def test_spec_accept_inactive_rows_commit_nothing_meaningful(temperature):
+    lg = _logits((2, 4), seed=11)
+    drafts = jnp.zeros((2, 3), jnp.int32)
+    out, n_acc = spec_accept(lg, drafts, jnp.zeros((2,), jnp.int32), None,
+                             jax.random.PRNGKey(0), temperature, V)
+    np.testing.assert_array_equal(n_acc, [0, 0])  # nothing accepted

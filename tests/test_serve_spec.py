@@ -1,0 +1,351 @@
+"""Speculative decoding through the unified serve step.
+
+The contract under test: greedy spec decode (n-gram OR draft-model
+proposer) is BIT-IDENTICAL to the non-spec unified engine — the
+equivalence oracle — across full/SWA/GQA/MoE configs; rejected drafts are
+provably inert (rewind test: heavy rejection + rollback, pool conserved);
+the EV_SPEC_DRAFTED/ACCEPTED/K counter triple survives the segment merge
+with DRAFTED >= ACCEPTED per dispatch; temperature>0 runs are same-seed
+reproducible; and mp=2 spec decode matches single-device bit-for-bit."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import events as ev
+from repro.models.model import build_model
+from repro.serve.spec import DraftModelProposer, NGramProposer, make_proposer
+from repro.serve.step import UnifiedServeEngine
+
+_CACHE = {}
+
+
+def _setup(arch, **kw):
+    key = (arch, tuple(sorted(kw.items())))
+    if key not in _CACHE:
+        cfg = reduced(get_config(arch), num_layers=2, **kw)
+        model = build_model(cfg)
+        _CACHE[key] = (cfg, model.init(jax.random.PRNGKey(0)))
+    return _CACHE[key]
+
+
+def _prompts(cfg, lens, seed=0, motif=None):
+    rng = np.random.default_rng(seed)
+    out = []
+    for i, length in enumerate(lens):
+        if motif is not None and i % 2 == 0:
+            m = rng.integers(0, cfg.vocab_size, (motif,)).astype(np.int32)
+            out.append(np.tile(m, -(-length // motif))[:length])
+        else:
+            out.append(rng.integers(0, cfg.vocab_size, (length,))
+                       .astype(np.int32))
+    return out
+
+
+# ----------------------------------------------------------------------
+# oracle equivalence: greedy spec == non-spec unified, bit for bit
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("arch,kw,what", [
+    ("granite-8b", {}, "full attention + GQA"),
+    ("granite-8b", {"attention_window": 12}, "dense + SWA"),
+    ("yi-9b", {}, "full attention + GQA 4:1"),
+    ("mixtral-8x22b", {}, "SWA + GQA + MoE"),
+])
+def test_spec_ngram_matches_unified_oracle(arch, kw, what):
+    """Repetitive AND random prompts (acceptances and rejections both
+    exercised), lengths crossing chunk/block boundaries."""
+    cfg, params = _setup(arch, **kw)
+    prompts = _prompts(cfg, [24, 7, 17, 30], seed=2, motif=6)
+    ref = UnifiedServeEngine(cfg, params, num_slots=2, max_len=64,
+                             block_size=16, chunk_size=8)
+    rr = [ref.submit(p, 10) for p in prompts]
+    out_ref = ref.run()
+    eng = UnifiedServeEngine(cfg, params, num_slots=2, max_len=64,
+                             block_size=16, chunk_size=8,
+                             spec=NGramProposer(), spec_k=4)
+    rs = [eng.submit(p, 10) for p in prompts]
+    out = eng.run()
+    for a, b in zip(rr, rs):
+        np.testing.assert_array_equal(out_ref[a.rid], out[b.rid], err_msg=what)
+    assert eng.stats["spec_dispatches"] > 0
+    assert eng.stats["spec_drafted"] >= eng.stats["spec_accepted"] >= 0
+
+
+def test_spec_draft_model_matches_unified_oracle():
+    """Draft-model proposer: a 1-layer cut-down config sharing the vocab.
+    Random weights mean near-zero acceptance — the correctness claim is
+    exactly that rejected drafts change nothing."""
+    cfg, params = _setup("granite-8b")
+    dcfg = reduced(get_config("granite-8b"),
+                   num_layers=1).replace(vocab_size=cfg.vocab_size)
+    dparams = build_model(dcfg).init(jax.random.PRNGKey(7))
+    prompts = _prompts(cfg, [7, 18, 25], seed=3)
+    ref = UnifiedServeEngine(cfg, params, num_slots=2, max_len=64,
+                             block_size=16, chunk_size=8)
+    rr = [ref.submit(p, 10) for p in prompts]
+    out_ref = ref.run()
+    prop = DraftModelProposer(dcfg, dparams, num_slots=2, max_len=64)
+    eng = UnifiedServeEngine(cfg, params, num_slots=2, max_len=64,
+                             block_size=16, chunk_size=8, spec=prop, spec_k=3)
+    rs = [eng.submit(p, 10) for p in prompts]
+    out = eng.run()
+    for a, b in zip(rr, rs):
+        np.testing.assert_array_equal(out_ref[a.rid], out[b.rid])
+
+
+def test_spec_self_draft_accepts_everything():
+    """Drafting with the TARGET's own weights must accept every draft
+    (the proposer IS the verifier) — the positive control for the
+    draft-model catch-up/rewind machinery: any cache-desync between
+    proposals would break the all-accept property."""
+    cfg, params = _setup("granite-8b")
+    prop = DraftModelProposer(cfg, params, num_slots=2, max_len=64)
+    eng = UnifiedServeEngine(cfg, params, num_slots=2, max_len=64,
+                             block_size=16, chunk_size=8, spec=prop, spec_k=4)
+    prompts = _prompts(cfg, [9, 22], seed=4)
+    rs = [eng.submit(p, 12) for p in prompts]
+    out = eng.run()
+    assert all(len(out[r.rid]) == 12 for r in rs)
+    assert eng.stats["spec_drafted"] > 0
+    assert eng.stats["spec_accepted"] == eng.stats["spec_drafted"]
+    ref = UnifiedServeEngine(cfg, params, num_slots=2, max_len=64,
+                             block_size=16, chunk_size=8)
+    rr = [ref.submit(p, 12) for p in prompts]
+    out_ref = ref.run()
+    for a, b in zip(rr, rs):
+        np.testing.assert_array_equal(out_ref[a.rid], out[b.rid])
+
+
+# ----------------------------------------------------------------------
+# rewind: rejected drafts are inert, rolled-back blocks conserved
+# ----------------------------------------------------------------------
+def test_rejected_drafts_rewind_and_pool_conserved():
+    """Tight pool + wide spans + near-total rejection: blocks allocated
+    for rejected draft positions must roll back (the pool never charges
+    speculation against the committed frontier), outputs stay bit-exact,
+    and FREE/ACTIVE/CACHED conservation holds after drain."""
+    cfg, params = _setup("granite-8b")
+    ref = UnifiedServeEngine(cfg, params, num_slots=2, max_len=40,
+                             block_size=8, chunk_size=8)
+    prompts = _prompts(cfg, [9, 12], seed=5)
+    rr = [ref.submit(p, 16) for p in prompts]
+    out_ref = ref.run()
+    eng = UnifiedServeEngine(cfg, params, num_slots=2, max_len=40,
+                             block_size=8, num_blocks=12, chunk_size=8,
+                             spec=NGramProposer(), spec_k=8,
+                             max_step_tokens=40)
+    rs = [eng.submit(p, 16) for p in prompts]
+    out = eng.run()
+    for a, b in zip(rr, rs):
+        np.testing.assert_array_equal(out_ref[a.rid], out[b.rid])
+    assert eng.stats["spec_rollback_blocks"] > 0, \
+        "wide rejected spans never rolled a block back"
+    eng.pool.check_invariants()
+    assert eng.pool.num_active() == 0
+
+
+def test_spec_decode_victim_preempted_by_chunk_planning():
+    """Chunk planning runs AFTER span planning and can preempt a
+    spec-planned decode victim (just-in-time chunk allocation, newest
+    first): the victim's span must be dropped — budget counters never
+    charge positions that did not dispatch, registers stay frozen — and
+    every request still matches its uncontended solo run bit-for-bit."""
+    from repro import core as xtrace
+
+    cfg, params = _setup("granite-8b")
+    tracer = xtrace.init("serve-spec-preempt")
+    eng = UnifiedServeEngine(cfg, params, num_slots=2, max_len=40,
+                             block_size=8, num_blocks=7, chunk_size=8,
+                             chunk_rows=1, spec=NGramProposer(), spec_k=6,
+                             max_step_tokens=40, tracer=tracer)
+    prompts = _prompts(cfg, [16, 16], seed=8)
+    gens = [24, 8]
+    reqs = [eng.submit(p, g) for p, g in zip(prompts, gens)]
+    out = eng.run()
+    trace = tracer.finish()
+    assert eng.stats["preemptions"] > 0
+    evs = trace.events
+    tri = {code: evs[evs["type"] == code]["value"]
+           for code in (ev.EV_STEP_BUDGET, ev.EV_CHUNK_TOKENS,
+                        ev.EV_DECODE_TOKENS)}
+    np.testing.assert_array_equal(
+        tri[ev.EV_STEP_BUDGET],
+        tri[ev.EV_CHUNK_TOKENS] + tri[ev.EV_DECODE_TOKENS])
+    assert (np.asarray(tri[ev.EV_STEP_BUDGET]) <= eng.max_step_tokens).all()
+    for r, p, g in zip(reqs, prompts, gens):
+        assert len(out[r.rid]) == g
+        solo = UnifiedServeEngine(cfg, params, num_slots=1, max_len=40,
+                                  block_size=8, chunk_size=8,
+                                  spec=NGramProposer(), spec_k=6)
+        s = solo.submit(p, g)
+        np.testing.assert_array_equal(out[r.rid], solo.run()[s.rid],
+                                      err_msg=f"req {r.rid}")
+    eng.pool.check_invariants()
+    assert eng.pool.num_active() == 0
+
+
+def test_spec_adaptive_k_shrinks_under_rejection():
+    """Random prompts reject nearly everything: the acceptance-rate EMA
+    must walk K down to 1, and outputs must still match the oracle."""
+    cfg, params = _setup("granite-8b")
+    prompts = _prompts(cfg, [16, 11], seed=6)
+    ref = UnifiedServeEngine(cfg, params, num_slots=2, max_len=64,
+                             block_size=16, chunk_size=8)
+    rr = [ref.submit(p, 24) for p in prompts]
+    out_ref = ref.run()
+    eng = UnifiedServeEngine(cfg, params, num_slots=2, max_len=64,
+                             block_size=16, chunk_size=8,
+                             spec=NGramProposer(), spec_k=6,
+                             spec_adaptive=True, max_step_tokens=64)
+    rs = [eng.submit(p, 24) for p in prompts]
+    out = eng.run()
+    for a, b in zip(rr, rs):
+        np.testing.assert_array_equal(out_ref[a.rid], out[b.rid])
+    assert eng._spec_k == 1, f"K stayed at {eng._spec_k} under total rejection"
+
+
+# ----------------------------------------------------------------------
+# trace counters: the draft economy survives the segment merge
+# ----------------------------------------------------------------------
+def test_spec_counters_per_dispatch_in_merged_prv(tmp_path):
+    from repro import core as xtrace
+
+    cfg, params = _setup("granite-8b")
+    tracer = xtrace.init("serve-spec-counters")
+    eng = UnifiedServeEngine(cfg, params, num_slots=2, max_len=64,
+                             block_size=16, chunk_size=8,
+                             spec=NGramProposer(), spec_k=4, tracer=tracer,
+                             flush_every=4, flush_base=tmp_path / "spec")
+    for p in _prompts(cfg, [24, 15, 9], seed=7, motif=6):
+        eng.submit(p, 12)
+    eng.run()
+    segments = list(tracer.segments)
+    trace = xtrace.finish()
+    assert segments, "flush cadence never fired"
+    paths = xtrace.write_prv(trace, tmp_path / "spec", segments=segments)
+    merged = xtrace.parse_prv(paths["prv"])
+    evs = merged.events
+    by = {code: evs[evs["type"] == code]["value"]
+          for code in (ev.EV_SPEC_DRAFTED, ev.EV_SPEC_ACCEPTED, ev.EV_SPEC_K)}
+    n = len(by[ev.EV_SPEC_DRAFTED])
+    assert n == eng.stats["spec_dispatches"] > 0
+    assert all(len(v) == n for v in by.values())
+    drafted = np.asarray(by[ev.EV_SPEC_DRAFTED], np.int64)
+    accepted = np.asarray(by[ev.EV_SPEC_ACCEPTED], np.int64)
+    rejected = drafted - accepted
+    # the tentpole invariant, per dispatch, off the MERGED .prv
+    assert (rejected >= 0).all() and (drafted == accepted + rejected).all()
+    assert int(drafted.sum()) == eng.stats["spec_drafted"]
+    assert int(accepted.sum()) == eng.stats["spec_accepted"]
+    assert (np.asarray(by[ev.EV_SPEC_K]) >= 1).all()
+    # the budget triple still holds in spec mode: draft+verify positions
+    # are charged as decode tokens
+    tri = {code: evs[evs["type"] == code]["value"]
+           for code in (ev.EV_STEP_BUDGET, ev.EV_CHUNK_TOKENS,
+                        ev.EV_DECODE_TOKENS)}
+    np.testing.assert_array_equal(
+        tri[ev.EV_STEP_BUDGET],
+        tri[ev.EV_CHUNK_TOKENS] + tri[ev.EV_DECODE_TOKENS])
+    assert (np.asarray(tri[ev.EV_STEP_BUDGET])
+            <= eng.max_step_tokens).all()
+
+
+# ----------------------------------------------------------------------
+# temperature > 0: rejection sampling, reproducible per seed
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("make", ["ngram", "draft"])
+def test_spec_sampling_same_seed_reproducible(make):
+    cfg, params = _setup("granite-8b")
+    dcfg = reduced(get_config("granite-8b"),
+                   num_layers=1).replace(vocab_size=cfg.vocab_size)
+    dparams = build_model(dcfg).init(jax.random.PRNGKey(7))
+
+    def proposer():
+        if make == "ngram":
+            return NGramProposer()
+        return DraftModelProposer(dcfg, dparams, num_slots=2, max_len=64,
+                                  temperature=0.8, top_p=0.9, seed=11)
+
+    prompts = _prompts(cfg, [9, 20], seed=8, motif=5)
+    waves = []
+    for _ in range(2):
+        eng = UnifiedServeEngine(cfg, params, num_slots=2, max_len=64,
+                                 block_size=16, chunk_size=8, spec=proposer(),
+                                 spec_k=3, temperature=0.8, top_p=0.9,
+                                 seed=11)
+        rs = [eng.submit(p, 10) for p in prompts]
+        out = eng.run()
+        waves.append([out[r.rid] for r in rs])
+    for a, b in zip(*waves):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_make_proposer_factory():
+    cfg, _ = _setup("granite-8b")
+    assert isinstance(make_proposer("ngram", cfg, num_slots=2, max_len=32),
+                      NGramProposer)
+    prop = make_proposer("draft:granite-8b", cfg, num_slots=2, max_len=32)
+    assert isinstance(prop, DraftModelProposer)
+    assert prop.cfg.vocab_size == cfg.vocab_size
+    with pytest.raises(ValueError, match="unknown --spec"):
+        make_proposer("nope", cfg, num_slots=2, max_len=32)
+
+
+def test_spec_rejects_state_carrying_families():
+    cfg, params = _setup("recurrentgemma-9b")
+    with pytest.raises(ValueError, match="speculative"):
+        UnifiedServeEngine(cfg, params, num_slots=2, max_len=48,
+                           spec=NGramProposer())
+
+
+# ----------------------------------------------------------------------
+# mp=2: spec decode over the mesh, bit-identical to single-device
+# ----------------------------------------------------------------------
+MP_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import jax, numpy as np
+    from repro.compat import make_mesh
+    from repro.configs import get_config, reduced
+    from repro.models.model import build_model
+    from repro.serve.spec import NGramProposer
+    from repro.serve.step import UnifiedServeEngine
+
+    mesh = make_mesh((1, 2), ("data", "model"))
+    cfg = reduced(get_config("granite-8b"), num_layers=2, num_kv_heads=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    motif = rng.integers(0, cfg.vocab_size, (6,)).astype(np.int32)
+    prompts = [np.tile(motif, 4), rng.integers(
+        0, cfg.vocab_size, (17,)).astype(np.int32)]
+
+    ref = UnifiedServeEngine(cfg, params, num_slots=2, max_len=64,
+                             block_size=16, chunk_size=8,
+                             spec=NGramProposer(), spec_k=4)
+    rr = [ref.submit(p, 10) for p in prompts]
+    out_ref = ref.run()
+    eng = UnifiedServeEngine(cfg, params, num_slots=2, max_len=64,
+                             block_size=16, chunk_size=8,
+                             spec=NGramProposer(), spec_k=4, mesh=mesh)
+    rs = [eng.submit(p, 10) for p in prompts]
+    out = eng.run()
+    for a, b in zip(rr, rs):
+        np.testing.assert_array_equal(out_ref[a.rid], out[b.rid])
+    print("OK spec-mp2")
+""")
+
+
+def test_spec_mp_bit_identical():
+    r = subprocess.run(
+        [sys.executable, "-c", MP_SCRIPT], capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": "src"}, cwd="/root/repo", timeout=560)
+    assert r.returncode == 0, (r.stdout + r.stderr)[-3000:]
+    assert "OK spec-mp2" in r.stdout
