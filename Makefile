@@ -1,6 +1,6 @@
 PYTHONPATH := src
 
-.PHONY: smoke test bench serve-bench property lint
+.PHONY: smoke test bench serve-bench property kernel lint
 
 # fail-fast wiring that catches API drift (e.g. cost_analysis format
 # changes) at collection/first-failure time
@@ -22,6 +22,15 @@ serve-bench:
 	PYTHONPATH=$(PYTHONPATH) python -m repro.launch.serve --mode unified \
 		--spec ngram --spec-k 4 --requests 4 --slots 2 \
 		--prompt-len 24 --gen 12
+
+# kernel suite with the Pallas path FORCED (interpret mode on CPU) so the
+# kernels stay load-bearing even where auto dispatch would pick XLA; the
+# engine-level tests in test_kernels_attention.py then cross the dispatch
+# boundary both ways (docs/kernels.md)
+kernel:
+	REPRO_KERNEL_MODE=pallas PYTHONPATH=$(PYTHONPATH) python -m pytest -q \
+		tests/test_kernels_flash.py tests/test_kernels_paged.py
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -q tests/test_kernels_attention.py
 
 # hypothesis property layer as its own loud-failure job (a missing
 # hypothesis install must not silently skip it; see tests/test_property.py)

@@ -24,11 +24,19 @@ the perf trajectory is tracked across PRs):
      count, outputs asserted bit-identical;
   6. sharded: the mesh-parallel engine at mp=1 vs mp=2 on FORCED CPU
      devices (tok/s + host-syncs/iter; run in a subprocess so the forced
-     device count cannot leak into this process's backend).
+     device count cannot leak into this process's backend);
+  7. kernels: the attention dispatch boundary end-to-end — the same wave
+     served under ``kernel_mode=pallas`` (interpret mode on CPU) and
+     ``kernel_mode=xla``, outputs asserted identical; plus the autotune
+     cache cold-search vs warm-reload round trip.
 
 Run as ``__main__`` the script also gates on ``BENCH_baseline.json``
 (committed): a >15% regression of ``seed_vs_paged.speedup`` or
-``speculative.speedup`` fails CI.
+``speculative.speedup`` fails CI, as do a pallas-vs-xla output mismatch,
+a cold autotune warm-reload miss, or the pallas/xla throughput ratio
+falling below half its baseline (the kernel gate is deliberately loose on
+CPU, where pallas runs under interpret-mode emulation — on TPU the same
+gate tracks real kernel throughput).
 
     PYTHONPATH=src python -m benchmarks.run        # all sections
     PYTHONPATH=src python benchmarks/bench_serve.py
@@ -440,6 +448,81 @@ def _bench_sharded(results):
                f"iteration (2 forced CPU devices)")
 
 
+def _bench_kernels(cfg, model, params, results):
+    """Section 7: pallas-vs-xla dispatch on a served wave + autotune cache."""
+    import tempfile
+
+    from repro.kernels.attention import autotune
+    from repro.serve.engine import ContinuousServeEngine
+
+    gen, n_req = 16, 4
+    prompts = np.random.default_rng(5).integers(
+        0, cfg.vocab_size, (n_req, PROMPT)).astype(np.int32)
+    runs, outs = {}, {}
+    for mode in ("xla", "pallas"):
+        eng = ContinuousServeEngine(cfg.replace(kernel_mode=mode), params,
+                                    num_slots=n_req, max_len=PROMPT + gen,
+                                    block_size=16,
+                                    max_prefills_per_iter=n_req)
+        outs[mode] = eng.serve_batch(prompts, num_tokens=gen)  # warmup
+        best = float("inf")
+        for _ in range(3):
+            t0 = time.perf_counter()
+            out = eng.serve_batch(prompts, num_tokens=gen)
+            best = min(best, time.perf_counter() - t0)
+        assert np.array_equal(out, outs[mode])
+        runs[mode] = {"tok_per_s": n_req * gen / best,
+                      "dispatch": dict(eng.stats["kernel_dispatch"])}
+    bit_identical = bool(np.array_equal(outs["pallas"], outs["xla"]))
+
+    # autotune: cold search (compile + time every candidate), drop the
+    # in-process memo, then reload from the private disk cache
+    kw = dict(head_dim=cfg.head_dim, kv_heads=cfg.num_kv_heads,
+              block_size=16, window=cfg.attention_window, dtype=cfg.dtype,
+              platform=jax.default_backend())
+    saved = {k: os.environ.get(k)
+             for k in (autotune.CACHE_ENV, autotune.SEARCH_ENV)}
+    with tempfile.TemporaryDirectory() as td:
+        os.environ[autotune.CACHE_ENV] = str(pathlib.Path(td) / "tune.json")
+        os.environ[autotune.SEARCH_ENV] = "search"
+        try:
+            autotune.clear_memory()
+            t0 = time.perf_counter()
+            cold = autotune.params_for("paged_span", **kw)
+            dt_cold = time.perf_counter() - t0
+            autotune.clear_memory()  # simulate a fresh process: disk only
+            t0 = time.perf_counter()
+            warm = autotune.params_for("paged_span", **kw)
+            dt_warm = time.perf_counter() - t0
+        finally:
+            autotune.clear_memory()
+            for k, v in saved.items():
+                if v is None:
+                    os.environ.pop(k, None)
+                else:
+                    os.environ[k] = v
+    warm_hit = bool(warm == cold and dt_warm < dt_cold)
+
+    results["kernels"] = {
+        "tok_per_s_xla": runs["xla"]["tok_per_s"],
+        "tok_per_s_pallas": runs["pallas"]["tok_per_s"],
+        "pallas_to_xla_ratio":
+            runs["pallas"]["tok_per_s"] / runs["xla"]["tok_per_s"],
+        "bit_identical": bit_identical,
+        "dispatch_pallas": runs["pallas"]["dispatch"],
+        "autotune": {"cold_s": dt_cold, "warm_s": dt_warm,
+                     "warm_hit": warm_hit, "params": cold},
+    }
+    yield (f"serve_kernel_xla,,{runs['xla']['tok_per_s']:.0f} tok/s "
+           f"(gather path)")
+    yield (f"serve_kernel_pallas,,{runs['pallas']['tok_per_s']:.0f} tok/s "
+           f"(interpret mode off-TPU); dispatches "
+           f"{runs['pallas']['dispatch']}; bit-identical={bit_identical}")
+    yield (f"serve_kernel_autotune,,cold search {dt_cold * 1e3:.0f} ms -> "
+           f"warm reload {dt_warm * 1e3:.1f} ms (hit={warm_hit}, "
+           f"params={cold})")
+
+
 def check_regression(results) -> int:
     """Compare against the committed baseline; nonzero = CI failure."""
     if results.get("sharded", {}).get("failed"):
@@ -465,6 +548,27 @@ def check_regression(results) -> int:
         else:
             print(f"regression gate: {label} {got:.2f} >= floor "
                   f"{floor:.2f} OK")
+    if "kernels" in base:
+        k = results.get("kernels", {})
+        if not k.get("bit_identical"):
+            print("REGRESSION: kernels.bit_identical — pallas dispatch "
+                  "changed served tokens")
+            rc = 1
+        if not k.get("autotune", {}).get("warm_hit"):
+            print("REGRESSION: kernels.autotune.warm_hit — persisted "
+                  "search result was not reloaded")
+            rc = 1
+        # loose ratio floor: interpret-mode emulation off-TPU, so only a
+        # halving of the pallas/xla ratio (dispatch-overhead blowup) fails
+        floor = base["kernels"]["pallas_to_xla_ratio"] * 0.5
+        got = k.get("pallas_to_xla_ratio", 0.0)
+        if got < floor:
+            print(f"REGRESSION: kernels.pallas_to_xla_ratio {got:.3f} < "
+                  f"floor {floor:.3f}")
+            rc = 1
+        else:
+            print(f"regression gate: kernels.pallas_to_xla_ratio "
+                  f"{got:.3f} >= floor {floor:.3f} OK")
     return rc
 
 
@@ -485,6 +589,7 @@ def bench(results: dict | None = None):
     yield from _bench_mixed_load(cfg, model, params, results)
     yield from _bench_speculative(cfg, model, params, results)
     yield from _bench_sharded(results)
+    yield from _bench_kernels(cfg, model, params, results)
     JSON_PATH.write_text(json.dumps(results, indent=2) + "\n")
     yield f"serve_bench_json,,{JSON_PATH.name} written"
 

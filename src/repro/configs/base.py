@@ -81,14 +81,36 @@ class ModelConfig:
     remat: str = "full"  # none | dots | full
     attn_block_kv: int = 0  # 0 = naive attention; >0 = online-softmax KV blocking
     seq_shard_residual: bool = False  # Megatron-style sequence-sharded residuals
-    use_flash_kernel: bool = False  # Pallas flash-attention kernel (TPU target)
-    use_paged_kernel: bool = False  # Pallas paged-decode kernel (TPU target);
-                                    # default is the gather-based jnp path
+    # ONE knob for the attention-kernel family (kernels/attention/):
+    #   auto   - Pallas wherever shape/dtype allow on TPU, XLA elsewhere
+    #   pallas - force the Pallas kernels (interpret mode off-TPU)
+    #   xla    - always the gather/SDPA jnp path
+    # REPRO_KERNEL_MODE overrides at runtime (see dispatch.mode_from).
+    kernel_mode: str = "auto"
+    # DEPRECATED: both map onto kernel_mode="pallas" in __post_init__.
+    use_flash_kernel: bool = False
+    use_paged_kernel: bool = False
 
     # --- training defaults (per-arch tuned; overridable) ---
     microbatches: dict[str, int] = dataclasses.field(
         default_factory=lambda: {"train_4k": 1}
     )
+
+    def __post_init__(self):
+        if self.kernel_mode not in ("auto", "pallas", "xla"):
+            raise ValueError(
+                f"kernel_mode {self.kernel_mode!r}: expected auto|pallas|xla")
+        if self.use_paged_kernel or self.use_flash_kernel:
+            import warnings
+
+            flag = "use_paged_kernel" if self.use_paged_kernel else "use_flash_kernel"
+            warnings.warn(
+                f"cfg.{flag} is deprecated and will be removed: it now maps "
+                f"onto kernel_mode='pallas' (was kernel_mode="
+                f"{self.kernel_mode!r}). Set kernel_mode instead.",
+                DeprecationWarning, stacklevel=3,
+            )
+            object.__setattr__(self, "kernel_mode", "pallas")
 
     @property
     def ssm_d_inner(self) -> int:

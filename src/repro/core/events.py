@@ -130,6 +130,15 @@ EV_REQ_ADMIT = 40000060  # value = request id + 1 when a request enters a slot
 EV_REQ_RETIRE = 40000061  # value = request id + 1 when it completes
 EV_EVICT = 40000062  # value = evicted KV block id (prefix cache eviction)
 EV_REQ_PREEMPT = 40000063  # value = request id + 1 when evicted back to queue
+# attention-kernel dispatch (kernels/attention/dispatch.py): which member of
+# the kernel family a serve dispatch actually ran — value = the
+# KERNEL_VARIANT_IDS entry for "{variant}:{backend}" (0 reserved)
+EV_KERNEL_VARIANT = 40000064
+# autotune layer (kernels/attention/autotune.py): SEARCH value = candidates
+# measured before persisting; HIT value = 1 warm (persisted search result
+# reused, no re-search) / 2 heuristic defaults (no search requested)
+EV_AUTOTUNE_SEARCH = 40000065
+EV_AUTOTUNE_HIT = 40000066
 EV_SLOT_BASE = 40000100  # per-slot occupancy: code = base + slot,
                          # value = request id + 1 (0 = slot empty)
 SERVE_CTR_LABELS = {
@@ -148,6 +157,12 @@ SERVE_CTR_LABELS = {
     EV_SPEC_DRAFTED: "Spec draft tokens verified (per dispatch)",
     EV_SPEC_ACCEPTED: "Spec draft tokens accepted (per dispatch)",
     EV_SPEC_K: "Spec draft span width K",
+}
+
+KERNEL_EVENT_LABELS = {
+    EV_KERNEL_VARIANT: "Attention kernel variant dispatched",
+    EV_AUTOTUNE_SEARCH: "Attention autotune search (candidates measured)",
+    EV_AUTOTUNE_HIT: "Attention autotune cache hit (1=warm 2=heuristic)",
 }
 
 # ---- sampler ----

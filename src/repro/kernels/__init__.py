@@ -1,12 +1,14 @@
 """Pallas TPU kernels for the framework's compute hot spots (the paper has
 no kernel-level contribution — see DESIGN.md section 6):
 
-  flash_attention/  causal/SWA/GQA fused attention (kernel.py + ops.py + ref.py)
-  paged_attention/  block-table paged decode attention (scalar-prefetched
-                    block tables; serve-engine opt-in via cfg.use_paged_kernel)
-  ssd_scan/         Mamba-2 SSD chunked scan    (kernel.py + ops.py + ref.py)
+  attention/  ONE attention-kernel family: dense flash prefill, paged
+              decode, ragged span (spec verify rides the span variant),
+              with a single pallas-vs-XLA dispatch point
+              (dispatch.resolve, driven by cfg.kernel_mode) and an
+              autotune layer with a persistent parameter cache
+  ssd_scan/   Mamba-2 SSD chunked scan (kernel.py + ops.py + ref.py)
 
-Kernels are validated in interpret mode against pure-jnp oracles
+Kernels are validated in interpret mode against pure-jnp/numpy oracles
 (tests/test_kernels_*.py) and target TPU (pl.pallas_call + BlockSpec VMEM
 tiling, 128-aligned MXU dims).
 """

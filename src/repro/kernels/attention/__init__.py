@@ -1,0 +1,61 @@
+"""The unified attention-kernel family: dense prefill, paged decode,
+ragged span (spec verify rides the span variant).
+
+  flash.py     dense flash-attention kernel (causal/SWA/GQA)
+  paged.py     paged decode + ragged span kernels (scalar-prefetched
+               block tables)
+  ops.py       jit'd layout/padding wrappers around the kernels
+  ref.py       ONE dense float64 oracle (``dense_ref``) + per-variant
+               layout adapters — the correctness gate for every variant
+  dispatch.py  the single pallas-vs-XLA decision point (``resolve``)
+  autotune.py  block/tiling parameter search + persistent on-disk cache
+"""
+from repro.kernels.attention.autotune import (
+    cache_path,
+    clear_memory,
+    params_for,
+    set_observer,
+    tune_key,
+)
+from repro.kernels.attention.dispatch import (
+    KERNEL_VARIANT_IDS,
+    KernelDecision,
+    engine_plan,
+    mode_from,
+    resolve,
+)
+from repro.kernels.attention.ops import (
+    flash_attention,
+    paged_attention,
+    paged_attention_sharded,
+    paged_span_attention,
+    paged_span_attention_sharded,
+)
+from repro.kernels.attention.ref import (
+    attention_ref,
+    dense_ref,
+    paged_attention_ref,
+    paged_span_ref,
+)
+
+__all__ = [
+    "KERNEL_VARIANT_IDS",
+    "KernelDecision",
+    "attention_ref",
+    "cache_path",
+    "clear_memory",
+    "dense_ref",
+    "engine_plan",
+    "flash_attention",
+    "mode_from",
+    "paged_attention",
+    "paged_attention_ref",
+    "paged_attention_sharded",
+    "paged_span_attention",
+    "paged_span_attention_sharded",
+    "paged_span_ref",
+    "params_for",
+    "resolve",
+    "set_observer",
+    "tune_key",
+]

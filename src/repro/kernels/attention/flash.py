@@ -1,6 +1,8 @@
 """Pallas TPU flash-attention forward kernel (causal / sliding-window / GQA).
 
-TPU adaptation notes (vs the CUDA FlashAttention algorithm):
+The dense-prefill member of the unified attention-kernel family
+(``repro.kernels.attention``).  TPU adaptation notes (vs the CUDA
+FlashAttention algorithm):
   * tiling targets VMEM and the 128x128 MXU: block sizes are multiples of
     128 on the (Sq, Skv) dims and the head_dim lives on the lane dimension;
   * the KV loop is a sequential grid dimension (Pallas TPU grids execute
@@ -10,7 +12,11 @@ TPU adaptation notes (vs the CUDA FlashAttention algorithm):
     h // q_per_kv), so no repeated-KV materialization in HBM;
   * fully-masked KV blocks (future blocks under causality, out-of-window
     blocks under SWA) are skipped with ``pl.when`` — the block still
-    occupies a grid slot but does no MXU work.
+    occupies a grid slot but does no MXU work;
+  * ``block_q``/``block_k`` are the autotuned tiling parameters
+    (``repro.kernels.attention.autotune``) — changing ``block_k`` changes
+    the online-softmax accumulation order, so tuned runs are reproducible
+    only through the persistent parameter cache.
 
 Grid: (B, Hq, Sq/bq, Skv/bk), KV innermost.
 """

@@ -1,4 +1,5 @@
-"""jit'd wrapper: model/pool layout <-> kernel layout, backend select."""
+"""jit'd wrappers for the attention-kernel family: model/pool layout <->
+kernel layout, padding, backend select, tuned-parameter plumbing."""
 from __future__ import annotations
 
 import functools
@@ -7,14 +8,56 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.kernels.paged_attention.kernel import paged_decode_fwd, paged_span_fwd
+from repro.kernels.attention.flash import flash_attention_fwd
+from repro.kernels.attention.paged import paged_decode_fwd, paged_span_fwd
+
+
+def _pad_to(x, axis: int, mult: int):
+    s = x.shape[axis]
+    pad = (-s) % mult
+    if pad == 0:
+        return x, s
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), s
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "q_offset", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q, k, v, *, causal: bool = True, window: int | None = None,
+    q_offset: int = 0, block_q: int = 128, block_k: int = 128,
+    interpret: bool | None = None,
+):
+    """Dense prefill.  q: [B, Sq, Hq, D]; k/v: [B, Skv, Hkv, D] (model
+    layout).  block_q/block_k are the autotuned tiling parameters.
+
+    interpret=None -> auto: Pallas interpret mode off-TPU (this container),
+    compiled Mosaic kernel on TPU.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    qt = jnp.swapaxes(q, 1, 2)  # [B, Hq, Sq, D]
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    qt, sq = _pad_to(qt, 2, block_q)
+    kt, _ = _pad_to(kt, 2, block_k)
+    vt, _ = _pad_to(vt, 2, block_k)
+    out = flash_attention_fwd(
+        qt, kt, vt, causal=causal, window=window, q_offset=q_offset,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return jnp.swapaxes(out[:, :, :sq], 1, 2)
 
 
 @functools.partial(jax.jit, static_argnames=("window", "interpret"))
 def paged_attention(cache, q, block_tables, index, *, window: int | None = None,
                     interpret: bool | None = None):
-    """cache: {"k","v"} [NB, bs, Hkv, D] pooled blocks (engine layout);
-    q: [B, 1, Hq, D]; block_tables: [B, W] int32; index: [B] int32.
+    """Paged decode.  cache: {"k","v"} [NB, bs, Hkv, D] pooled blocks
+    (engine layout); q: [B, 1, Hq, D]; block_tables: [B, W] int32;
+    index: [B] int32.
 
     interpret=None -> auto: Pallas interpret mode off-TPU (this container),
     compiled Mosaic kernel on TPU.  Returns [B, 1, Hq, D].
@@ -34,14 +77,16 @@ def paged_attention(cache, q, block_tables, index, *, window: int | None = None,
     return out.reshape(b, 1, hq, d)
 
 
-@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+@functools.partial(jax.jit, static_argnames=("window", "block_q", "interpret"))
 def paged_span_attention(cache, q, block_tables, row_start, row_len, *,
                          window: int | None = None,
+                         block_q: int | None = None,
                          interpret: bool | None = None):
     """Ragged multi-query paged attention (the unified serve step's mixed
     rows).  cache: {"k","v"} [NB, bs, Hkv, D] pooled blocks; q: [B, Q, Hq, D]
     — row ``b`` holds ``row_len[b]`` valid queries at absolute positions
-    ``row_start[b] + j``; block_tables: [B, W] int32.
+    ``row_start[b] + j``; block_tables: [B, W] int32.  block_q tiles the
+    folded Q*G query dim (the autotuned parameter); None keeps one tile.
     Returns [B, Q, Hq, D] (padded query rows are garbage, caller discards).
     """
     if interpret is None:
@@ -52,14 +97,18 @@ def paged_span_attention(cache, q, block_tables, row_start, row_len, *,
     # query-major span fold per kv head: kernel row j*G + g_ = (query j, group g_)
     qt = q.reshape(b, qlen, hkv, g, d).transpose(0, 2, 1, 3, 4)
     qt = qt.reshape(b, hkv, qlen * g, d)
+    if block_q is not None:
+        qt, qg = _pad_to(qt, 2, block_q)
+    else:
+        qg = qlen * g
     kp = jnp.transpose(cache["k"], (2, 0, 1, 3))  # [Hkv, NB, bs, D]
     vp = jnp.transpose(cache["v"], (2, 0, 1, 3))
     out = paged_span_fwd(
         qt, kp, vp, jnp.asarray(block_tables, jnp.int32),
         jnp.asarray(row_start, jnp.int32), jnp.asarray(row_len, jnp.int32),
-        group=g, window=window, interpret=interpret,
+        group=g, window=window, block_q=block_q, interpret=interpret,
     )
-    out = out.reshape(b, hkv, qlen, g, d).transpose(0, 2, 1, 3, 4)
+    out = out[:, :, :qg].reshape(b, hkv, qlen, g, d).transpose(0, 2, 1, 3, 4)
     return out.reshape(b, qlen, hq, d)
 
 
@@ -97,6 +146,7 @@ def paged_attention_sharded(cache, q, block_tables, index, *,
 
 def paged_span_attention_sharded(cache, q, block_tables, row_start, row_len, *,
                                  window: int | None, rules,
+                                 block_q: int | None = None,
                                  interpret: bool | None = None):
     """Tensor-parallel span attention: same per-shard kv-head slicing as
     :func:`paged_attention_sharded` (q heads are kv-major, so a contiguous
@@ -114,7 +164,8 @@ def paged_span_attention_sharded(cache, q, block_tables, row_start, row_len, *,
 
     def per_shard(kp, vp, qs, bt, st, ln):
         return paged_span_attention({"k": kp, "v": vp}, qs, bt, st, ln,
-                                    window=window, interpret=interpret)
+                                    window=window, block_q=block_q,
+                                    interpret=interpret)
 
     fn = shard_map(
         per_shard, mesh=rules.mesh,

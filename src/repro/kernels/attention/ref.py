@@ -1,0 +1,116 @@
+"""One dense float64 reference for every attention-kernel variant.
+
+The per-family oracles this replaces had drifted in masking conventions
+(the flash ref masked with ``k_pos <= q_pos`` over offset positions, the
+paged refs with ``pos <= index`` over gathered pools).  Everything now
+funnels through ``dense_ref`` — plain numpy float64, one mask definition
+— and the variant-shaped adapters below only do layout (gather paged
+pools into a dense view, build position vectors), never math.
+
+These run on the host and are the correctness gate for both the Pallas
+kernels and the XLA fallback path; they are NOT jit-able.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def dense_ref(q, k, v, q_pos, kv_pos, *, causal=True, window=None,
+              kv_valid=None):
+    """Dense attention in numpy float64.
+
+    q: [B, Sq, Hq, D]; k/v: [B, Skv, Hkv, D] (Hq a multiple of Hkv, GQA).
+    q_pos: [Sq] or [B, Sq]; kv_pos: [Skv] or [B, Skv] token positions.
+    kv_valid: optional bool [B, Skv] — invalid keys are masked out.
+    Mask: (not causal or kv_pos <= q_pos) and (no window or
+    kv_pos > q_pos - window).  Fully-masked queries return zeros.
+    Returns np.float64 [B, Sq, Hq, D].
+    """
+    q = np.asarray(q).astype(np.float64)
+    k = np.asarray(k).astype(np.float64)
+    v = np.asarray(v).astype(np.float64)
+    b, sq, hq, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = hq // hkv
+
+    qp = np.broadcast_to(np.asarray(q_pos, np.int64), (b, sq))
+    kp = np.broadcast_to(np.asarray(kv_pos, np.int64), (b, skv))
+    mask = np.ones((b, sq, skv), bool)
+    if causal:
+        mask &= kp[:, None, :] <= qp[:, :, None]
+    if window is not None:
+        mask &= kp[:, None, :] > qp[:, :, None] - window
+    if kv_valid is not None:
+        mask &= np.asarray(kv_valid, bool)[:, None, :]
+
+    kg = np.repeat(k, g, axis=2)  # [B, Skv, Hq, D]
+    vg = np.repeat(v, g, axis=2)
+    s = np.einsum("bqhd,bshd->bhqs", q, kg) / np.sqrt(d)
+    s = np.where(mask[:, None], s, -np.inf)
+    m = s.max(axis=-1, keepdims=True)
+    m = np.where(np.isfinite(m), m, 0.0)  # fully-masked rows -> zeros
+    p = np.exp(s - m)
+    denom = p.sum(axis=-1, keepdims=True)
+    p = p / np.maximum(denom, np.finfo(np.float64).tiny)
+    return np.einsum("bhqs,bshd->bqhd", p, vg)
+
+
+def attention_ref(q, k, v, *, causal=True, window=None, q_offset=0):
+    """Dense-prefill adapter: q [B, Sq, Hq, D], k/v [B, Skv, Hkv, D];
+    query i sits at position q_offset + i.  Returns q.dtype."""
+    sq, skv = q.shape[1], k.shape[1]
+    out = dense_ref(
+        q, k, v,
+        q_offset + np.arange(sq, dtype=np.int64),
+        np.arange(skv, dtype=np.int64),
+        causal=causal, window=window,
+    )
+    return jnp.asarray(out).astype(q.dtype)
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, index, *,
+                        window=None):
+    """Paged-decode adapter: q [B, 1, Hq, D], pool [NB, bs, Hkv, D]
+    (slot-major), block_tables [B, W], index [B].  Gathers each slot's
+    table into a dense [W*bs] view; positions past index are masked by
+    causality.  Returns q.dtype."""
+    kp = np.asarray(k_pages)
+    vp = np.asarray(v_pages)
+    bt = np.asarray(block_tables)
+    b, w = bt.shape
+    bs, hkv, d = kp.shape[1], kp.shape[2], kp.shape[3]
+    kg = kp[bt].reshape(b, w * bs, hkv, d)
+    vg = vp[bt].reshape(b, w * bs, hkv, d)
+    out = dense_ref(
+        q, kg, vg,
+        np.asarray(index, np.int64)[:, None],
+        np.arange(w * bs, dtype=np.int64),
+        causal=True, window=window,
+    )
+    return jnp.asarray(out).astype(q.dtype)
+
+
+def paged_span_ref(q, k_pages, v_pages, block_tables, row_start, row_len, *,
+                   window=None):
+    """Ragged-span adapter: q [B, Q, Hq, D]; query j of row i sits at
+    position row_start[i] + j; rows with j >= row_len[i] are zeroed (the
+    kernel leaves them garbage by contract).  Returns q.dtype."""
+    kp = np.asarray(k_pages)
+    vp = np.asarray(v_pages)
+    bt = np.asarray(block_tables)
+    b, w = bt.shape
+    bs, hkv, d = kp.shape[1], kp.shape[2], kp.shape[3]
+    qlen = q.shape[1]
+    kg = kp[bt].reshape(b, w * bs, hkv, d)
+    vg = vp[bt].reshape(b, w * bs, hkv, d)
+    start = np.asarray(row_start, np.int64)
+    out = dense_ref(
+        q, kg, vg,
+        start[:, None] + np.arange(qlen, dtype=np.int64),
+        np.arange(w * bs, dtype=np.int64),
+        causal=True, window=window,
+    )
+    valid = np.arange(qlen)[None, :] < np.asarray(row_len)[:, None]
+    out = np.where(valid[..., None, None], out, 0.0)
+    return jnp.asarray(out).astype(q.dtype)

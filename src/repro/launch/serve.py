@@ -136,6 +136,12 @@ def main(argv=None):
                         "budget: slots * ceil(max_len/block_size) + 1)")
     p.add_argument("--no-prefix-cache", action="store_true",
                    help="disable hash-based prompt prefix reuse")
+    p.add_argument("--kernel-mode", default="",
+                   choices=["auto", "pallas", "xla"],
+                   help="attention-kernel dispatch (docs/kernels.md): auto "
+                        "= Pallas where shape/platform allow, pallas = "
+                        "force the kernels (interpret mode off-TPU), xla "
+                        "= always the gather/SDPA path")
     p.add_argument("--trace", action="store_true")
     p.add_argument("--flush-every", type=int, default=0,
                    help="stream the trace to disk every N decode iterations")
@@ -165,6 +171,8 @@ def main(argv=None):
                 f"{', '.join(all_arch_names())})")
 
     cfg = reduced(get_config(args.arch))
+    if args.kernel_mode:
+        cfg = cfg.replace(kernel_mode=args.kernel_mode)
     mesh = (make_mesh(mesh_shape, ("data", "model"))
             if mesh_shape is not None else None)
     model = build_model(cfg)
@@ -244,6 +252,10 @@ def main(argv=None):
               f"{stats['prefix_hit_tokens']} prefix-hit tokens, "
               f"{stats['preemptions']} preemptions, "
               f"{stats.get('evictions', 0)} cache evictions")
+        kd = engine.stats.get("kernel_dispatch", {})
+        counts = (" ".join(f"{k}={v}" for k, v in sorted(kd.items()))
+                  or "none recorded")
+        print(f"[serve] attention kernels (mode={cfg.kernel_mode}): {counts}")
     if args.mode == "unified":
         note = ("on" if engine.chunkable
                 else "off — state-carrying family, whole-prompt admission")

@@ -5,7 +5,10 @@ Three execution paths:
   * blocked SDPA    — online-softmax over KV blocks (``cfg.attn_block_kv``):
                       flash-style memory footprint in pure jnp, used for the
                       32k shapes; optional compile-time causal block skipping
-  * Pallas kernel   — ``repro.kernels.flash_attention`` (TPU target; opt-in)
+  * Pallas kernels  — ``repro.kernels.attention`` (the default hot path on
+                      TPU under ``cfg.kernel_mode="auto"``; every call site
+                      routes through ``dispatch.resolve`` and degrades to
+                      the jnp paths above when shape/dtype/platform say no)
 
 Decode maintains either a full KV cache (one slot per absolute position) or a
 ring buffer of ``window`` slots for sliding-window attention; ring-slot
@@ -22,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels.attention import dispatch as kdispatch
 from repro.models import cache_utils
 from repro.models.cache_utils import PAGED_POOL_AXES
 from repro.models.layers import accum_dtype, dense, dense_decl, rope
@@ -171,21 +175,36 @@ def _sdpa_blocked(q, k, v, *, q_pos, kv_pos, causal, window, kv_valid, scale,
 
 def multi_head_attention(
     q, k, v, *, q_pos, kv_pos, causal=True, window=None, kv_valid=None,
-    block_kv=0, skip_blocks=True, flash=False,
+    block_kv=0, skip_blocks=True, kernel_mode="xla",
 ):
-    """q: [B,Sq,Hq,D]; k/v: [B,Skv,Hkv,D]; positions int32 [Sq]/[Skv]."""
+    """q: [B,Sq,Hq,D]; k/v: [B,Skv,Hkv,D]; positions int32 [Sq]/[Skv].
+
+    ``kernel_mode`` (auto|pallas|xla) routes eligible dense calls through
+    the Pallas flash kernel via ``dispatch.resolve``; standalone callers
+    default to the pure-jnp paths.
+    """
     B, Sq, Hq, D = q.shape
     Hkv = k.shape[2]
     G = Hq // Hkv
     scale = 1.0 / (D ** 0.5)
     qg = q.reshape(B, Sq, Hkv, G, D)
 
-    if flash and Sq > 1 and kv_valid is None and isinstance(q_pos, np.ndarray):
-        from repro.kernels.flash_attention import ops as fa_ops
-
-        return fa_ops.flash_attention(
-            q, k, v, causal=causal, window=window, q_offset=int(q_pos[0]) if q_pos.size else 0,
+    # the flash kernel needs multi-query spans, static contiguous positions,
+    # and no per-key validity mask (padding is derived from Skv alone)
+    if (kernel_mode != "xla" and Sq > 1 and kv_valid is None
+            and isinstance(q_pos, np.ndarray)):
+        decision = kdispatch.resolve(
+            kernel_mode, "dense", head_dim=D, kv_heads=Hkv,
+            dtype=str(q.dtype), window=window,
         )
+        if decision.backend == "pallas":
+            from repro.kernels.attention import ops as att_ops
+
+            return att_ops.flash_attention(
+                q, k, v, causal=causal, window=window,
+                q_offset=int(q_pos[0]) if q_pos.size else 0,
+                **decision.params,
+            )
 
     if block_kv and Sq > 1 and k.shape[1] > block_kv:
         o = _sdpa_blocked(
@@ -301,7 +320,7 @@ def attention_block(
         o = multi_head_attention(
             q, k, v, q_pos=positions, kv_pos=kv_pos,
             causal=is_causal, window=window, kv_valid=kv_valid,
-            block_kv=cfg.attn_block_kv, flash=cfg.use_flash_kernel,
+            block_kv=cfg.attn_block_kv, kernel_mode=kdispatch.mode_from(cfg),
         )
         new_cache = _build_cache(k, v, window if ring else None, cache_len)
     elif index is None:
@@ -387,6 +406,7 @@ def _chunk_attend(q, k_new, v_new, prefix, positions, window, cfg):
     o = multi_head_attention(
         q, kc, vc, q_pos=positions, kv_pos=kv_pos, causal=True,
         window=window, block_kv=cfg.attn_block_kv,
+        kernel_mode=kdispatch.mode_from(cfg),
     )
     return o, {"k": k_new, "v": v_new}
 
@@ -423,18 +443,24 @@ def _paged_decode_attend(q, k_new, v_new, cache, index, block_tables, window, cf
     # scores: it must use the gather path (GSPMD partitions the dots), not
     # the head-parallel kernel — a plain pallas_call over a D-sharded pool
     # would hand XLA an unpartitionable custom call
-    if getattr(cfg, "use_paged_kernel", False) and hd_shards == 1:
-        from repro.kernels.paged_attention import ops as pa_ops
+    decision = kdispatch.resolve(
+        kdispatch.mode_from(cfg), "paged_decode", head_dim=kp.shape[3],
+        kv_heads=kp.shape[2], dtype=str(q.dtype), window=window,
+        block_size=bs, supported=hd_shards == 1,
+        why=f"head_dim sharded {hd_shards}-way",
+    )
+    if decision.backend == "pallas":
+        from repro.kernels.attention import ops as att_ops
 
         if kv_shards > 1:
             # per-shard head slice: each model-axis shard runs the kernel
             # over its own kv heads (and the aligned q-head group)
-            o = pa_ops.paged_attention_sharded(
+            o = att_ops.paged_attention_sharded(
                 {"k": kp, "v": vp}, q, block_tables, index, window=window,
                 rules=rules)
         else:
-            o = pa_ops.paged_attention({"k": kp, "v": vp}, q, block_tables,
-                                       index, window=window)
+            o = att_ops.paged_attention({"k": kp, "v": vp}, q, block_tables,
+                                        index, window=window)
     else:
         # ---- read: gather the slot's blocks into its logical [W*bs] view
         kg = kp[block_tables].reshape(B, W * bs, *kp.shape[2:])
@@ -488,17 +514,24 @@ def _paged_span_attend(q, k_new, v_new, cache, row_start, row_len, positions,
                  if rules is not None else 1)
     hd_shards = (rules.axis_size(rules.axis("cache_hd"))
                  if rules is not None else 1)
-    if getattr(cfg, "use_paged_kernel", False) and hd_shards == 1:
-        from repro.kernels.paged_attention import ops as pa_ops
+    decision = kdispatch.resolve(
+        kdispatch.mode_from(cfg), "paged_span", head_dim=kp.shape[3],
+        kv_heads=kp.shape[2], dtype=str(q.dtype), window=window,
+        block_size=bs, supported=hd_shards == 1,
+        why=f"head_dim sharded {hd_shards}-way",
+    )
+    if decision.backend == "pallas":
+        from repro.kernels.attention import ops as att_ops
 
         if kv_shards > 1:
-            o = pa_ops.paged_span_attention_sharded(
+            o = att_ops.paged_span_attention_sharded(
                 {"k": kp, "v": vp}, q, block_tables, row_start, row_len,
-                window=window, rules=rules)
+                window=window, rules=rules,
+                block_q=decision.params.get("block_q"))
         else:
-            o = pa_ops.paged_span_attention(
+            o = att_ops.paged_span_attention(
                 {"k": kp, "v": vp}, q, block_tables, row_start, row_len,
-                window=window)
+                window=window, block_q=decision.params.get("block_q"))
     else:
         kg = kp[block_tables].reshape(b, w * bs, *kp.shape[2:])
         vg = vp[block_tables].reshape(b, w * bs, *vp.shape[2:])

@@ -63,6 +63,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import events as ev
+from repro.kernels.attention import dispatch as kdispatch
 from repro.core.comm_replay import device_endpoint_map, replay_step
 from repro.core.hlo_comm import parse_collectives
 from repro.core.sampling import sample_logits
@@ -144,6 +145,11 @@ class ContinuousServeEngine:
             tracer.register(ev.EV_REQ_TPOT_US, ev.SERVE_CTR_LABELS[ev.EV_REQ_TPOT_US])
             tracer.register(ev.EV_PREFIX_HIT_TOKENS,
                             ev.SERVE_CTR_LABELS[ev.EV_PREFIX_HIT_TOKENS])
+            for code, label in ev.KERNEL_EVENT_LABELS.items():
+                tracer.register(code, label)
+            # autotune decisions resolve at trace time inside jit — route
+            # them into this engine's trace (process-global; last engine wins)
+            kdispatch.set_observer(tracer.emit)
 
         # --- paged pool: attention K/V is block-addressed, recurrent state
         # (ssm/rec/cross leaves) stays slot-indexed ---
@@ -241,7 +247,16 @@ class ContinuousServeEngine:
                       "prefill_tokens": 0, "prefix_hit_tokens": 0,
                       "preemptions": 0, "peak_active": 0, "peak_blocks": 0,
                       "host_syncs": 0, "decode_syncs": 0, "seconds": 0.0,
-                      "prefill_seconds": 0.0}
+                      "prefill_seconds": 0.0, "kernel_dispatch": {}}
+
+        # --- attention-kernel dispatch plan: one resolve() per variant,
+        # mirroring what the traced model will decide at its call sites ---
+        hd_shards = 1
+        if self.meshstate is not None:
+            r = self.meshstate.rules
+            hd_shards = r.axis_size(r.axis("cache_hd"))
+        self._kernel_plan = kdispatch.engine_plan(
+            cfg, block_size=bs, hd_shards=hd_shards)
 
     # ------------------------------------------------------------------
     # mesh plumbing
@@ -254,6 +269,18 @@ class ContinuousServeEngine:
     def _with_rules(self):
         return (use_rules(self.meshstate.rules) if self.meshstate
                 else contextlib.nullcontext())
+
+    def _note_kernel(self, variant: str):
+        """Account one engine dispatch of an attention-kernel variant:
+        bump ``stats["kernel_dispatch"]`` and stamp EV_KERNEL_VARIANT so
+        the backend that actually ran is readable in the merged trace."""
+        if not self._has_paged:
+            return  # no attention layers -> no attention dispatch
+        d = self._kernel_plan[variant]
+        counts = self.stats["kernel_dispatch"]
+        counts[d.tag] = counts.get(d.tag, 0) + 1
+        if self.tracer is not None:
+            self.tracer.emit(ev.EV_KERNEL_VARIANT, d.event_value)
 
     def _traced_call(self, tag: str, jitfn, args: tuple, statics: dict):
         """Run a jitted engine kernel; returns (outputs, collective_ops).
@@ -537,6 +564,7 @@ class ContinuousServeEngine:
                 jnp.asarray(slots, jnp.int32), jnp.asarray(block_ids, jnp.int32),
                 tok1, jnp.asarray(starts, jnp.int32),
             )
+        self._note_kernel("dense")  # prefill/chunk run the dense variant
         for slot, st, req in zip(slots, starts, reqs):
             self._slot_start[slot] = st
             self._slot_sched0[slot] = len(req.tokens)  # re-prefilled tokens
@@ -741,6 +769,7 @@ class ContinuousServeEngine:
                             (self.params, self._caches, self._tok, self._idx,
                              self._active_dev, self._tables_dev, key),
                             {"steps": steps})
+                self._note_kernel("paged_decode")
                 for slot, req in pairs:
                     req.scheduled += steps
                     if req.scheduled >= req.max_new_tokens:

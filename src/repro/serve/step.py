@@ -469,6 +469,10 @@ class UnifiedServeEngine(ContinuousServeEngine):
                      self._dev(jnp.asarray(ck_slot)),
                      self._dev(jnp.asarray(ck_sample)), key),
                     {"steps": steps, "chunk": bool(chunks)})
+        if pairs:
+            self._note_kernel("paged_decode")  # decode sub-batch scan
+        if chunks:
+            self._note_kernel("paged_span")  # chunk rows run the span variant
         for slot, req in pairs:
             req.scheduled += steps
             if req.scheduled >= req.max_new_tokens:
@@ -695,6 +699,7 @@ class UnifiedServeEngine(ContinuousServeEngine):
                      self._dev(jnp.asarray(ck_sample)), key),
                     {"chunk": bool(chunks)})
                 out, nacc, ck = jax.device_get((out_toks, n_acc, ck_tok))
+            self._note_kernel("paged_span")  # draft/verify rides the span
             self.stats["host_syncs"] += 1
             self._replay(coll_ops, t_dispatch, _now_ns())
             n_chunk = self._advance_chunks(chunks, t_dispatch)

@@ -7,8 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.flash_attention.ops import flash_attention
-from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.attention import attention_ref, flash_attention
 
 
 def _mk(b, sq, skv, hq, hkv, d, dtype, seed=0):

@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.paged_attention import (
+from repro.kernels.attention import (
     paged_attention, paged_attention_ref, paged_span_attention, paged_span_ref,
 )
 
@@ -74,6 +74,21 @@ def test_span_kernel_matches_ref(window, G):
     ref = paged_span_ref(q, kp, vp, bt, st, ln, window=window)
     np.testing.assert_allclose(_mask_pad(out, ln), np.asarray(ref),
                                atol=2e-6, rtol=2e-6)
+
+
+def test_span_kernel_block_q_tile_invariance():
+    """The autotuned ``block_q`` tiling over the folded Q*G dim must not
+    change per-row numerics: every row sees the same KV-block sequence and
+    masks regardless of tile boundaries (incl. the padded-fold case)."""
+    q, kp, vp, bt, st, ln = _span_case(5, B=3, W=4, bs=8, Hkv=2, G=4, D=16,
+                                       NB=32, Q=6)
+    base = paged_span_attention({"k": kp, "v": vp}, q, bt, st, ln,
+                                window=9, interpret=True)
+    for bq in (4, 8, 16):  # Q*G = 24: exact tiles and a padded fold
+        tiled = paged_span_attention({"k": kp, "v": vp}, q, bt, st, ln,
+                                     window=9, block_q=bq, interpret=True)
+        np.testing.assert_allclose(_mask_pad(tiled, ln), _mask_pad(base, ln),
+                                   rtol=1e-6, atol=1e-6)
 
 
 def test_span_kernel_single_token_equals_decode_kernel():

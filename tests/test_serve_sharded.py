@@ -63,15 +63,17 @@ EQUIV_SCRIPT = textwrap.dedent("""
     ref = ContinuousServeEngine(cfg, params, num_slots=4, max_len=64,
                                 block_size=16)
     out_ref = ref.serve_batch(prompts, num_tokens=8)
-    eng = ContinuousServeEngine(cfg.replace(use_paged_kernel=True), params,
+    eng = ContinuousServeEngine(cfg.replace(kernel_mode="pallas"), params,
                                 num_slots=4, max_len=64, block_size=16,
                                 mesh=mesh)
     out = eng.serve_batch(prompts, num_tokens=8)
     np.testing.assert_array_equal(out, out_ref, err_msg="paged kernel mp=2")
+    assert eng.stats["kernel_dispatch"].get("paged_decode:pallas", 0) > 0, \
+        eng.stats["kernel_dispatch"]
     print("OK paged-kernel")
 
-    # head_dim-sharded pool (kv=1, the rules' last resort) + use_paged_kernel
-    # must fall back to the gather path — a plain pallas_call over a
+    # head_dim-sharded pool (kv=1, the rules' last resort) + kernel_mode=
+    # pallas must fall back to the gather path — a plain pallas_call over a
     # D-sharded pool is an unpartitionable custom call
     cfg1 = reduced(get_config("granite-8b"), num_layers=2)  # kv=1
     model1 = build_model(cfg1)
@@ -79,7 +81,7 @@ EQUIV_SCRIPT = textwrap.dedent("""
     ref1 = ContinuousServeEngine(cfg1, params1, num_slots=2, max_len=64,
                                  block_size=16)
     out_ref1 = ref1.serve_batch(prompts[:2], num_tokens=8)
-    eng1 = ContinuousServeEngine(cfg1.replace(use_paged_kernel=True), params1,
+    eng1 = ContinuousServeEngine(cfg1.replace(kernel_mode="pallas"), params1,
                                  num_slots=2, max_len=64, block_size=16,
                                  mesh=mesh)
     np.testing.assert_array_equal(eng1.serve_batch(prompts[:2], num_tokens=8),
