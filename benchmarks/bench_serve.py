@@ -12,6 +12,10 @@ the perf trajectory is tracked across PRs):
      ceiling; the paged pool spends the SAME budget block-by-block on
      *actual* lengths and sustains more concurrent requests (peak active
      slots + blocks in use reported);
+  2b. quantized equal-HBM budget: an int8 pool at the SAME byte budget as
+     a native pool sustains >=1.8x the concurrent requests (per-position
+     scale quantization, dequant fused into the decode paths — see
+     docs/paged_cache.md); greedy outputs compared token-for-token;
   3. prefix-hit speedup on a shared-prompt workload (system-prompt shape):
      warm vs cold wall time and prefilled-token counts;
   4. mixed load (long-prompt + short-prompt blend, diverse lengths): the
@@ -198,6 +202,73 @@ def _bench_equal_budget(cfg, model, params, results):
     yield (f"serve_budget_paged,,{total / dt_paged:.0f} tok/s; "
            f"{paged.stats['peak_active']} concurrent requests on the same "
            f"budget ({paged.stats['peak_blocks']}/{num_blocks - 1} blocks in use)")
+
+
+def _bench_quantized_budget(cfg, model, params, results):
+    """Equal HBM, quantized blocks: an int8 pool (int8 data + f32
+    per-position scales) fits ~3.5x the blocks of the native f32 smoke
+    pool, so a byte-matched budget sustains proportionally more concurrent
+    requests.  Greedy outputs are compared token-for-token against the
+    fp16 pool (bounded divergence, not bit equality — docs/paged_cache.md)."""
+    from repro.serve.engine import ContinuousServeEngine
+
+    # prompt-dominated footprint (2 of 3 blocks land at admission, so the
+    # byte budget — not just-in-time decode growth — bounds concurrency)
+    max_len, bs = 48, 16
+    n_req, prompt, gen = 16, 32, 8
+    fp16_blocks = 13  # 12 usable, 3-block requests
+    prompts = np.random.default_rng(3).integers(
+        0, cfg.vocab_size, (n_req, prompt)).astype(np.int32)
+
+    def make(kv_dtype, num_blocks):
+        return ContinuousServeEngine(
+            cfg.replace(kv_dtype=kv_dtype), params, num_slots=n_req,
+            max_len=max_len, block_size=bs, num_blocks=num_blocks,
+            prefix_cache=False, max_prefills_per_iter=n_req)
+
+    def run(engine):
+        reqs = [engine.submit(prompts[i], gen) for i in range(n_req)]
+        t0 = time.perf_counter()
+        out = engine.run()
+        dt = time.perf_counter() - t0
+        return dt, np.stack([out[r.rid] for r in reqs])
+
+    native = make("fp16", fp16_blocks)
+    budget_bytes = fp16_blocks * native.pool.block_bytes
+    run(native)  # warmup/compile
+    native.stats["peak_active"] = native.stats["peak_blocks"] = 0
+    dt16, out16 = run(native)
+
+    # same byte budget, int8 block granularity
+    int8_blocks = budget_bytes // make("int8", fp16_blocks).pool.block_bytes
+    quant = make("int8", int8_blocks)
+    run(quant)
+    quant.stats["peak_active"] = quant.stats["peak_blocks"] = 0
+    dt8, out8 = run(quant)
+
+    total = n_req * gen
+    ratio = quant.stats["peak_active"] / max(native.stats["peak_active"], 1)
+    greedy_match = float((out8 == out16).mean())
+    results["quantized_equal_budget"] = {
+        "budget_bytes": int(budget_bytes),
+        "fp16_blocks": fp16_blocks - 1,
+        "int8_blocks": int(int8_blocks) - 1,
+        "bytes_per_token_fp16": native.kv_bytes_per_token,
+        "bytes_per_token_int8": quant.kv_bytes_per_token,
+        "fp16_tok_per_s": total / dt16,
+        "int8_tok_per_s": total / dt8,
+        "fp16_peak_concurrent": native.stats["peak_active"],
+        "int8_peak_concurrent": quant.stats["peak_active"],
+        "concurrency_ratio": ratio,
+        "greedy_match": greedy_match,
+    }
+    yield (f"serve_quant_fp16,,{total / dt16:.0f} tok/s; "
+           f"{native.stats['peak_active']} concurrent on "
+           f"{budget_bytes // 1024} KiB ({native.kv_bytes_per_token} B/token)")
+    yield (f"serve_quant_int8,,{total / dt8:.0f} tok/s; "
+           f"{quant.stats['peak_active']} concurrent on the same bytes "
+           f"({quant.kv_bytes_per_token} B/token) = {ratio:.2f}x concurrency; "
+           f"greedy match {greedy_match:.1%}")
 
 
 def _bench_prefix_hits(cfg, model, params, results):
@@ -548,6 +619,25 @@ def check_regression(results) -> int:
         else:
             print(f"regression gate: {label} {got:.2f} >= floor "
                   f"{floor:.2f} OK")
+    if "quantized_equal_budget" in base:
+        q = results.get("quantized_equal_budget", {})
+        # hard floor 1.8x (the quantization tentpole's claim) OR baseline
+        # minus tolerance, whichever is stricter at this scale
+        floor = max(1.8, base["quantized_equal_budget"]["concurrency_ratio"]
+                    * (1 - REGRESSION_TOLERANCE))
+        got = q.get("concurrency_ratio", 0.0)
+        if got < floor:
+            print(f"REGRESSION: quantized_equal_budget.concurrency_ratio "
+                  f"{got:.2f} < floor {floor:.2f}")
+            rc = 1
+        else:
+            print(f"regression gate: quantized_equal_budget."
+                  f"concurrency_ratio {got:.2f} >= floor {floor:.2f} OK")
+        if q.get("greedy_match", 0.0) < 0.75:
+            print(f"REGRESSION: quantized_equal_budget.greedy_match "
+                  f"{q.get('greedy_match', 0.0):.2f} < 0.75 — int8 decode "
+                  f"diverged beyond the committed bound")
+            rc = 1
     if "kernels" in base:
         k = results.get("kernels", {})
         if not k.get("bit_identical"):
@@ -585,6 +675,7 @@ def bench(results: dict | None = None):
     results["arch"] = f"{ARCH} (reduced)"
     yield from _bench_seed_vs_paged(cfg, model, params, results)
     yield from _bench_equal_budget(cfg, model, params, results)
+    yield from _bench_quantized_budget(cfg, model, params, results)
     yield from _bench_prefix_hits(cfg, model, params, results)
     yield from _bench_mixed_load(cfg, model, params, results)
     yield from _bench_speculative(cfg, model, params, results)

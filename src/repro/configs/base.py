@@ -87,6 +87,15 @@ class ModelConfig:
     #   xla    - always the gather/SDPA jnp path
     # REPRO_KERNEL_MODE overrides at runtime (see dispatch.mode_from).
     kernel_mode: str = "auto"
+    # KV block-pool storage dtype (serve paged cache only):
+    #   fp16 - native: pool leaves keep the model dtype (the unquantized
+    #          baseline; bit-identical to the pre-quantization engines)
+    #   int8 - symmetric int8 with per-(position, kv-head) f32 scales
+    #          carried as sibling k_scale/v_scale pool leaves
+    #   fp8  - float8_e4m3fn storage, same scale layout
+    # Dequant is fused into the paged/span gather on both kernel paths
+    # (see core/quant.py and docs/paged_cache.md).
+    kv_dtype: str = "fp16"
     # DEPRECATED: both map onto kernel_mode="pallas" in __post_init__.
     use_flash_kernel: bool = False
     use_paged_kernel: bool = False
@@ -100,6 +109,16 @@ class ModelConfig:
         if self.kernel_mode not in ("auto", "pallas", "xla"):
             raise ValueError(
                 f"kernel_mode {self.kernel_mode!r}: expected auto|pallas|xla")
+        if self.kv_dtype not in ("fp16", "int8", "fp8"):
+            raise ValueError(
+                f"kv_dtype {self.kv_dtype!r}: expected fp16|int8|fp8")
+        if self.kv_dtype != "fp16" and self.family == "encdec":
+            # cross-attention K/V lives in slot-resident caches (fully_paged()
+            # is False for enc-dec); quantizing only the self-attn pool would
+            # split the dtype story mid-model, so gate it off explicitly.
+            raise ValueError(
+                "kv_dtype quantization is not supported for family='encdec' "
+                "(cross-attention caches are not pooled); use kv_dtype='fp16'")
         if self.use_paged_kernel or self.use_flash_kernel:
             import warnings
 

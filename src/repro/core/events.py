@@ -126,6 +126,12 @@ EV_DECODE_TOKENS = 42200015  # counter: decode tokens this step
 EV_SPEC_DRAFTED = 42200016  # counter: draft tokens verified this dispatch
 EV_SPEC_ACCEPTED = 42200017  # counter: draft tokens accepted this dispatch
 EV_SPEC_K = 42200018  # counter: draft span width K in effect
+# quantized KV block pool (serve/block_pool.py): storage dtype emitted once
+# at pool init (BLOCK_DTYPE_IDS value), occupancy emitted next to the
+# EV_BLOCKS_* gauges so equal-HBM concurrency is readable off the .prv
+EV_BLOCK_DTYPE = 42200019  # counter: pool storage dtype (BLOCK_DTYPE_IDS)
+EV_POOL_ACTIVE_KIB = 42200020  # counter: bytes held by active blocks (KiB)
+BLOCK_DTYPE_IDS = {"fp16": 1, "int8": 2, "fp8": 3}
 EV_REQ_ADMIT = 40000060  # value = request id + 1 when a request enters a slot
 EV_REQ_RETIRE = 40000061  # value = request id + 1 when it completes
 EV_EVICT = 40000062  # value = evicted KV block id (prefix cache eviction)
@@ -157,6 +163,8 @@ SERVE_CTR_LABELS = {
     EV_SPEC_DRAFTED: "Spec draft tokens verified (per dispatch)",
     EV_SPEC_ACCEPTED: "Spec draft tokens accepted (per dispatch)",
     EV_SPEC_K: "Spec draft span width K",
+    EV_BLOCK_DTYPE: "KV block pool storage dtype (1=fp16 2=int8 3=fp8)",
+    EV_POOL_ACTIVE_KIB: "KV pool active-block bytes (KiB)",
 }
 
 KERNEL_EVENT_LABELS = {

@@ -1,0 +1,79 @@
+"""Shared symmetric quantization helpers.
+
+Two consumers, one numerics module:
+
+  * gradient compression (``optim/compression.py``): per-TENSOR int8 with a
+    single scalar scale — the wire format for the cross-pod psum;
+  * the quantized KV block pool (``models/attention.py`` /
+    ``models/cache_utils.py``): per-(position, kv-head) quantization over
+    the head_dim axis, so each cached token row carries its own scale and
+    writes stay idempotent under preemption/recompute and prefix reuse.
+
+Both use the same symmetric scheme: ``scale = amax / qmax`` (floored at
+1e-12 so all-zero rows quantize deterministically to ``q=0``), storage is
+``round(x / scale)`` clipped to the representable range.  Dequant is the
+exact inverse ``q * scale`` — elementwise and deterministic, which is what
+makes re-quantizing already-quantized-then-dequantized values a fixed
+point (no drift across preempt/resume round trips).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# KV pool storage dtypes.  "fp16" means "native" — the pool keeps the model
+# dtype and no scale leaves exist (the name is the serving-convention label
+# for the unquantized baseline, not a literal float16 cast).
+KV_DTYPES = ("fp16", "int8", "fp8")
+
+# Symmetric clip range per storage dtype: int8 is [-127, 127]; fp8 e4m3fn
+# saturates at +-448 (no inf encoding in the fn variant).
+QMAX = {"int8": 127.0, "fp8": 448.0}
+
+
+def storage_dtype(kv_dtype: str):
+    """jnp dtype that quantized pool leaves are stored in."""
+    if kv_dtype == "int8":
+        return jnp.int8
+    if kv_dtype == "fp8":
+        if not hasattr(jnp, "float8_e4m3fn"):  # pragma: no cover - old jax
+            raise ValueError(
+                "kv_dtype='fp8' needs jax with float8_e4m3fn support; "
+                "use 'int8' or 'fp16' on this installation")
+        return jnp.float8_e4m3fn
+    raise ValueError(f"no storage dtype for kv_dtype={kv_dtype!r}")
+
+
+def quantize_int8(x):
+    """f32 -> (int8, scale).  Symmetric per-tensor."""
+    amax = jnp.max(jnp.abs(x))
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def kv_quantize(x, kv_dtype: str):
+    """[..., D] float -> (q [..., D] storage dtype, scale [...] f32).
+
+    One scale per leading index (per cached position, per kv-head): amax is
+    reduced over the last (head_dim) axis only.  Elementwise and
+    deterministic — quantizing the same values always yields the same
+    (q, scale) pair, so scatter-writes are idempotent.
+    """
+    qmax = QMAX[kv_dtype]
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax / qmax, 1e-12)
+    y = x.astype(jnp.float32) / scale[..., None]
+    if kv_dtype == "int8":
+        q = jnp.clip(jnp.round(y), -127, 127).astype(jnp.int8)
+    else:
+        q = jnp.clip(y, -qmax, qmax).astype(storage_dtype(kv_dtype))
+    return q, scale
+
+
+def kv_dequantize(q, scale, dtype):
+    """Inverse of :func:`kv_quantize`: q [..., D] * scale [...] -> dtype."""
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)

@@ -11,9 +11,12 @@ Two layers:
 * an in-process memo (``_memory``) so a long serve run resolves each
   (variant, shape) once;
 * a persistent JSON cache on disk, keyed by
-  ``v1|{variant}|hd{head_dim}|kh{kv_heads}|bs{block_size}|w{window}|{dtype}|{platform}``
+  ``v2|{variant}|hd{head_dim}|kh{kv_heads}|bs{block_size}|w{window}|{dtype}|{kv_dtype}|{platform}``
   so the *second run* of any config reloads tuned parameters instead of
-  re-searching.  Location: ``$REPRO_AUTOTUNE_CACHE`` if set, else
+  re-searching.  (v2 added the KV storage dtype: int8/fp8 pools fuse
+  dequant into the kernels, so they must not share tuned tilings with
+  fp16 pools.  v1 entries in an old cache file simply never match — the
+  lookup degrades to heuristics/search, never to a wrong reuse.)  Location: ``$REPRO_AUTOTUNE_CACHE`` if set, else
   ``~/.cache/repro/attention_autotune.json``.  Writes are atomic
   (tmp + rename) so concurrent runs can share one cache file.
 
@@ -37,7 +40,7 @@ from typing import Callable
 
 CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
 SEARCH_ENV = "REPRO_AUTOTUNE"
-KEY_VERSION = 1
+KEY_VERSION = 2
 
 # EV_AUTOTUNE_HIT values (mirrored in core/events.py labels)
 HIT_WARM = 1       # persisted search result reused (no re-search)
@@ -67,10 +70,11 @@ def cache_path() -> pathlib.Path:
 
 
 def tune_key(variant: str, *, head_dim: int, kv_heads: int, block_size: int,
-             window: int | None, dtype: str, platform: str) -> str:
+             window: int | None, dtype: str, platform: str,
+             kv_dtype: str = "fp16") -> str:
     w = "none" if window is None else str(window)
     return (f"v{KEY_VERSION}|{variant}|hd{head_dim}|kh{kv_heads}"
-            f"|bs{block_size}|w{w}|{dtype}|{platform}")
+            f"|bs{block_size}|w{w}|{dtype}|{kv_dtype}|{platform}")
 
 
 def clear_memory() -> None:
@@ -126,7 +130,8 @@ def default_params(variant: str) -> dict:
 
 
 def _measure_default(variant: str, *, head_dim: int, kv_heads: int,
-                     block_size: int, window: int | None, dtype: str):
+                     block_size: int, window: int | None, dtype: str,
+                     kv_dtype: str = "fp16"):
     """Build a measure closure over synthetic inputs at serve-like scale.
 
     Concrete (non-traced) arrays execute eagerly, so this works even when
@@ -156,7 +161,14 @@ def _measure_default(variant: str, *, head_dim: int, kv_heads: int,
     bs = max(block_size, 1)
     nb, w, d = 16, 4, head_dim
     kp = jax.random.normal(key, (nb, bs, kv_heads, d), dt)
-    cache = {"k": kp, "v": kp}
+    if kv_dtype != "fp16":
+        # time what will actually run: a quantized pool with scale leaves
+        from repro.core import quant
+
+        qv, sc = quant.kv_quantize(kp, kv_dtype)
+        cache = {"k": qv, "v": qv, "k_scale": sc, "v_scale": sc}
+    else:
+        cache = {"k": kp, "v": kp}
     bt = jnp.tile(jnp.arange(1, w + 1, dtype=jnp.int32), (2, 1))
 
     if variant == "paged_span":
@@ -190,7 +202,8 @@ def _measure_default(variant: str, *, head_dim: int, kv_heads: int,
 def params_for(variant: str, *, head_dim: int, kv_heads: int,
                block_size: int, window: int | None, dtype: str,
                platform: str,
-               measure: Callable[[dict], float] | None = None) -> dict:
+               measure: Callable[[dict], float] | None = None,
+               kv_dtype: str = "fp16") -> dict:
     """Tuned kernel parameters for one (variant, shape, platform) point.
 
     Lookup order: in-process memo -> disk cache -> (search if
@@ -201,7 +214,7 @@ def params_for(variant: str, *, head_dim: int, kv_heads: int,
 
     key = tune_key(variant, head_dim=head_dim, kv_heads=kv_heads,
                    block_size=block_size, window=window, dtype=dtype,
-                   platform=platform)
+                   platform=platform, kv_dtype=kv_dtype)
     search = os.environ.get(SEARCH_ENV, "") == "search"
 
     entry = _memory.get(key)
@@ -225,7 +238,8 @@ def params_for(variant: str, *, head_dim: int, kv_heads: int,
     if measure is None:
         measure = _measure_default(variant, head_dim=head_dim,
                                    kv_heads=kv_heads, block_size=block_size,
-                                   window=window, dtype=dtype)
+                                   window=window, dtype=dtype,
+                                   kv_dtype=kv_dtype)
     timed = [(measure(dict(c)), i) for i, c in enumerate(cands)]
     best_t, best_i = min(timed)
     entry = {

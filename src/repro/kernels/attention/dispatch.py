@@ -88,13 +88,16 @@ def _platform() -> str:
 def resolve(mode: str, variant: str, *, head_dim: int, kv_heads: int,
             dtype: str, window: int | None = None, block_size: int = 0,
             supported: bool = True, why: str = "",
-            platform: str | None = None, measure=None) -> KernelDecision:
+            platform: str | None = None, measure=None,
+            kv_dtype: str = "fp16") -> KernelDecision:
     """Decide pallas-vs-XLA for one attention call site.
 
     ``supported``/``why`` carry call-site constraints the dispatcher cannot
     see (head-dim sharding, non-array positions, ...).  ``platform`` is
     injectable so the TPU dispatch table is testable off-TPU.  Pallas
-    decisions carry tuned tiling parameters from the autotune layer.
+    decisions carry tuned tiling parameters from the autotune layer;
+    ``kv_dtype`` is the KV *storage* dtype (the paged variants fuse dequant,
+    so int8 and fp16 pools tune — and cache — separately).
     """
     if mode not in MODES:
         raise ValueError(f"kernel_mode {mode!r}: expected one of {MODES}")
@@ -116,6 +119,7 @@ def resolve(mode: str, variant: str, *, head_dim: int, kv_heads: int,
     params = autotune.params_for(
         variant, head_dim=head_dim, kv_heads=kv_heads, block_size=block_size,
         window=window, dtype=str(dtype), platform=plat, measure=measure,
+        kv_dtype=kv_dtype,
     )
     reason = "auto: tpu" if mode == "auto" else "mode=pallas"
     return KernelDecision(variant, "pallas", params=params, reason=reason)
@@ -135,6 +139,7 @@ def engine_plan(cfg, *, block_size: int = 0, hd_shards: int = 1,
             dtype=cfg.dtype, window=cfg.attention_window,
             block_size=block_size, supported=shard_ok, why=why,
             platform=platform,
+            kv_dtype=getattr(cfg, "kv_dtype", "fp16"),
         )
         for variant in VARIANTS
     }

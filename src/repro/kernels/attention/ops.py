@@ -52,6 +52,15 @@ def flash_attention(
     return jnp.swapaxes(out[:, :, :sq], 1, 2)
 
 
+def _scale_pages(cache):
+    """Quantized pools: head-major [Hkv, NB, bs] scale pages for the kernels
+    (empty kwargs for native pools — the static `quant` flag stays False)."""
+    if "k_scale" not in cache:
+        return {}
+    return {"k_scales": jnp.transpose(cache["k_scale"], (2, 0, 1)),
+            "v_scales": jnp.transpose(cache["v_scale"], (2, 0, 1))}
+
+
 @functools.partial(jax.jit, static_argnames=("window", "interpret"))
 def paged_attention(cache, q, block_tables, index, *, window: int | None = None,
                     interpret: bool | None = None):
@@ -73,6 +82,7 @@ def paged_attention(cache, q, block_tables, index, *, window: int | None = None,
     out = paged_decode_fwd(
         qt, kp, vp, jnp.asarray(block_tables, jnp.int32),
         jnp.asarray(index, jnp.int32), window=window, interpret=interpret,
+        **_scale_pages(cache),
     )
     return out.reshape(b, 1, hq, d)
 
@@ -107,6 +117,7 @@ def paged_span_attention(cache, q, block_tables, row_start, row_len, *,
         qt, kp, vp, jnp.asarray(block_tables, jnp.int32),
         jnp.asarray(row_start, jnp.int32), jnp.asarray(row_len, jnp.int32),
         group=g, window=window, block_q=block_q, interpret=interpret,
+        **_scale_pages(cache),
     )
     out = out[:, :, :qg].reshape(b, hkv, qlen, g, d).transpose(0, 2, 1, 3, 4)
     return out.reshape(b, qlen, hq, d)
@@ -123,7 +134,7 @@ def paged_attention_sharded(cache, q, block_tables, index, *,
     parallel, the all-reduce happens later in the output projection.
     """
     from repro.compat import shard_map
-    from repro.models.cache_utils import PAGED_POOL_AXES
+    from repro.models.cache_utils import PAGED_POOL_AXES, PAGED_SCALE_AXES
 
     kv_spec = rules.pspec(PAGED_POOL_AXES)  # [NB, bs, Kh, D] pool sharding
     q_spec = P(None, None, kv_spec[2], kv_spec[3])  # [B, 1, Hq, D]
@@ -131,17 +142,23 @@ def paged_attention_sharded(cache, q, block_tables, index, *,
     shards = rules.axis_size(kv_spec[2]) if kv_spec[2] is not None else 1
     if kv_spec[2] is not None and hkv % shards:
         raise ValueError(f"kv heads {hkv} not divisible by {shards}-way shard")
+    names = [n for n in ("k", "v", "k_scale", "v_scale") if n in cache]
+    # scale leaves shard on kv-heads alongside their pages
+    sc_spec = rules.pspec(PAGED_SCALE_AXES)
+    leaf_specs = tuple(kv_spec if n in ("k", "v") else sc_spec for n in names)
 
-    def per_shard(kp, vp, qs, bt, ix):
-        return paged_attention({"k": kp, "v": vp}, qs, bt, ix,
+    def per_shard(*args):
+        entry = dict(zip(names, args[:len(names)]))
+        qs, bt, ix = args[len(names):]
+        return paged_attention(entry, qs, bt, ix,
                                window=window, interpret=interpret)
 
     fn = shard_map(
         per_shard, mesh=rules.mesh,
-        in_specs=(kv_spec, kv_spec, q_spec, P(None, None), P(None)),
+        in_specs=leaf_specs + (q_spec, P(None, None), P(None)),
         out_specs=q_spec,
     )
-    return fn(cache["k"], cache["v"], q, block_tables, index)
+    return fn(*(cache[n] for n in names), q, block_tables, index)
 
 
 def paged_span_attention_sharded(cache, q, block_tables, row_start, row_len, *,
@@ -153,7 +170,7 @@ def paged_span_attention_sharded(cache, q, block_tables, row_start, row_len, *,
     Hq split follows a contiguous Hkv split), with the span registers
     replicated — heads stay embarrassingly parallel across queries."""
     from repro.compat import shard_map
-    from repro.models.cache_utils import PAGED_POOL_AXES
+    from repro.models.cache_utils import PAGED_POOL_AXES, PAGED_SCALE_AXES
 
     kv_spec = rules.pspec(PAGED_POOL_AXES)
     q_spec = P(None, None, kv_spec[2], kv_spec[3])
@@ -161,15 +178,20 @@ def paged_span_attention_sharded(cache, q, block_tables, row_start, row_len, *,
     shards = rules.axis_size(kv_spec[2]) if kv_spec[2] is not None else 1
     if kv_spec[2] is not None and hkv % shards:
         raise ValueError(f"kv heads {hkv} not divisible by {shards}-way shard")
+    names = [n for n in ("k", "v", "k_scale", "v_scale") if n in cache]
+    sc_spec = rules.pspec(PAGED_SCALE_AXES)
+    leaf_specs = tuple(kv_spec if n in ("k", "v") else sc_spec for n in names)
 
-    def per_shard(kp, vp, qs, bt, st, ln):
-        return paged_span_attention({"k": kp, "v": vp}, qs, bt, st, ln,
+    def per_shard(*args):
+        entry = dict(zip(names, args[:len(names)]))
+        qs, bt, st, ln = args[len(names):]
+        return paged_span_attention(entry, qs, bt, st, ln,
                                     window=window, block_q=block_q,
                                     interpret=interpret)
 
     fn = shard_map(
         per_shard, mesh=rules.mesh,
-        in_specs=(kv_spec, kv_spec, q_spec, P(None, None), P(None), P(None)),
+        in_specs=leaf_specs + (q_spec, P(None, None), P(None), P(None)),
         out_specs=q_spec,
     )
-    return fn(cache["k"], cache["v"], q, block_tables, row_start, row_len)
+    return fn(*(cache[n] for n in names), q, block_tables, row_start, row_len)

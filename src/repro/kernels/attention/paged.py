@@ -34,9 +34,16 @@ NEG_INF = -2.0e38
 
 
 def _paged_decode_kernel(
-    bt_ref, idx_ref, q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr,
-    *, scale: float, window: int | None, bs: int, num_w: int,
+    bt_ref, idx_ref, q_ref, k_ref, v_ref, *refs,
+    scale: float, window: int | None, bs: int, num_w: int, quant: bool,
 ):
+    # quantized pools append per-(position, head) scale pages after v: the
+    # scales ride the same bt[b, w] DMA schedule as their block, and dequant
+    # is a [bs]-broadcast multiply inside the online-softmax inner loop
+    if quant:
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = refs
+    else:
+        o_ref, m_scr, l_scr, acc_scr = refs
     b = pl.program_id(0)
     w = pl.program_id(2)
 
@@ -58,6 +65,10 @@ def _paged_decode_kernel(
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32) * scale  # [G, d]
         k = k_ref[0, 0].astype(jnp.float32)  # [bs, d]
+        v = v_ref[0, 0].astype(jnp.float32)  # [bs, d]
+        if quant:
+            k = k * ks_ref[0, 0][:, None]
+            v = v * vs_ref[0, 0][:, None]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32,
@@ -75,7 +86,7 @@ def _paged_decode_kernel(
         p = jnp.exp(s - m_new)
         l_new = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
         pv = jax.lax.dot_general(
-            p, v_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            p, v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
         )
         acc_scr[...] = acc_scr[...] * corr + pv
@@ -90,31 +101,42 @@ def _paged_decode_kernel(
 
 def paged_decode_fwd(
     q, k_pages, v_pages, block_tables, index, *,
+    k_scales=None, v_scales=None,
     window: int | None = None, interpret: bool = False,
 ):
     """q: [B, Hkv, G, D]; k/v_pages: [Hkv, NB, bs, D] (head-major pool);
-    block_tables: [B, W] int32; index: [B] int32 (last valid position)."""
+    block_tables: [B, W] int32; index: [B] int32 (last valid position).
+    k/v_scales (quantized pools): [Hkv, NB, bs] f32 per-position scales,
+    DMA'd block-aligned with their pages and applied in-kernel."""
     b, hkv, g, d = q.shape
     bs = k_pages.shape[2]
     num_w = block_tables.shape[1]
     grid = (b, hkv, num_w)
+    quant = k_scales is not None
 
     kernel = functools.partial(
         _paged_decode_kernel, scale=1.0 / (d ** 0.5), window=window,
-        bs=bs, num_w=num_w,
+        bs=bs, num_w=num_w, quant=quant,
     )
+    page_spec = pl.BlockSpec((1, 1, bs, d),
+                             lambda b_, h, w, bt, idx: (h, bt[b_, w], 0, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, g, d), lambda b_, h, w, bt, idx: (b_, h, 0, 0)),
+        page_spec,
+        page_spec,
+    ]
+    operands = [q, k_pages, v_pages]
+    if quant:
+        scale_spec = pl.BlockSpec((1, 1, bs),
+                                  lambda b_, h, w, bt, idx: (h, bt[b_, w], 0))
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scales, v_scales]
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=2,
             grid=grid,
-            in_specs=[
-                pl.BlockSpec((1, 1, g, d), lambda b_, h, w, bt, idx: (b_, h, 0, 0)),
-                pl.BlockSpec((1, 1, bs, d),
-                             lambda b_, h, w, bt, idx: (h, bt[b_, w], 0, 0)),
-                pl.BlockSpec((1, 1, bs, d),
-                             lambda b_, h, w, bt, idx: (h, bt[b_, w], 0, 0)),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((1, 1, g, d),
                                    lambda b_, h, w, bt, idx: (b_, h, 0, 0)),
             scratch_shapes=[
@@ -125,15 +147,18 @@ def paged_decode_fwd(
         ),
         out_shape=jax.ShapeDtypeStruct((b, hkv, g, d), q.dtype),
         interpret=interpret,
-    )(block_tables, index, q, k_pages, v_pages)
+    )(block_tables, index, *operands)
 
 
 def _paged_span_kernel(
-    bt_ref, start_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
-    m_scr, l_scr, acc_scr,
-    *, scale: float, window: int | None, bs: int, num_w: int, gq: int,
-    bq: int,
+    bt_ref, start_ref, len_ref, q_ref, k_ref, v_ref, *refs,
+    scale: float, window: int | None, bs: int, num_w: int, gq: int,
+    bq: int, quant: bool,
 ):
+    if quant:
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = refs
+    else:
+        o_ref, m_scr, l_scr, acc_scr = refs
     b = pl.program_id(0)
     iq = pl.program_id(2)
     w = pl.program_id(3)
@@ -159,6 +184,10 @@ def _paged_span_kernel(
     def _compute():
         q = q_ref[0, 0].astype(jnp.float32) * scale  # [bq, d]
         k = k_ref[0, 0].astype(jnp.float32)  # [bs, d]
+        v = v_ref[0, 0].astype(jnp.float32)  # [bs, d]
+        if quant:
+            k = k * ks_ref[0, 0][:, None]
+            v = v * vs_ref[0, 0][:, None]
         s = jax.lax.dot_general(
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32,
@@ -180,7 +209,7 @@ def _paged_span_kernel(
         p = jnp.exp(s - m_new)
         l_new = l_scr[...] * corr + jnp.sum(p, axis=1, keepdims=True)
         pv = jax.lax.dot_general(
-            p, v_ref[0, 0].astype(jnp.float32), (((1,), (0,)), ((), ())),
+            p, v, (((1,), (0,)), ((), ())),
             preferred_element_type=jnp.float32,
         )
         acc_scr[...] = acc_scr[...] * corr + pv
@@ -195,13 +224,15 @@ def _paged_span_kernel(
 
 def paged_span_fwd(
     q, k_pages, v_pages, block_tables, row_start, row_len, *,
-    group: int, window: int | None = None, block_q: int | None = None,
+    group: int, k_scales=None, v_scales=None,
+    window: int | None = None, block_q: int | None = None,
     interpret: bool = False,
 ):
     """q: [B, Hkv, Q*G, D] (query-major fold: row q*G+g is query q, group g);
     k/v_pages: [Hkv, NB, bs, D]; block_tables: [B, W];
     row_start/row_len: [B] int32.  Rows beyond row_len are garbage by
-    contract (the engine discards them).
+    contract (the engine discards them).  k/v_scales (quantized pools):
+    [Hkv, NB, bs] f32, fetched alongside their pages and applied in-kernel.
 
     ``block_q`` tiles the folded Q*G dim over its own grid axis; the
     caller (ops.py) pads Q*G to a block multiple.  None keeps one tile.
@@ -213,24 +244,32 @@ def paged_span_fwd(
     assert qg % bq == 0, "ops.py must pad the folded query dim to a block multiple"
     nq = qg // bq
     grid = (b, hkv, nq, num_w)
+    quant = k_scales is not None
 
     kernel = functools.partial(
         _paged_span_kernel, scale=1.0 / (d ** 0.5), window=window,
-        bs=bs, num_w=num_w, gq=group, bq=bq,
+        bs=bs, num_w=num_w, gq=group, bq=bq, quant=quant,
     )
+    page_spec = pl.BlockSpec((1, 1, bs, d),
+                             lambda b_, h, i, w, bt, st, ln: (h, bt[b_, w], 0, 0))
+    in_specs = [
+        pl.BlockSpec((1, 1, bq, d),
+                     lambda b_, h, i, w, bt, st, ln: (b_, h, i, 0)),
+        page_spec,
+        page_spec,
+    ]
+    operands = [q, k_pages, v_pages]
+    if quant:
+        scale_spec = pl.BlockSpec(
+            (1, 1, bs), lambda b_, h, i, w, bt, st, ln: (h, bt[b_, w], 0))
+        in_specs += [scale_spec, scale_spec]
+        operands += [k_scales, v_scales]
     return pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
             num_scalar_prefetch=3,
             grid=grid,
-            in_specs=[
-                pl.BlockSpec((1, 1, bq, d),
-                             lambda b_, h, i, w, bt, st, ln: (b_, h, i, 0)),
-                pl.BlockSpec((1, 1, bs, d),
-                             lambda b_, h, i, w, bt, st, ln: (h, bt[b_, w], 0, 0)),
-                pl.BlockSpec((1, 1, bs, d),
-                             lambda b_, h, i, w, bt, st, ln: (h, bt[b_, w], 0, 0)),
-            ],
+            in_specs=in_specs,
             out_specs=pl.BlockSpec((1, 1, bq, d),
                                    lambda b_, h, i, w, bt, st, ln: (b_, h, i, 0)),
             scratch_shapes=[
@@ -241,4 +280,4 @@ def paged_span_fwd(
         ),
         out_shape=jax.ShapeDtypeStruct((b, hkv, qg, d), q.dtype),
         interpret=interpret,
-    )(block_tables, row_start, row_len, q, k_pages, v_pages)
+    )(block_tables, row_start, row_len, *operands)

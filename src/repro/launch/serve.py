@@ -142,6 +142,12 @@ def main(argv=None):
                         "= Pallas where shape/platform allow, pallas = "
                         "force the kernels (interpret mode off-TPU), xla "
                         "= always the gather/SDPA path")
+    p.add_argument("--kv-dtype", default="",
+                   choices=["fp16", "int8", "fp8"],
+                   help="KV block-pool storage dtype (docs/paged_cache.md): "
+                        "fp16 = native model dtype, int8/fp8 = quantized "
+                        "blocks with per-(position, kv-head) scales, dequant "
+                        "fused into the paged/span attention paths")
     p.add_argument("--trace", action="store_true")
     p.add_argument("--flush-every", type=int, default=0,
                    help="stream the trace to disk every N decode iterations")
@@ -173,6 +179,8 @@ def main(argv=None):
     cfg = reduced(get_config(args.arch))
     if args.kernel_mode:
         cfg = cfg.replace(kernel_mode=args.kernel_mode)
+    if args.kv_dtype:
+        cfg = cfg.replace(kv_dtype=args.kv_dtype)
     mesh = (make_mesh(mesh_shape, ("data", "model"))
             if mesh_shape is not None else None)
     model = build_model(cfg)
@@ -248,7 +256,9 @@ def main(argv=None):
           f"(host syncs: {stats.get('host_syncs', '?')}; CPU smoke scale)")
     if args.mode != "static" and engine.pool is not None:
         print(f"[serve] paged pool: {engine.num_blocks - 1} blocks x "
-              f"{engine.block_size} tokens; peak {stats['peak_blocks']} in use, "
+              f"{engine.block_size} tokens ({engine.pool.kv_dtype} storage, "
+              f"{engine.kv_bytes_per_token} B/token); "
+              f"peak {stats['peak_blocks']} in use, "
               f"{stats['prefix_hit_tokens']} prefix-hit tokens, "
               f"{stats['preemptions']} preemptions, "
               f"{stats.get('evictions', 0)} cache evictions")

@@ -25,9 +25,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import quant
 from repro.kernels.attention import dispatch as kdispatch
 from repro.models import cache_utils
-from repro.models.cache_utils import PAGED_POOL_AXES
+from repro.models.cache_utils import PAGED_POOL_AXES, PAGED_SCALE_AXES
 from repro.models.layers import accum_dtype, dense, dense_decl, rope
 from repro.models.params import ParamDecl
 from repro.sharding.partition import constrain, current_rules
@@ -237,8 +238,23 @@ def paged_cache_spec(cfg, num_blocks: int, block_size: int, dtype):
     """Pooled KV storage for ONE layer: ``[num_blocks, block_size, Kh, D]``.
     No batch dim — requests reference blocks through per-slot block tables,
     and SWA archs store absolute positions (window enforced by masking, not
-    a ring), so one layout serves full and sliding-window attention."""
+    a ring), so one layout serves full and sliding-window attention.
+
+    Quantized pools (``cfg.kv_dtype`` int8/fp8) store the data leaves in the
+    storage dtype and carry per-(position, kv-head) f32 scales as sibling
+    ``k_scale``/``v_scale`` leaves ``[num_blocks, block_size, Kh]`` — same
+    block/position layout, so block tables, prefix hits, preemption and the
+    engine's scatter/gather treat them like any other pool leaf."""
     kv = (num_blocks, block_size, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.kv_dtype != "fp16":
+        sd = quant.storage_dtype(cfg.kv_dtype)
+        sc = (num_blocks, block_size, cfg.num_kv_heads)
+        return {
+            "k": jax.ShapeDtypeStruct(kv, sd),
+            "v": jax.ShapeDtypeStruct(kv, sd),
+            "k_scale": jax.ShapeDtypeStruct(sc, jnp.float32),
+            "v_scale": jax.ShapeDtypeStruct(sc, jnp.float32),
+        }
     return {
         "k": jax.ShapeDtypeStruct(kv, dtype),
         "v": jax.ShapeDtypeStruct(kv, dtype),
@@ -255,6 +271,21 @@ CACHE_AXES = {
 PAGED_CACHE_AXES = {"k": PAGED_POOL_AXES, "v": PAGED_POOL_AXES}
 
 PAGED_LEAF_MASK = {"k": True, "v": True}
+
+
+def paged_cache_axes(cfg) -> dict:
+    """Logical axes per pool leaf, kv_dtype-aware (scale leaves have no
+    head_dim axis but shard on kv-heads alongside the data leaves)."""
+    axes = dict(PAGED_CACHE_AXES)
+    if cfg.kv_dtype != "fp16":
+        axes["k_scale"] = PAGED_SCALE_AXES
+        axes["v_scale"] = PAGED_SCALE_AXES
+    return axes
+
+
+def paged_leaf_mask(cfg) -> dict:
+    """Which per-layer cache-entry leaves live in the paged pool."""
+    return {name: True for name in paged_cache_axes(cfg)}
 
 
 def attention_block(
@@ -323,6 +354,13 @@ def attention_block(
             block_kv=cfg.attn_block_kv, kernel_mode=kdispatch.mode_from(cfg),
         )
         new_cache = _build_cache(k, v, window if ring else None, cache_len)
+        if not ring and cfg.kv_dtype != "fp16":
+            # paged prefill: the entry is headed for a quantized pool —
+            # quantize per-(position, kv-head) AFTER padding (all-zero pad
+            # rows deterministically become q=0 / scale=1e-12), so the
+            # engine's generic scatter moves storage-dtype leaves verbatim.
+            # Attention itself ran at full precision over the prompt.
+            new_cache = _quantize_entry(new_cache, cfg.kv_dtype)
     elif index is None:
         o, new_cache = _chunk_attend(q, k, v, cache, positions, window, cfg)
     elif block_tables is not None and row_len is not None:
@@ -364,6 +402,24 @@ def _build_cache(k, v, window, cache_len=None):
     return {"k": k_t, "v": v_t}
 
 
+def _quantize_entry(entry, kv_dtype: str):
+    """{"k","v"} [B, S, Kh, D] -> quantized entry with scale leaves."""
+    out = {}
+    for name in ("k", "v"):
+        qv, sc = quant.kv_quantize(entry[name], kv_dtype)
+        out[name] = qv
+        out[name + "_scale"] = sc
+    return out
+
+
+def _dequantize_entry(entry, dtype):
+    """Inverse of :func:`_quantize_entry` (identity for native entries)."""
+    if "k_scale" not in entry:
+        return entry
+    return {name: quant.kv_dequantize(entry[name], entry[name + "_scale"], dtype)
+            for name in ("k", "v")}
+
+
 def _decode_attend(q, k_new, v_new, cache, index, window):
     """Single-token decode against a full or ring cache.
 
@@ -391,15 +447,20 @@ def _decode_attend(q, k_new, v_new, cache, index, window):
 def _chunk_attend(q, k_new, v_new, prefix, positions, window, cfg):
     """Tail prefill against a resident prefix (prefix-cache hit).
 
-    prefix: {"k","v"} of shape [B, P, Kh, D] — the gathered prefix blocks.
+    prefix: {"k","v"} of shape [B, P, Kh, D] — the gathered prefix blocks
+    (quantized pools also carry gathered "k_scale"/"v_scale" [B, P, Kh]:
+    the prefix is dequantized for the attention math and the returned tail
+    is re-quantized so the engine scatters storage-dtype leaves).
     positions: static numpy [S] = P + arange(S) (absolute tail positions).
     Attends q over prefix ++ tail with the standard causal/window masks and
     returns ONLY the tail K/V (the engine scatters them into fresh blocks;
     the prefix blocks are shared and must never be rewritten).
     """
-    P = prefix["k"].shape[1]
-    kc = jnp.concatenate([prefix["k"].astype(k_new.dtype), k_new], axis=1)
-    vc = jnp.concatenate([prefix["v"].astype(v_new.dtype), v_new], axis=1)
+    quantized = "k_scale" in prefix
+    pfx = _dequantize_entry(prefix, k_new.dtype)
+    P = pfx["k"].shape[1]
+    kc = jnp.concatenate([pfx["k"].astype(k_new.dtype), k_new], axis=1)
+    vc = jnp.concatenate([pfx["v"].astype(v_new.dtype), v_new], axis=1)
     kc = constrain(kc, ("act_batch", None, "act_kv", None))
     vc = constrain(vc, ("act_batch", None, "act_kv", None))
     kv_pos = np.arange(P + k_new.shape[1], dtype=np.int32)
@@ -408,7 +469,10 @@ def _chunk_attend(q, k_new, v_new, prefix, positions, window, cfg):
         window=window, block_kv=cfg.attn_block_kv,
         kernel_mode=kdispatch.mode_from(cfg),
     )
-    return o, {"k": k_new, "v": v_new}
+    tail = {"k": k_new, "v": v_new}
+    if quantized:
+        tail = _quantize_entry(tail, cfg.kv_dtype)
+    return o, tail
 
 
 def _paged_decode_attend(q, k_new, v_new, cache, index, block_tables, window, cfg):
@@ -425,14 +489,21 @@ def _paged_decode_attend(q, k_new, v_new, cache, index, block_tables, window, cf
     always past the last shared block).  Retired slots point at the NULL
     block 0, so their frozen writes scribble garbage nobody reads.
     """
-    kp, vp = cache["k"], cache["v"]
-    bs = kp.shape[1]
+    bs = cache["k"].shape[1]
     B, W = block_tables.shape
     index = jnp.asarray(index, jnp.int32)
+    quantized = "k_scale" in cache
 
     # ---- write: one token per slot at table[b, index//bs], offset index%bs
-    kp, vp = cache_utils.paged_cache_write(kp, vp, k_new, v_new,
-                                           block_tables, index)
+    # (quantized pools quantize-on-write: q-values and their scales land at
+    # the same flat destination)
+    if quantized:
+        entry = cache_utils.quantized_cache_write(
+            cache, k_new, v_new, block_tables, index, cfg.kv_dtype)
+    else:
+        kp, vp = cache_utils.paged_cache_write(cache["k"], cache["v"], k_new,
+                                               v_new, block_tables, index)
+        entry = {"k": kp, "v": vp}
 
     rules = current_rules()
     kv_shards = (rules.axis_size(rules.axis("cache_kv"))
@@ -444,10 +515,10 @@ def _paged_decode_attend(q, k_new, v_new, cache, index, block_tables, window, cf
     # the head-parallel kernel — a plain pallas_call over a D-sharded pool
     # would hand XLA an unpartitionable custom call
     decision = kdispatch.resolve(
-        kdispatch.mode_from(cfg), "paged_decode", head_dim=kp.shape[3],
-        kv_heads=kp.shape[2], dtype=str(q.dtype), window=window,
+        kdispatch.mode_from(cfg), "paged_decode", head_dim=entry["k"].shape[3],
+        kv_heads=entry["k"].shape[2], dtype=str(q.dtype), window=window,
         block_size=bs, supported=hd_shards == 1,
-        why=f"head_dim sharded {hd_shards}-way",
+        why=f"head_dim sharded {hd_shards}-way", kv_dtype=cfg.kv_dtype,
     )
     if decision.backend == "pallas":
         from repro.kernels.attention import ops as att_ops
@@ -456,17 +527,14 @@ def _paged_decode_attend(q, k_new, v_new, cache, index, block_tables, window, cf
             # per-shard head slice: each model-axis shard runs the kernel
             # over its own kv heads (and the aligned q-head group)
             o = att_ops.paged_attention_sharded(
-                {"k": kp, "v": vp}, q, block_tables, index, window=window,
-                rules=rules)
+                entry, q, block_tables, index, window=window, rules=rules)
         else:
-            o = att_ops.paged_attention({"k": kp, "v": vp}, q, block_tables,
-                                        index, window=window)
+            o = att_ops.paged_attention(entry, q, block_tables, index,
+                                        window=window)
     else:
         # ---- read: gather the slot's blocks into its logical [W*bs] view
-        kg = kp[block_tables].reshape(B, W * bs, *kp.shape[2:])
-        vg = vp[block_tables].reshape(B, W * bs, *vp.shape[2:])
-        kg = constrain(kg, ("act_batch", None, "act_kv", "cache_hd"))
-        vg = constrain(vg, ("act_batch", None, "act_kv", "cache_hd"))
+        # (quantized: gather q-values + scales, dequant the gathered view)
+        kg, vg = _gathered_view(entry, block_tables, q.dtype)
         kv_pos = jnp.broadcast_to(
             jnp.arange(W * bs, dtype=jnp.int32)[None], (B, W * bs))
         kv_valid = kv_pos <= index[:, None]
@@ -475,7 +543,24 @@ def _paged_decode_attend(q, k_new, v_new, cache, index, block_tables, window, cf
             q, kg, vg, q_pos=q_pos, kv_pos=kv_pos, causal=True,
             window=window, kv_valid=kv_valid, block_kv=0,
         )
-    return o, {"k": kp, "v": vp}
+    return o, entry
+
+
+def _gathered_view(entry, block_tables, dtype):
+    """Gather a pool entry into per-slot logical [B, W*bs, Kh, D] K/V views,
+    dequantizing through the gathered scales when the entry is quantized."""
+    b, w = block_tables.shape
+    bs = entry["k"].shape[1]
+    out = []
+    for name in ("k", "v"):
+        leaf = entry[name]
+        g = leaf[block_tables].reshape(b, w * bs, *leaf.shape[2:])
+        if name + "_scale" in entry:
+            sleaf = entry[name + "_scale"]
+            sc = sleaf[block_tables].reshape(b, w * bs, *sleaf.shape[2:])
+            g = quant.kv_dequantize(g, sc, dtype)
+        out.append(constrain(g, ("act_batch", None, "act_kv", "cache_hd")))
+    return out
 
 
 def _paged_span_attend(q, k_new, v_new, cache, row_start, row_len, positions,
@@ -503,11 +588,18 @@ def _paged_span_attend(q, k_new, v_new, cache, row_start, row_len, positions,
     and absolute-position masking — unlike a ring — can never alias the
     residue back into causal range.
     """
-    kp, vp = cache["k"], cache["v"]
-    bs = kp.shape[1]
+    bs = cache["k"].shape[1]
     b, w = block_tables.shape
-    kp, vp = cache_utils.paged_span_write(kp, vp, k_new, v_new,
-                                          block_tables, row_start, row_len)
+    quantized = "k_scale" in cache
+    if quantized:
+        entry = cache_utils.quantized_span_write(
+            cache, k_new, v_new, block_tables, row_start, row_len,
+            cfg.kv_dtype)
+    else:
+        kp, vp = cache_utils.paged_span_write(cache["k"], cache["v"], k_new,
+                                              v_new, block_tables, row_start,
+                                              row_len)
+        entry = {"k": kp, "v": vp}
 
     rules = current_rules()
     kv_shards = (rules.axis_size(rules.axis("cache_kv"))
@@ -515,32 +607,29 @@ def _paged_span_attend(q, k_new, v_new, cache, row_start, row_len, positions,
     hd_shards = (rules.axis_size(rules.axis("cache_hd"))
                  if rules is not None else 1)
     decision = kdispatch.resolve(
-        kdispatch.mode_from(cfg), "paged_span", head_dim=kp.shape[3],
-        kv_heads=kp.shape[2], dtype=str(q.dtype), window=window,
+        kdispatch.mode_from(cfg), "paged_span", head_dim=entry["k"].shape[3],
+        kv_heads=entry["k"].shape[2], dtype=str(q.dtype), window=window,
         block_size=bs, supported=hd_shards == 1,
-        why=f"head_dim sharded {hd_shards}-way",
+        why=f"head_dim sharded {hd_shards}-way", kv_dtype=cfg.kv_dtype,
     )
     if decision.backend == "pallas":
         from repro.kernels.attention import ops as att_ops
 
         if kv_shards > 1:
             o = att_ops.paged_span_attention_sharded(
-                {"k": kp, "v": vp}, q, block_tables, row_start, row_len,
+                entry, q, block_tables, row_start, row_len,
                 window=window, rules=rules,
                 block_q=decision.params.get("block_q"))
         else:
             o = att_ops.paged_span_attention(
-                {"k": kp, "v": vp}, q, block_tables, row_start, row_len,
+                entry, q, block_tables, row_start, row_len,
                 window=window, block_q=decision.params.get("block_q"))
     else:
-        kg = kp[block_tables].reshape(b, w * bs, *kp.shape[2:])
-        vg = vp[block_tables].reshape(b, w * bs, *vp.shape[2:])
-        kg = constrain(kg, ("act_batch", None, "act_kv", "cache_hd"))
-        vg = constrain(vg, ("act_batch", None, "act_kv", "cache_hd"))
+        kg, vg = _gathered_view(entry, block_tables, q.dtype)
         kv_pos = jnp.broadcast_to(
             jnp.arange(w * bs, dtype=jnp.int32)[None], (b, w * bs))
         o = multi_head_attention(
             q, kg, vg, q_pos=positions, kv_pos=kv_pos, causal=True,
             window=window, block_kv=0,
         )
-    return o, {"k": kp, "v": vp}
+    return o, entry

@@ -16,10 +16,14 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro.core import quant
 from repro.sharding.partition import constrain
 
 # Logical axes of ONE layer's pooled KV leaf [num_blocks, block_size, Kh, D].
 PAGED_POOL_AXES = (None, None, "cache_kv", "cache_hd")
+# Logical axes of ONE layer's pooled scale leaf [num_blocks, block_size, Kh]
+# (quantized pools only; sharded on kv-heads alongside the data leaves).
+PAGED_SCALE_AXES = (None, None, "cache_kv")
 # Logical axes of ONE layer's contiguous KV leaf [B, C, Kh, D].
 SLOT_CACHE_AXES = ("cache_batch", "cache_seq", "cache_kv", "cache_hd")
 
@@ -90,14 +94,8 @@ def paged_span_write(kp, vp, k_new, v_new, block_tables, row_start, row_len):
     """
     nb, bs = kp.shape[0], kp.shape[1]
     b, q = k_new.shape[0], k_new.shape[1]
-    j = jnp.arange(q, dtype=jnp.int32)[None, :]  # [1, Q]
-    pos = row_start[:, None] + j  # [B, Q] absolute positions
-    w_raw = pos // bs
-    valid = (j < row_len[:, None]) & (w_raw < block_tables.shape[1])
-    w = jnp.clip(w_raw, 0, block_tables.shape[1] - 1)
-    blk = jnp.take_along_axis(block_tables, w, axis=1)  # [B, Q]
     # padding lands in the NULL block's [0, bs) range (garbage nobody reads)
-    dest = jnp.where(valid, blk * bs + pos % bs, pos % bs).reshape(-1)
+    dest = _span_dest(block_tables, row_start, row_len, q, bs)
     kf = kp.reshape((nb * bs,) + kp.shape[2:])
     vf = vp.reshape((nb * bs,) + vp.shape[2:])
     kf = kf.at[dest].set(k_new.reshape((b * q,) + k_new.shape[2:]).astype(kf.dtype))
@@ -105,6 +103,63 @@ def paged_span_write(kp, vp, k_new, v_new, block_tables, row_start, row_len):
     kp = constrain(kf.reshape(kp.shape), PAGED_POOL_AXES)
     vp = constrain(vf.reshape(vp.shape), PAGED_POOL_AXES)
     return kp, vp
+
+
+def _span_dest(block_tables, row_start, row_len, q, bs):
+    """Flat pool destinations for a per-row query span (see paged_span_write)."""
+    j = jnp.arange(q, dtype=jnp.int32)[None, :]  # [1, Q]
+    pos = row_start[:, None] + j  # [B, Q] absolute positions
+    w_raw = pos // bs
+    valid = (j < row_len[:, None]) & (w_raw < block_tables.shape[1])
+    w = jnp.clip(w_raw, 0, block_tables.shape[1] - 1)
+    blk = jnp.take_along_axis(block_tables, w, axis=1)  # [B, Q]
+    return jnp.where(valid, blk * bs + pos % bs, pos % bs).reshape(-1)
+
+
+def _scatter_pool(leaf, new_flat, dest, axes):
+    flat = leaf.reshape((leaf.shape[0] * leaf.shape[1],) + leaf.shape[2:])
+    flat = flat.at[dest].set(new_flat.astype(leaf.dtype))
+    return constrain(flat.reshape(leaf.shape), axes)
+
+
+def quantized_span_write(cache, k_new, v_new, block_tables, row_start, row_len,
+                         kv_dtype: str):
+    """paged_span_write for a quantized pool: quantize-on-write.
+
+    ``cache`` holds the per-layer quantized entry — data leaves ``k``/``v``
+    [NB, bs, Kh, D] in storage dtype plus scale leaves ``k_scale``/
+    ``v_scale`` [NB, bs, Kh] f32.  Each incoming token row is quantized
+    per-(position, kv-head) and its q-values and scales land at the same
+    flat destination, so a read always sees a matching (q, scale) pair.
+    """
+    bs = cache["k"].shape[1]
+    b, q = k_new.shape[0], k_new.shape[1]
+    dest = _span_dest(block_tables, row_start, row_len, q, bs)
+    out = dict(cache)
+    for name, new in (("k", k_new), ("v", v_new)):
+        qv, sc = quant.kv_quantize(new, kv_dtype)
+        out[name] = _scatter_pool(
+            cache[name], qv.reshape((b * q,) + qv.shape[2:]), dest,
+            PAGED_POOL_AXES)
+        out[name + "_scale"] = _scatter_pool(
+            cache[name + "_scale"], sc.reshape((b * q,) + sc.shape[2:]), dest,
+            PAGED_SCALE_AXES)
+    return out
+
+
+def quantized_cache_write(cache, k_new, v_new, block_tables, index,
+                          kv_dtype: str):
+    """paged_cache_write for a quantized pool (one token per slot)."""
+    bs = cache["k"].shape[1]
+    blk = jnp.take_along_axis(block_tables, (index // bs)[:, None], axis=1)[:, 0]
+    dest = blk * bs + index % bs  # [B] flat positions
+    out = dict(cache)
+    for name, new in (("k", k_new), ("v", v_new)):
+        qv, sc = quant.kv_quantize(new[:, 0], kv_dtype)
+        out[name] = _scatter_pool(cache[name], qv, dest, PAGED_POOL_AXES)
+        out[name + "_scale"] = _scatter_pool(
+            cache[name + "_scale"], sc, dest, PAGED_SCALE_AXES)
+    return out
 
 
 def paged_cache_write(kp, vp, k_new, v_new, block_tables, index):

@@ -169,13 +169,13 @@ def _layer_paged_spec(cfg, kind, num_slots, num_blocks, block_size, dtype):
 def _layer_paged_mask(cfg, kind, dtype):
     if kind in ("ssm", "rec"):
         return jax.tree.map(lambda _: False, layer_cache_spec(cfg, kind, 1, 1, dtype))
-    return dict(attn_mod.PAGED_LEAF_MASK)
+    return attn_mod.paged_leaf_mask(cfg)
 
 
-def _layer_paged_axes(kind: str):
+def _layer_paged_axes(cfg, kind: str):
     if kind in ("ssm", "rec"):
         return layer_cache_axes(kind)
-    return dict(attn_mod.PAGED_CACHE_AXES)
+    return attn_mod.paged_cache_axes(cfg)
 
 
 def _per_unit(cfg, kinds, fn):
@@ -216,10 +216,10 @@ def stack_paged_cache_axes(cfg):
     leaves (replicated batch) on the mesh."""
     kinds = unit_kinds(cfg)
     _, rem = scan_counts(cfg)
-    axes = {"units": _stack_axes(_per_unit(cfg, kinds, _layer_paged_axes), 0)}
+    mk = lambda k: _layer_paged_axes(cfg, k)
+    axes = {"units": _stack_axes(_per_unit(cfg, kinds, mk), 0)}
     if rem:
-        axes["tail"] = _stack_axes(
-            _per_unit(cfg, kinds[:rem], _layer_paged_axes), 0)
+        axes["tail"] = _stack_axes(_per_unit(cfg, kinds[:rem], mk), 0)
     return axes
 
 

@@ -16,17 +16,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+# Shared with the quantized KV block pool; re-exported so existing callers
+# keep their import site.
+from repro.core.quant import dequantize_int8, quantize_int8
 
-def quantize_int8(x):
-    """f32 -> (int8, scale).  Symmetric per-tensor."""
-    amax = jnp.max(jnp.abs(x))
-    scale = jnp.maximum(amax / 127.0, 1e-12)
-    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
-    return q, scale
-
-
-def dequantize_int8(q, scale):
-    return q.astype(jnp.float32) * scale
+__all__ = ["quantize_int8", "dequantize_int8", "psum_compressed"]
 
 
 def psum_compressed(grads, axis_name: str, method: str = "none", error_state=None):

@@ -41,7 +41,8 @@ def _block_hash(parent_hash: int, tokens) -> int:
 class BlockPool:
     """Host-side bookkeeping for a pool of fixed-size KV-cache blocks."""
 
-    def __init__(self, num_blocks: int, block_size: int, *, tracer=None):
+    def __init__(self, num_blocks: int, block_size: int, *, tracer=None,
+                 kv_dtype: str = "fp16", block_bytes: int = 0):
         if num_blocks < 2:
             raise ValueError("num_blocks must be >= 2 (block 0 is reserved)")
         if block_size < 1:
@@ -49,6 +50,11 @@ class BlockPool:
         self.num_blocks = int(num_blocks)
         self.block_size = int(block_size)
         self.tracer = tracer
+        # storage metadata: pure reporting (the device-side leaves are the
+        # engine's problem) — kv_dtype names the pool storage, block_bytes
+        # is bytes per block across all layers/leaves incl. scale leaves
+        self.kv_dtype = kv_dtype
+        self.block_bytes = int(block_bytes)
         # block 0 reserved as NULL: never allocated, never freed
         self._free: collections.deque[int] = collections.deque(
             range(1, self.num_blocks))
@@ -59,9 +65,14 @@ class BlockPool:
         self.stats = {"allocs": 0, "evictions": 0, "hit_blocks": 0}
         if tracer is not None:
             for code in (ev.EV_BLOCKS_FREE, ev.EV_BLOCKS_CACHED,
-                         ev.EV_BLOCKS_ACTIVE):
+                         ev.EV_BLOCKS_ACTIVE, ev.EV_BLOCK_DTYPE,
+                         ev.EV_POOL_ACTIVE_KIB):
                 tracer.register(code, ev.SERVE_CTR_LABELS[code])
             tracer.register(ev.EV_EVICT, "KV block evicted (block id)")
+            # punctual, once: the pool's storage dtype as a counter value so
+            # a .prv reader can tell an int8 run from an fp16 run cold
+            tracer.emit(ev.EV_BLOCK_DTYPE,
+                        ev.BLOCK_DTYPE_IDS.get(kv_dtype, 0))
 
     # ------------------------------------------------------------------
     # state queries
@@ -94,7 +105,13 @@ class BlockPool:
         if self.tracer is not None:
             self.tracer.emit(ev.EV_BLOCKS_FREE, self.num_free())
             self.tracer.emit(ev.EV_BLOCKS_CACHED, self.num_cached())
-            self.tracer.emit(ev.EV_BLOCKS_ACTIVE, self.num_active())
+            active = self.num_active()
+            self.tracer.emit(ev.EV_BLOCKS_ACTIVE, active)
+            self.tracer.emit(ev.EV_BLOCK_DTYPE,
+                             ev.BLOCK_DTYPE_IDS.get(self.kv_dtype, 0))
+            if self.block_bytes:
+                self.tracer.emit(ev.EV_POOL_ACTIVE_KIB,
+                                 active * self.block_bytes // 1024)
 
     def _evict_one(self) -> int | None:
         """Evict the LRU cached block (refcount 0), returning it reusable."""

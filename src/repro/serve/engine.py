@@ -166,7 +166,17 @@ class ContinuousServeEngine:
             raise ValueError(
                 f"num_blocks {self.num_blocks} cannot hold one max-length "
                 f"request ({self.blocks_per_slot} blocks + null + headroom)")
-        self.pool = (BlockPool(self.num_blocks, bs, tracer=tracer)
+        # pooled storage cost, from the abstract specs (covers every paged
+        # leaf incl. quantization scale leaves): bytes per block across all
+        # layers — the pool reports it as occupancy gauges / CLI stats
+        specs = self.model.paged_cache_specs(self.num_slots, self.num_blocks, bs)
+        block_bytes = sum(
+            int(np.prod(s.shape)) * jnp.dtype(s.dtype).itemsize // self.num_blocks
+            for s, m in zip(jax.tree.leaves(specs),
+                            jax.tree.leaves(self._paged_mask)) if m)
+        self.kv_bytes_per_token = block_bytes // bs if self._has_paged else 0
+        self.pool = (BlockPool(self.num_blocks, bs, tracer=tracer,
+                               kv_dtype=cfg.kv_dtype, block_bytes=block_bytes)
                      if self._has_paged else None)
         # prefix reuse needs every leaf pooled AND token-only prompts (vlm
         # patches would shift block contents off the token-hash grid)
@@ -180,7 +190,6 @@ class ContinuousServeEngine:
             admission=self if self.pool is not None else None)
 
         # --- device state: pooled caches + per-slot registers ---
-        specs = self.model.paged_cache_specs(self.num_slots, self.num_blocks, bs)
         if self.meshstate is not None:
             self._cache_sh = self.meshstate.rules.tree_shardings(
                 self.model.paged_cache_axes())
