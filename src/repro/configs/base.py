@@ -96,6 +96,11 @@ class ModelConfig:
     # Dequant is fused into the paged/span gather on both kernel paths
     # (see core/quant.py and docs/paged_cache.md).
     kv_dtype: str = "fp16"
+    # Communication/compute overlap for the sharded serve step
+    # (sharding/overlap.py): micro-batched span pipeline + two-deep host
+    # dispatch queue.  auto = on when the model mesh axis shards anything,
+    # off otherwise; the serve CLI's --overlap flag overrides this.
+    comm_overlap: str = "auto"
     # DEPRECATED: both map onto kernel_mode="pallas" in __post_init__.
     use_flash_kernel: bool = False
     use_paged_kernel: bool = False
@@ -112,6 +117,9 @@ class ModelConfig:
         if self.kv_dtype not in ("fp16", "int8", "fp8"):
             raise ValueError(
                 f"kv_dtype {self.kv_dtype!r}: expected fp16|int8|fp8")
+        if self.comm_overlap not in ("auto", "on", "off"):
+            raise ValueError(
+                f"comm_overlap {self.comm_overlap!r}: expected auto|on|off")
         if self.kv_dtype != "fp16" and self.family == "encdec":
             # cross-attention K/V lives in slot-resident caches (fully_paged()
             # is False for enc-dec); quantizing only the self-attn pool would

@@ -185,13 +185,18 @@ def serve_latency_summary(trace: Trace) -> dict:
     """Fold the per-request ``EV_REQ_TTFT_US`` / ``EV_REQ_TPOT_US`` events
     (one each per retirement) into distribution statistics for the run.
 
-    Returns ``{"ttft_us": {...}, "tpot_us": {...}, "spec": {...}}`` where the
-    latency entries hold ``count`` / ``p50`` / ``p95`` / ``max`` (floats,
-    microseconds; zeros when the trace carries no serve events) and ``spec``
-    folds the per-dispatch ``EV_SPEC_DRAFTED`` / ``EV_SPEC_ACCEPTED``
-    counters into the run's draft-acceptance rate (zeros when the run was
-    not speculative) — the summary the serve CLI prints at exit and the
-    mixed-load bench gates on.
+    Returns ``{"ttft_us": {...}, "tpot_us": {...}, "spec": {...},
+    "comm": {...}}`` where the latency entries hold ``count`` / ``p50`` /
+    ``p95`` / ``max`` (floats, microseconds; zeros when the trace carries no
+    serve events), ``spec`` folds the per-dispatch ``EV_SPEC_DRAFTED`` /
+    ``EV_SPEC_ACCEPTED`` counters into the run's draft-acceptance rate
+    (zeros when the run was not speculative), and ``comm`` folds the
+    per-dispatch ``EV_COMM_OVERLAP_US`` / ``EV_COMM_BLOCKED_US`` counters
+    (core/comm_replay.py) into the run's communication overlap fraction —
+    overlapped / (overlapped + blocked) modeled collective time, averaged
+    over tasks so the merged multi-task ``.prv`` reads the same as one
+    task's stream — the summary the serve CLI prints at exit and the
+    mixed-load / sharded benches gate on.
     """
     out: dict[str, dict] = {}
     for name, code in (("ttft_us", ev.EV_REQ_TTFT_US),
@@ -217,7 +222,32 @@ def serve_latency_summary(trace: Trace) -> dict:
         "acceptance": (float(accepted.sum() / drafted.sum())
                        if drafted.sum() else 0.0),
     }
+    out["comm"] = comm_overlap_summary(trace)
     return out
+
+
+def comm_overlap_summary(trace: Trace) -> dict:
+    """Fold the per-dispatch EV_COMM_OVERLAP_US / EV_COMM_BLOCKED_US counter
+    pairs into the run's overlap fraction.  Counters are injected once per
+    (task, thread) endpoint per dispatch, so per-endpoint sums are equal by
+    construction on a healthy trace; we average across endpoints to stay
+    invariant to the mesh shape and the number of merged segment streams
+    (the result matches the engine's own comm_overlap_us/comm_blocked_us
+    stats, which accumulate once per dispatch)."""
+    evs = trace.events
+    ov = evs[evs["type"] == ev.EV_COMM_OVERLAP_US]
+    bl = evs[evs["type"] == ev.EV_COMM_BLOCKED_US]
+    nends = max(len(np.unique(ov[["task", "thread"]])), 1) if len(ov) else 1
+    overlap_us = float(ov["value"].astype(np.int64).sum()) / nends
+    blocked_us = float(bl["value"].astype(np.int64).sum()) / nends
+    total = overlap_us + blocked_us
+    return {
+        "dispatches": int(len(ov)) // nends,
+        "overlap_us": overlap_us,
+        "blocked_us": blocked_us,
+        "overlap_fraction": (overlap_us / total) if total > 0 else 0.0,
+        "blocked_fraction": (blocked_us / total) if total > 0 else 0.0,
+    }
 
 
 # ----------------------------------------------------------------------

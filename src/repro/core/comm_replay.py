@@ -43,9 +43,15 @@ def replay_step(
     ``max_group_for_comms`` caps ring-record synthesis for very large groups
     (the events/states are always injected; only pairwise records are capped
     to keep trace sizes sane — the cap is recorded as a tag).
+
+    Ops classified ``overlapped`` by the HLO schedule (hlo_comm) keep their
+    GROUP_COMM interval but the time is booked to EV_COMM_OVERLAP_US instead
+    of EV_COMM_BLOCKED_US; the counter pair is emitted once per endpoint at
+    the window end so the split is readable per dispatch in the merged
+    ``.prv``.  Returns ``{"overlap_ns": int, "blocked_ns": int}``.
     """
     if not ops:
-        return
+        return {"overlap_ns": 0, "blocked_ns": 0}
     times = np.array([max(op.wire_bytes_per_device(), 1.0) / LINK_BW for op in ops])
     total = times.sum()
     span = (t1 - t0)
@@ -54,12 +60,17 @@ def replay_step(
     scale = frac * span / total * 1e-9 if total > 0 else 0.0
     gaps = (span - times.sum() * scale / 1e-9) / (len(ops) + 1)
 
+    overlap_ns = blocked_ns = 0
     cursor = float(t0)
     for i, op in enumerate(ops):
         dur = times[i] * scale / 1e-9  # ns
         cursor += gaps
         begin, end = int(cursor), int(cursor + max(dur, 1.0))
         cursor = end
+        if op.overlapped:
+            overlap_ns += end - begin
+        else:
+            blocked_ns += end - begin
         kind_id = ev.COLL_IDS[op.kind]
         groups = op.replica_groups or (tuple(sorted(endpoint_map)),)
         if op.kind == "collective-permute" and op.source_target_pairs:
@@ -76,6 +87,14 @@ def replay_step(
             if comm_records:
                 _inject_comms(tracer, op, group, begin, end, endpoint_map,
                               max_group_for_comms, tag=i)
+    # one OVERLAP/BLOCKED counter pair per endpoint per dispatch: the pair
+    # always lands together (possibly zero) so traces balance per dispatch
+    for task, thread in set(endpoint_map.values()):
+        tracer.inject_event(task, thread, int(t1), ev.EV_COMM_OVERLAP_US,
+                            max(overlap_ns // 1000, 1) if overlap_ns else 0)
+        tracer.inject_event(task, thread, int(t1), ev.EV_COMM_BLOCKED_US,
+                            max(blocked_ns // 1000, 1) if blocked_ns else 0)
+    return {"overlap_ns": overlap_ns, "blocked_ns": blocked_ns}
 
 
 def _inject_comms(tracer, op, group, begin, end, endpoint_map, cap, tag):

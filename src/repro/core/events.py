@@ -131,6 +131,12 @@ EV_SPEC_K = 42200018  # counter: draft span width K in effect
 # EV_BLOCKS_* gauges so equal-HBM concurrency is readable off the .prv
 EV_BLOCK_DTYPE = 42200019  # counter: pool storage dtype (BLOCK_DTYPE_IDS)
 EV_POOL_ACTIVE_KIB = 42200020  # counter: bytes held by active blocks (KiB)
+# communication/compute overlap (core/comm_replay.py): per dispatch, per
+# endpoint, the replayed collective time split by the HLO-schedule
+# classification (hlo_comm.CollectiveOp.overlapped) — the pair always lands
+# together so OVERLAP + BLOCKED == total modeled comm time for the dispatch
+EV_COMM_OVERLAP_US = 42200021  # counter: collective us hidden behind compute
+EV_COMM_BLOCKED_US = 42200022  # counter: collective us blocking compute
 BLOCK_DTYPE_IDS = {"fp16": 1, "int8": 2, "fp8": 3}
 EV_REQ_ADMIT = 40000060  # value = request id + 1 when a request enters a slot
 EV_REQ_RETIRE = 40000061  # value = request id + 1 when it completes
@@ -165,6 +171,8 @@ SERVE_CTR_LABELS = {
     EV_SPEC_K: "Spec draft span width K",
     EV_BLOCK_DTYPE: "KV block pool storage dtype (1=fp16 2=int8 3=fp8)",
     EV_POOL_ACTIVE_KIB: "KV pool active-block bytes (KiB)",
+    EV_COMM_OVERLAP_US: "Collective time overlapped with compute (us)",
+    EV_COMM_BLOCKED_US: "Collective time blocking compute (us)",
 }
 
 KERNEL_EVENT_LABELS = {

@@ -40,6 +40,19 @@ _GROUPS_V2_RE = re.compile(
     r"(?:T\((?P<perm>[\d,]+)\))?"
 )
 
+# Micro-batch pipeline stages are tagged with jax.named_scope(f"{OVERLAP_SCOPE}{i}")
+# by the serve step; the scope survives into HLO op_name metadata, including on
+# the collectives themselves (sharding/overlap.py plans the stages).
+OVERLAP_SCOPE = "ovl_mb"
+_STAGE_RE = re.compile(r'op_name="[^"]*?/(' + OVERLAP_SCOPE + r'\d+)[/"]')
+_DONE_OPERAND_RE = re.compile(r"\(\s*(?:[\w\.\[\]\{\},\s]+?\s)?%?([\w\.\-]+)")
+
+# Instructions that never represent schedulable compute (bookkeeping only).
+_TRIVIAL_OPS = frozenset({
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota",
+})
+
 
 def _type_bytes(type_str: str) -> int:
     total = 0
@@ -66,6 +79,12 @@ class CollectiveOp:
     num_groups: int
     source_target_pairs: tuple[tuple[int, int], ...] = ()
     replica_groups: tuple[tuple[int, ...], ...] = ()
+    # True when the compiled schedule hides this op behind independent
+    # compute: either an async start/done pair with compute between the two,
+    # or a sync op inside a micro-batch pipeline stage with a different
+    # stage's compute scheduled after it.
+    overlapped: bool = False
+    stage: str = ""  # pipeline stage scope ("ovl_mb0", ...) or ""
 
     def wire_bytes_per_device(self) -> float:
         """Ring/bidirectional cost model: bytes crossing one device's links.
@@ -134,21 +153,55 @@ def _parse_groups(line: str, total_devices: int | None):
 
 
 def parse_collectives(hlo_text: str, total_devices: int | None = None) -> list[CollectiveOp]:
-    """Extract every collective from optimized HLO text.
+    """Extract every collective from optimized HLO text, classified
+    overlapped-vs-blocking from the schedule.
 
-    Handles sync ops and async ``*-start`` forms (``*-done`` is skipped so
-    nothing is double-counted).
+    Handles sync ops and async ``*-start`` forms (``*-done`` closes its start
+    rather than double-counting).  Classification, per computation block in
+    schedule order:
+
+    * async pair: ``overlapped`` when >=1 compute instruction sits between
+      the ``-start`` and its ``-done`` (the backend scheduler hid it);
+    * sync op tagged with a micro-batch pipeline scope (``ovl_mb<i>``, see
+      ``sharding/overlap.py``): ``overlapped`` when a *different* stage's
+      compute is scheduled after it — the independent micro-batch work the
+      runtime can slide under the collective.
     """
     ops: list[CollectiveOp] = []
-    for line in hlo_text.splitlines():
+    # (op_index, comp_id, compute_after_check_needed stage) for the sync pass
+    sync_marks: list[tuple[int, int, int, str]] = []
+    # per-computation compute line positions: comp_id -> list[(line_no, stage)]
+    compute_lines: dict[int, list[tuple[int, str]]] = {}
+    # async starts awaiting their done: (comp_id, name) -> (op_index, n_compute)
+    pending: dict[tuple[int, str], tuple[int, int]] = {}
+    comp_id = 0
+    for line_no, line in enumerate(hlo_text.splitlines()):
+        if line and not line[0].isspace() and line.rstrip().endswith("{"):
+            comp_id += 1  # new computation block (ENTRY / fusion / while body)
+            continue
         m = _INSTR_RE.match(line)
         if not m:
             continue
         op = m.group("op")
-        base = op[:-6] if op.endswith("-start") else op
+        base = op
+        for suffix in ("-start", "-done"):
+            if op.endswith(suffix):
+                base = op[: -len(suffix)]
         if base not in COLLECTIVE_KINDS:
+            sm = _STAGE_RE.search(line)
+            if op not in _TRIVIAL_OPS:
+                compute_lines.setdefault(comp_id, []).append(
+                    (line_no, sm.group(1) if sm else "")
+                )
             continue
         if op.endswith("-done"):
+            om = _DONE_OPERAND_RE.search(line[line.find(op) + len(op):])
+            key = (comp_id, om.group(1)) if om else None
+            if key in pending:
+                idx, n_at_start = pending.pop(key)
+                n_now = len(compute_lines.get(comp_id, ()))
+                if n_now > n_at_start:
+                    ops[idx] = dataclasses.replace(ops[idx], overlapped=True)
             continue
         type_str = m.group("type")
         if op.endswith("-start") and type_str.lstrip().startswith("("):
@@ -183,13 +236,30 @@ def parse_collectives(hlo_text: str, total_devices: int | None = None) -> list[C
             operand = result_bytes * max(gsize, 1)
         else:  # all-reduce, all-to-all, collective-permute
             operand = result_bytes
+        sm = _STAGE_RE.search(line)
+        stage = sm.group(1) if sm else ""
         ops.append(
             CollectiveOp(
                 name=m.group("name"), kind=base, result_bytes=result_bytes,
                 operand_bytes=operand, group_size=gsize, num_groups=ngroups,
-                source_target_pairs=pairs, replica_groups=groups,
+                source_target_pairs=pairs, replica_groups=groups, stage=stage,
             )
         )
+        if op.endswith("-start"):
+            pending[(comp_id, m.group("name"))] = (
+                len(ops) - 1, len(compute_lines.get(comp_id, ())),
+            )
+        elif stage:
+            sync_marks.append((len(ops) - 1, comp_id, line_no, stage))
+    # sync stage pass: overlapped iff a different stage's compute follows in
+    # the same computation's schedule
+    for idx, cid, line_no, stage in sync_marks:
+        if ops[idx].overlapped:
+            continue
+        for cl_no, cl_stage in compute_lines.get(cid, ()):
+            if cl_no > line_no and cl_stage and cl_stage != stage:
+                ops[idx] = dataclasses.replace(ops[idx], overlapped=True)
+                break
     return ops
 
 
@@ -208,4 +278,21 @@ def collective_summary(ops: list[CollectiveOp]) -> dict:
         "total_operand_bytes": total_operand,
         "total_wire_bytes_per_device": total_wire,
         "count": sum(d["count"] for d in by_kind.values()),
+    }
+
+
+def overlap_summary(ops: list[CollectiveOp]) -> dict:
+    """Overlapped-vs-blocking split of a compiled step's collectives,
+    weighted by the same wire-time model replay uses."""
+    ov_wire = sum(op.wire_bytes_per_device() for op in ops if op.overlapped)
+    bl_wire = sum(op.wire_bytes_per_device() for op in ops if not op.overlapped)
+    total = ov_wire + bl_wire
+    return {
+        "count": len(ops),
+        "overlapped": sum(1 for op in ops if op.overlapped),
+        "blocking": sum(1 for op in ops if not op.overlapped),
+        "overlapped_wire_bytes": ov_wire,
+        "blocked_wire_bytes": bl_wire,
+        "overlap_wire_fraction": (ov_wire / total) if total > 0 else 0.0,
+        "stages": sorted({op.stage for op in ops if op.stage}),
     }

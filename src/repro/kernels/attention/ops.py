@@ -194,4 +194,10 @@ def paged_span_attention_sharded(cache, q, block_tables, row_start, row_len, *,
         in_specs=leaf_specs + (q_spec, P(None, None), P(None), P(None)),
         out_specs=q_spec,
     )
-    return fn(*(cache[n] for n in names), q, block_tables, row_start, row_len)
+    # explicit scope UNDER any enclosing overlap stage scope (ovl_mb<i>/...):
+    # the micro-batched span pipeline invokes this wrapper once per stage,
+    # and keeping the kernel's ops inside the inherited stage scope is what
+    # lets hlo_comm attribute the surrounding collectives per micro-batch
+    with jax.named_scope("paged_span_sharded"):
+        return fn(*(cache[n] for n in names), q, block_tables, row_start,
+                  row_len)

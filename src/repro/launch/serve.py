@@ -29,6 +29,14 @@ misconfigured mesh fails loudly here), and a traced run records one
 stream per mesh_data TASK, merged mpi2prv-style into the final ``.prv``
 (see docs/distributed_serving.md).  On CPU the requested device count is
 forced via ``xla_force_host_platform_device_count``.
+
+``--overlap on|off|auto`` controls communication/compute overlap for
+sharded runs: the span batch is micro-batched inside the jitted step so
+one micro-batch's TP all-reduces drain under the other's compute, and the
+host keeps a two-deep dispatch queue (plan N+1 while N executes).  Greedy
+output is bit-identical either way; traced runs report the overlapped
+fraction of collective time in the exit latency summary (the
+``EV_COMM_OVERLAP_US`` / ``EV_COMM_BLOCKED_US`` counters in the ``.prv``).
 """
 from __future__ import annotations
 
@@ -148,6 +156,13 @@ def main(argv=None):
                         "fp16 = native model dtype, int8/fp8 = quantized "
                         "blocks with per-(position, kv-head) scales, dequant "
                         "fused into the paged/span attention paths")
+    p.add_argument("--overlap", default="",
+                   choices=["on", "off", "auto"],
+                   help="communication/compute overlap for sharded serving "
+                        "(docs/distributed_serving.md): micro-batched span "
+                        "pipeline + two-deep dispatch queue.  auto (default "
+                        "via cfg.comm_overlap) = on when --mp/--mesh shards "
+                        "the model axis, off single-device")
     p.add_argument("--trace", action="store_true")
     p.add_argument("--flush-every", type=int, default=0,
                    help="stream the trace to disk every N decode iterations")
@@ -232,8 +247,9 @@ def main(argv=None):
             top_k=args.top_k, top_p=args.top_p, seed=args.seed,
             flush_every=args.flush_every,
             flush_base=out / "serve" if args.flush_every else None,
-            mesh=mesh, **unified_kw,
+            mesh=mesh, overlap=args.overlap or None, **unified_kw,
         )
+        print(f"[serve] {engine.overlap.describe()}")
         if mesh is not None:
             # fail loudly before compile: every param pspec + the KV-pool
             # placement, diffable against what the operator expected
@@ -294,10 +310,16 @@ def main(argv=None):
                                     if segments else trace)
         if lat["ttft_us"]["count"]:
             t, o = lat["ttft_us"], lat["tpot_us"]
+            comm = lat.get("comm", {})
+            ov_note = (f"; comm overlap {comm['overlap_fraction']:.0%} of "
+                       f"{comm['overlap_us'] + comm['blocked_us']:.0f}us "
+                       f"collective time"
+                       if comm.get("overlap_us", 0) + comm.get("blocked_us", 0)
+                       else "")
             print(f"[serve] latency over {t['count']} requests: "
                   f"TTFT p50 {t['p50']:.0f}us / p95 {t['p95']:.0f}us / "
                   f"max {t['max']:.0f}us; TPOT p50 {o['p50']:.0f}us / "
-                  f"p95 {o['p95']:.0f}us")
+                  f"p95 {o['p95']:.0f}us{ov_note}")
         if lat["spec"]["dispatches"]:
             sp = lat["spec"]
             print(f"[serve] spec (from trace): {sp['accepted']}/"

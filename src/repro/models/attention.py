@@ -633,3 +633,49 @@ def _paged_span_attend(q, k_new, v_new, cache, row_start, row_len, positions,
             window=window, block_kv=0,
         )
     return o, entry
+
+
+def span_pipeline(span_fn, caches, row_args, *, micro_batches: int = 1):
+    """Software-pipelined span step: split the row batch into contiguous
+    micro-batches and run ``span_fn(caches, *rows)`` once per group, caches
+    threaded A -> B.
+
+    This is the device half of communication/compute overlap for
+    tensor-parallel serving (``repro.sharding.overlap``): micro-batch B's
+    layer-``l`` compute depends only on A's layer-``l`` cache *write* — not
+    on A's attention math or projections — so under mp>1 A's post-attention
+    and post-MLP all-reduces are free to drain while B computes.  Each group
+    runs under ``overlap.stage(i)`` (a ``jax.named_scope``) so the compiled
+    HLO carries the stage on every op and the trace loop can classify each
+    collective as overlapped or blocking from the actual schedule.
+
+    Bit-identity: groups are contiguous row slices (never reordered), row
+    cache writes are disjoint (:func:`repro.models.cache_utils.paged_span_write`),
+    and per-row logits do not depend on batch size, so concatenating the
+    group logits reproduces the single-batch result exactly.  The
+    ``optimization_barrier`` between stages only pins the stage boundary in
+    the schedule; it is value-transparent.
+
+    ``row_args`` is a tuple of per-row arrays (leading dim = rows), e.g.
+    ``(tokens, row_start, row_len, block_tables)``.  Returns
+    ``(caches, logits)`` with logits concatenated back to the full batch.
+    """
+    from repro.models.cache_utils import microbatch_bounds
+    from repro.sharding import overlap as overlap_mod
+
+    n = int(row_args[0].shape[0])
+    bounds = microbatch_bounds(n, micro_batches)
+    if len(bounds) <= 2:  # 1 group: the plain span step, no scopes
+        return span_fn(caches, *row_args)
+    outs = []
+    for i in range(len(bounds) - 1):
+        lo, hi = bounds[i], bounds[i + 1]
+        group = tuple(a[lo:hi] for a in row_args)
+        with overlap_mod.stage(i):
+            caches, logits = span_fn(caches, *group)
+        if i + 2 < len(bounds):
+            # keep XLA from re-fusing the stages into one region (which
+            # would erase the interleaving the named scopes describe)
+            caches = jax.lax.optimization_barrier(caches)
+        outs.append(logits)
+    return caches, jnp.concatenate(outs, axis=0)

@@ -105,6 +105,18 @@ def paged_span_write(kp, vp, k_new, v_new, block_tables, row_start, row_len):
     return kp, vp
 
 
+def microbatch_bounds(n: int, parts: int) -> list[int]:
+    """Contiguous row-group boundaries for the micro-batched span pipeline:
+    ``parts + 1`` monotone cut points over ``[0, n]`` with near-equal group
+    sizes.  Splitting a span batch this way is safe because every row's
+    cache-write destinations are disjoint (per-row block tables, see
+    :func:`paged_span_write`) and rows never read each other's pool blocks —
+    so the groups may execute back to back with the caches threaded through,
+    bit-identical to the single-batch span."""
+    parts = max(1, min(int(parts), max(int(n), 1)))
+    return [i * int(n) // parts for i in range(parts + 1)]
+
+
 def _span_dest(block_tables, row_start, row_len, q, bs):
     """Flat pool destinations for a per-row query span (see paged_span_write)."""
     j = jnp.arange(q, dtype=jnp.int32)[None, :]  # [1, Q]

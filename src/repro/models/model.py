@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeSpec
+from repro.models import attention as att_mod
 from repro.models import encdec as encdec_mod
 from repro.models import transformer as tf_mod
 from repro.models.layers import (
@@ -168,34 +169,44 @@ class DecoderLM(_Base):
             logits = jnp.tanh(logits / c) * c
         return tail_caches, logits[:, -1]
 
-    def span_step(self, params, caches, tokens, row_start, row_len, block_tables):
+    def span_step(self, params, caches, tokens, row_start, row_len,
+                  block_tables, *, micro_batches: int = 1):
         """Per-row query spans through the paged pool: the chunked-prefill
         half of the unified serve step.  tokens: [B, Q] int32 — row ``b``
         holds ``row_len[b]`` valid tokens at absolute positions
         ``row_start[b] + j`` (padding columns are scattered into the NULL
         block and produce garbage logits the caller discards).  Requires an
         attention-only stack (recurrent/cross state cannot be chunk-resumed).
+        ``micro_batches > 1`` runs the rows as contiguous groups through
+        :func:`repro.models.attention.span_pipeline` (communication/compute
+        overlap under tensor parallelism — bit-identical by construction).
         -> (new_caches, logits [B, Q, V])."""
         cfg = self.cfg
         assert cfg.family in ("dense", "moe"), \
             "span_step requires attention-only caches"
-        x = embed_tokens(params["embed"], tokens, self.dtype,
-                         method=cfg.decode_embed_lookup)
         row_start = jnp.asarray(row_start, jnp.int32)
         row_len = jnp.asarray(row_len, jnp.int32)
-        positions = row_start[:, None] + jnp.arange(
-            tokens.shape[1], dtype=jnp.int32)[None, :]
-        x, new_caches, _ = tf_mod.apply_stack(
-            params["stack"], x, cfg, positions=positions, caches=caches,
-            index=row_start, mode="decode", block_tables=block_tables,
-            row_len=row_len,
-        )
-        x = apply_norm(params["final_norm"], x, cfg.norm_eps)
-        logits = lm_logits(params["embed"], x, cfg)
-        if cfg.logit_softcap:
-            c = cfg.logit_softcap
-            logits = jnp.tanh(logits / c) * c
-        return new_caches, logits
+
+        def one_span(caches, tokens, row_start, row_len, block_tables):
+            x = embed_tokens(params["embed"], tokens, self.dtype,
+                             method=cfg.decode_embed_lookup)
+            positions = row_start[:, None] + jnp.arange(
+                tokens.shape[1], dtype=jnp.int32)[None, :]
+            x, new_caches, _ = tf_mod.apply_stack(
+                params["stack"], x, cfg, positions=positions, caches=caches,
+                index=row_start, mode="decode", block_tables=block_tables,
+                row_len=row_len,
+            )
+            x = apply_norm(params["final_norm"], x, cfg.norm_eps)
+            logits = lm_logits(params["embed"], x, cfg)
+            if cfg.logit_softcap:
+                c = cfg.logit_softcap
+                logits = jnp.tanh(logits / c) * c
+            return new_caches, logits
+
+        return att_mod.span_pipeline(
+            one_span, caches, (tokens, row_start, row_len, block_tables),
+            micro_batches=micro_batches)
 
     def decode_step(self, params, caches, tokens, index, block_tables=None):
         """tokens: [B] int32; index: int32 absolute position — scalar

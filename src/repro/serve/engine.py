@@ -54,6 +54,7 @@ decode-iteration structure is unchanged by sharding.
 """
 from __future__ import annotations
 
+import collections
 import contextlib
 import time
 
@@ -72,6 +73,7 @@ from repro.models.model import build_model
 from repro.serve.block_pool import NULL_BLOCK, BlockPool
 from repro.serve.queue import Request, RequestQueue, _now_ns
 from repro.serve.scheduler import Scheduler
+from repro.sharding.overlap import plan_overlap, resolve_mode
 from repro.sharding.partition import make_serve_rules, use_rules
 
 EV_TOKENS_DECODED = 84_001  # user event: tokens decoded so far (one run)
@@ -115,11 +117,17 @@ class ContinuousServeEngine:
                  seed: int = 0,
                  max_prefills_per_iter: int = 1, max_decode_burst: int = 8,
                  flush_every: int = 0, flush_base=None,
-                 mesh=None, rules=None):
+                 mesh=None, rules=None, overlap: str | None = None):
         self.cfg = cfg
         self.model = build_model(cfg)
         self.meshstate = (_MeshState(cfg, self.model, mesh, rules, tracer)
                           if mesh is not None else None)
+        # communication/compute overlap plan (sharding/overlap.py): decides
+        # the span-path micro-batch count and whether the dispatch queue
+        # runs two deep; ``overlap`` overrides cfg.comm_overlap
+        self.overlap = plan_overlap(
+            self.meshstate.rules if self.meshstate is not None else None,
+            mode=resolve_mode(overlap, cfg))
         if self.meshstate is not None:
             params = jax.device_put(params, self.meshstate.param_sh)
         self.params = params
@@ -145,6 +153,10 @@ class ContinuousServeEngine:
             tracer.register(ev.EV_REQ_TPOT_US, ev.SERVE_CTR_LABELS[ev.EV_REQ_TPOT_US])
             tracer.register(ev.EV_PREFIX_HIT_TOKENS,
                             ev.SERVE_CTR_LABELS[ev.EV_PREFIX_HIT_TOKENS])
+            tracer.register(ev.EV_COMM_OVERLAP_US,
+                            ev.SERVE_CTR_LABELS[ev.EV_COMM_OVERLAP_US])
+            tracer.register(ev.EV_COMM_BLOCKED_US,
+                            ev.SERVE_CTR_LABELS[ev.EV_COMM_BLOCKED_US])
             for code, label in ev.KERNEL_EVENT_LABELS.items():
                 tracer.register(code, label)
             # autotune decisions resolve at trace time inside jit — route
@@ -255,7 +267,10 @@ class ContinuousServeEngine:
         self.stats = {"iterations": 0, "prefills": 0, "tokens_decoded": 0,
                       "prefill_tokens": 0, "prefix_hit_tokens": 0,
                       "preemptions": 0, "peak_active": 0, "peak_blocks": 0,
-                      "host_syncs": 0, "decode_syncs": 0, "seconds": 0.0,
+                      "host_syncs": 0, "decode_syncs": 0,
+                      "decode_dispatches": 0, "planned_ahead": 0,
+                      "comm_overlap_us": 0, "comm_blocked_us": 0,
+                      "seconds": 0.0,
                       "prefill_seconds": 0.0, "kernel_dispatch": {}}
 
         # --- attention-kernel dispatch plan: one resolve() per variant,
@@ -318,11 +333,17 @@ class ContinuousServeEngine:
         return compiled(*args), ops
 
     def _replay(self, ops, t0: int, t1: int):
-        """Inject one executable's collective schedule over [t0, t1)."""
+        """Inject one executable's collective schedule over [t0, t1) and
+        book the overlapped/blocked split into the engine stats."""
         ms = self.meshstate
         if ops and ms is not None and ms.endpoints is not None \
                 and self.tracer is not None and self.tracer.active:
-            replay_step(self.tracer, ops, t0, t1, ms.endpoints)
+            split = replay_step(self.tracer, ops, t0, t1, ms.endpoints)
+            # same 1us floor as the injected EV_COMM_* counters, so the
+            # engine stats agree with the merged trace at any time scale
+            for key, ns in (("comm_overlap_us", split["overlap_ns"]),
+                            ("comm_blocked_us", split["blocked_ns"])):
+                self.stats[key] += max(ns // 1000, 1) if ns else 0
 
     # ------------------------------------------------------------------
     # jitted kernels
@@ -736,12 +757,19 @@ class ContinuousServeEngine:
         power of two to bound distinct compiles), and burst i is dispatched
         before burst i-1's tokens are fetched — the fetch blocks only on
         whatever device time remains, and retirement/admission decisions lag
-        the device by one burst."""
+        the device by one burst.
+
+        With ``overlap.host_pipeline`` the in-flight queue runs TWO deep:
+        burst i+1's planning (admission, block allocation, dispatch) happens
+        while bursts i-1 and i execute, so the host never sits between a
+        fetch and the next dispatch.  A preemption flushes the queue first —
+        a victim's in-flight tokens must drain before it can requeue."""
         tr = self.tracer
         done0 = len(self.scheduler.completed)
-        pending = None  # ([steps, slots] token block, [(slot, req)]) in flight
+        depth = 2 if self.overlap.host_pipeline else 1
+        inflight: collections.deque = collections.deque()  # unfetched bursts
         t_run0 = time.perf_counter()
-        while pending is not None or not self.scheduler.drained():
+        while inflight or not self.scheduler.drained():
             if self.queue and tr:
                 with tr.phase(ev.PHASE_ADMIT):
                     admissions = self.scheduler.admissions()
@@ -779,6 +807,7 @@ class ContinuousServeEngine:
                              self._active_dev, self._tables_dev, key),
                             {"steps": steps})
                 self._note_kernel("paged_decode")
+                self.stats["decode_dispatches"] += 1
                 for slot, req in pairs:
                     req.scheduled += steps
                     if req.scheduled >= req.max_new_tokens:
@@ -787,10 +816,17 @@ class ContinuousServeEngine:
                         self._active[slot] = False
                         self._active_dirty = True
                 dispatched = (toks, pairs, t_dispatch, coll_ops)
-            if pending is not None:
-                self._process_tokens(*pending)  # overlaps the dispatched burst
+                if len(inflight) >= 2:  # planned with 2 bursts unfetched
+                    self.stats["planned_ahead"] += 1
+                inflight.append(dispatched)
+            # keep up to ``depth`` unfetched bursts in flight; a stalled
+            # iteration (nothing dispatched) or a pending preemption flushes
+            # the queue so retirement/requeue see fully-drained tokens
+            keep = depth if (dispatched is not None and not self._preempted) \
+                else 0
+            while len(inflight) > keep:
+                self._process_tokens(*inflight.popleft())
             self._drain_preempted()
-            pending = dispatched
         self.stats["seconds"] += time.perf_counter() - t_run0
         return {r.rid: np.asarray(r.tokens, np.int32)
                 for r in self.scheduler.completed[done0:]}
@@ -829,6 +865,16 @@ class ContinuousServeEngine:
         total, dt = self.stats["tokens_decoded"], self.stats["seconds"]
         out = {**self.stats, "tokens": total,
                "tok_per_s": total / dt if dt > 0 else float("nan")}
+        # canonical sync-amortization metric: decode fetches per scanned
+        # decode iteration.  Derived from decode_syncs (not host_syncs,
+        # which also counts prefill fetches) so a dispatch window spanning
+        # a trace flush cannot skew it; decode_syncs == decode_dispatches
+        # is an engine invariant (tests/test_serve_sharded.py).
+        out["host_syncs_per_decode_iter"] = (
+            self.stats["decode_syncs"] / max(self.stats["iterations"], 1))
+        comm = self.stats["comm_overlap_us"] + self.stats["comm_blocked_us"]
+        out["comm_overlap_fraction"] = (
+            self.stats["comm_overlap_us"] / comm if comm > 0 else 0.0)
         if self.pool is not None:
             out.update(blocks_free=self.pool.num_free(),
                        blocks_cached=self.pool.num_cached(),

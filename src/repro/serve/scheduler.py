@@ -22,6 +22,17 @@ iteration:
   * when the engine must *preempt* a request (block pool dry mid-decode),
     recording the back-transition.
 
+Admission is safe to run WHILE dispatches are still in flight (the
+double-buffered dispatch queue plans step N+1 before step N's tokens are
+fetched, ``--overlap``): every block an in-flight dispatch writes was
+allocated at ITS dispatch time (``_ensure_blocks`` / the chunk planner),
+so the availability the admission policy reads already accounts for all
+unfetched work — there is no window where a planned-ahead dispatch and a
+new admission can be promised the same block.  The only pipeline-aware
+rule lives in the engine loop: a preemption flushes the in-flight queue
+before :meth:`preempt`'s victim is requeued, so the victim's drained
+token count is exact.
+
 Every decision is stamped into the trace (paper Listing 2/4 discipline):
 ``EV_QUEUE_DEPTH`` / ``EV_SLOTS_ACTIVE`` counters, punctual
 ``EV_REQ_ADMIT`` / ``EV_REQ_RETIRE`` / ``EV_REQ_PREEMPT`` markers, and a

@@ -63,6 +63,7 @@ bit-identical to the non-spec unified engine (tests/test_serve_spec.py).
 """
 from __future__ import annotations
 
+import collections
 import contextlib
 import dataclasses
 import time
@@ -198,7 +199,8 @@ class UnifiedServeEngine(ContinuousServeEngine):
         if chunk:
             ck_tables = tables[ck_slot]  # [C, W]
             caches, logits = self.model.span_step(
-                params, caches, ck_tokens, ck_start, ck_len, ck_tables)
+                params, caches, ck_tokens, ck_start, ck_len, ck_tables,
+                micro_batches=self.overlap.micro_batches)
             tok, idx, ck_tok = self._fold_chunk_rows(
                 logits, ck_start, ck_len, ck_slot, ck_sample, key, tok, idx)
         return caches, tok, idx, toks, ck_tok
@@ -258,7 +260,8 @@ class UnifiedServeEngine(ContinuousServeEngine):
             row_len = jnp.concatenate([spec_len, ck_len])
             row_bt = jnp.concatenate([spec_bt, tables[ck_slot]])
         caches, logits = self.model.span_step(
-            params, caches, row_tokens, row_start, row_len, row_bt)
+            params, caches, row_tokens, row_start, row_len, row_bt,
+            micro_batches=self.overlap.micro_batches)
 
         k_acc = (key if self.temperature <= 0.0
                  else jax.random.fold_in(key, 1 << 17))
@@ -471,6 +474,10 @@ class UnifiedServeEngine(ContinuousServeEngine):
                     {"steps": steps, "chunk": bool(chunks)})
         if pairs:
             self._note_kernel("paged_decode")  # decode sub-batch scan
+        if steps:
+            # mirrors decode_syncs exactly: the fetch side bumps it iff this
+            # dispatch carried decode rows (tests assert the two stay equal)
+            self.stats["decode_dispatches"] += 1
         if chunks:
             self._note_kernel("paged_span")  # chunk rows run the span variant
         for slot, req in pairs:
@@ -726,6 +733,9 @@ class UnifiedServeEngine(ContinuousServeEngine):
             if pairs:
                 self.stats["iterations"] += 1
                 self.stats["decode_syncs"] += 1
+                # the spec lane fetches synchronously, so dispatch and sync
+                # coincide — but the invariant stays the same
+                self.stats["decode_dispatches"] += 1
             k_used = self._spec_k  # width actually in effect this dispatch
             if drafted > 0:
                 self._accept_ema = (0.7 * self._accept_ema
@@ -772,9 +782,15 @@ class UnifiedServeEngine(ContinuousServeEngine):
             return self._run_spec()
         tr = self.tracer
         done0 = len(self.scheduler.completed)
-        pending = None
+        # double-buffered dispatch pipeline: with the overlap plan's host
+        # pipeline on, up to TWO dispatches stay unfetched, so the host
+        # plans dispatch N+1 (admission, chunk planning, block allocation)
+        # while the device still executes dispatch N — the fetch of N-1 is
+        # the only sync.  depth 1 reproduces the classic one-deep pipeline.
+        depth = 2 if self.overlap.host_pipeline else 1
+        inflight: collections.deque = collections.deque()
         t_run0 = time.perf_counter()
-        while pending is not None or not self.scheduler.drained():
+        while inflight or not self.scheduler.drained():
             if not self.chunkable:
                 # state-carrying families: budget-looped whole-prompt
                 # admission through the inherited grouped-prefill path
@@ -813,7 +829,7 @@ class UnifiedServeEngine(ContinuousServeEngine):
                 tr.emit(ev.EV_CHUNK_TOKENS, self._whole_tokens)
                 tr.emit(ev.EV_DECODE_TOKENS, 0)
                 self._whole_tokens = 0
-            if dispatched is None and pending is None \
+            if dispatched is None and not inflight \
                     and not self.scheduler.drained():
                 # several prefill streams can jointly wedge the pool with no
                 # decode victims left — preempt the newest so work resumes
@@ -821,10 +837,20 @@ class UnifiedServeEngine(ContinuousServeEngine):
                     raise RuntimeError(
                         "serve loop stalled: nothing dispatchable but the "
                         "scheduler is not drained")
-            if pending is not None:
-                self._process_unified(*pending)  # overlaps current dispatch
+            if dispatched is not None:
+                if len(inflight) >= 2:
+                    # genuinely planned ahead: this dispatch was built with
+                    # two earlier bursts still unfetched
+                    self.stats["planned_ahead"] += 1
+                inflight.append(dispatched)
+            # a stall (nothing dispatched) or a preemption flushes the whole
+            # queue: victims must drain their in-flight tokens before
+            # _drain_preempted requeues them
+            keep = depth if (dispatched is not None
+                             and not self._preempted) else 0
+            while len(inflight) > keep:
+                self._process_unified(*inflight.popleft())
             self._drain_preempted()
-            pending = dispatched
         self.stats["seconds"] += time.perf_counter() - t_run0
         return {r.rid: np.asarray(r.tokens, np.int32)
                 for r in self.scheduler.completed[done0:]}

@@ -1,0 +1,130 @@
+"""Communication/compute overlap planning for the sharded serve step.
+
+Tensor-parallel decode pays one all-reduce after attention and one after the
+MLP in every layer (plus a logits collective when the vocab shards).  On a
+single span batch those reduces sit on the critical path: nothing else is
+ready to run while they drain.  Splitting the span batch into two
+micro-batches creates independent work — micro-batch B's layer-``l`` compute
+only depends on micro-batch A's layer-``l`` *cache write*, which happens
+before A's attention math, so A's post-attention / post-MLP all-reduces can
+ride under B's compute (and vice versa for every layer but the last).
+
+This module is the policy layer: it inspects the serve rules
+(:func:`repro.sharding.partition.make_serve_rules` output) and decides
+
+  * whether the mesh/arch combination emits hideable collectives at all,
+  * how many micro-batches the span path should run (1 = off, 2 = pipeline),
+  * which collective kinds the pipeline is expected to hide,
+
+and it owns the stage-scope naming contract shared with the trace loop:
+stages are wrapped in ``jax.named_scope(stage_scope(i))`` so the compiled
+HLO carries the stage on every instruction's ``op_name`` metadata, which is
+what lets :func:`repro.core.hlo_comm.parse_collectives` classify each
+collective as overlapped or blocking *from the schedule the compiler
+actually produced* rather than from what we hoped it would do.
+
+Bit-identity contract: micro-batching must never change greedy output.
+Span rows are independent through the whole stack — per-row block tables,
+disjoint cache-write destinations, row-wise attention masks — and the TP
+all-reduce is elementwise, so splitting rows into contiguous groups
+preserves each element's reduction order exactly.  The planner therefore
+only ever splits along the row axis and never reorders rows.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.core.hlo_comm import OVERLAP_SCOPE
+
+MODES = ("on", "off", "auto")
+
+# Logical axes whose sharding makes the row-parallel matmul emit a per-layer
+# all-reduce on the activation path (Megatron TP): attention out-projection
+# and MLP down-projection respectively; experts behave like mlp per layer.
+_ATTN_REDUCE_AXES = ("q_heads", "kv_heads", "cache_hd")
+_MLP_REDUCE_AXES = ("mlp", "expert_mlp", "experts", "ssm_inner", "lru")
+_LOGITS_AXES = ("vocab",)
+
+
+@dataclasses.dataclass(frozen=True)
+class OverlapPlan:
+    """What the serve step should do about communication overlap."""
+
+    enabled: bool  # device-layer micro-batch pipeline on the span path
+    host_pipeline: bool  # two-deep double-buffered dispatch queue
+    micro_batches: int  # 2 when the span batch is pipelined, else 1
+    hidden_kinds: tuple[str, ...]  # collective kinds the pipeline can hide
+    reason: str  # human-readable decision, printed by the CLI
+
+    def describe(self) -> str:
+        state = "on" if (self.enabled or self.host_pipeline) else "off"
+        return (f"overlap={state} micro_batches={self.micro_batches} "
+                f"hidden={','.join(self.hidden_kinds) or '-'} ({self.reason})")
+
+
+def stage_scope(i: int) -> str:
+    """Name of micro-batch stage ``i`` — must match hlo_comm's scope regex."""
+    return f"{OVERLAP_SCOPE}{i}"
+
+
+def stage(i: int):
+    """``jax.named_scope`` for micro-batch stage ``i`` (used inside jit)."""
+    return jax.named_scope(stage_scope(i))
+
+
+def plan_overlap(rules=None, *, mode: str = "auto",
+                 micro_batches: int = 2) -> OverlapPlan:
+    """Decide the overlap strategy for one engine.
+
+    ``rules`` is the serve-rules object (or ``None`` when the engine runs
+    without a mesh).  ``mode`` is the ``--overlap`` / ``cfg.comm_overlap``
+    knob: ``off`` disables everything, ``on`` forces both layers, ``auto``
+    enables both only when the model axis actually shards something (mp>1).
+    The host-side double buffer is profitable even without hideable
+    collectives, but in ``auto`` it follows the same mp>1 trigger so a
+    single-device run keeps the simpler one-deep pipeline.
+    """
+    if mode not in MODES:
+        raise ValueError(f"overlap mode {mode!r} not in {MODES}")
+    if mode == "off":
+        return OverlapPlan(False, False, 1, (), "disabled by knob")
+
+    model_sz = 1
+    sharded: tuple[str, ...] = ()
+    if rules is not None:
+        model_sz = rules.axis_size("model")
+        sharded = rules.sharded_over("model")
+
+    hidden = []
+    if any(a in sharded for a in _ATTN_REDUCE_AXES + _MLP_REDUCE_AXES):
+        hidden.append("all-reduce")
+    if any(a in sharded for a in _LOGITS_AXES):
+        # padded-vocab logits come back via all-gather (or reduce-scatter +
+        # gather depending on what XLA picks); both are hideable the same way
+        hidden.extend(("all-gather", "reduce-scatter"))
+    hidden_t = tuple(hidden)
+
+    if mode == "auto" and (model_sz <= 1 or not hidden_t):
+        return OverlapPlan(
+            False, False, 1, (),
+            f"auto: model axis {model_sz}, nothing to hide")
+    if not hidden_t:
+        # forced on without sharded collectives: device pipeline is a no-op,
+        # keep the host double-buffer (it is what "on" still buys here)
+        return OverlapPlan(
+            False, True, 1, (),
+            f"forced on: no sharded collectives (model axis {model_sz}), "
+            "host pipeline only")
+    mb = max(2, int(micro_batches))
+    why = ("forced on" if mode == "on" else
+           f"auto: model axis {model_sz} shards {','.join(sharded)}")
+    return OverlapPlan(True, True, mb, hidden_t, why)
+
+
+def resolve_mode(mode: str | None, cfg=None) -> str:
+    """Fold the CLI knob and ``cfg.comm_overlap`` into one mode string."""
+    if mode:
+        return mode
+    return getattr(cfg, "comm_overlap", "auto") or "auto"

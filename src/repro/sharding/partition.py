@@ -82,6 +82,17 @@ class Rules:
             lambda s: NamedSharding(self.mesh, s), self.tree_pspecs(axes_tree)
         )
 
+    def sharded_over(self, mesh_axis: str) -> tuple[str, ...]:
+        """Logical axes this rule set maps onto ``mesh_axis`` — the overlap
+        planner (sharding/overlap.py) reads these to decide which per-layer
+        collectives the serve step will actually emit."""
+        out = []
+        for name, ax in self.mapping.items():
+            ax_t = (ax,) if isinstance(ax, str) else tuple(ax or ())
+            if mesh_axis in ax_t:
+                out.append(name)
+        return tuple(sorted(out))
+
     def axis_size(self, mesh_axis) -> int:
         if mesh_axis is None:
             return 1

@@ -1,0 +1,140 @@
+"""Communication/compute overlap: schedule-derived classification
+(hlo_comm), the overlap planner (sharding/overlap.py), and the
+micro-batched span pipeline's slicing/threading contract — all fast
+in-process units (the mp=2 subprocess equivalence lives in
+tests/test_serve_sharded.py)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.hlo_comm import overlap_summary, parse_collectives
+from repro.models.attention import span_pipeline
+from repro.models.cache_utils import microbatch_bounds
+from repro.sharding.overlap import (
+    OverlapPlan, plan_overlap, resolve_mode, stage_scope)
+
+# async start/done: ar has real compute between start and done -> overlapped;
+# ag's done chases its start directly -> blocking
+ASYNC_HLO = """\
+HloModule async
+ENTRY %main {
+  %p0 = f32[512,64]{1,0} parameter(0)
+  %ars = f32[512,64]{1,0} all-reduce-start(%p0), channel_id=1, replica_groups={{0,1}}, to_apply=%add
+  %mm = f32[512,512]{1,0} dot(%p0, %p0), lhs_contracting_dims={1}, rhs_contracting_dims={1}
+  %ard = f32[512,64]{1,0} all-reduce-done(%ars)
+  %ags = (f32[512,64]{1,0}, f32[1024,64]{1,0}) all-gather-start(%p0), channel_id=2, replica_groups={{0,1}}, dimensions={0}
+  %agd = f32[1024,64]{1,0} all-gather-done(%ags)
+}
+"""
+
+# sync collectives with micro-batch stage scopes: the ovl_mb0 reduce is
+# followed (same computation) by ovl_mb1 compute -> overlapped; the ovl_mb1
+# reduce has nothing after it -> blocking
+STAGED_HLO = """\
+HloModule staged
+ENTRY %main {
+  %p0 = f32[512,64]{1,0} parameter(0)
+  %mm0 = f32[512,512]{1,0} dot(%p0, %p0), metadata={op_name="jit(f)/jit(main)/ovl_mb0/dot_general"}
+  %ar0 = f32[512,512]{1,0} all-reduce(%mm0), channel_id=1, replica_groups={{0,1}}, to_apply=%add, metadata={op_name="jit(f)/jit(main)/ovl_mb0/dot_general"}
+  %mm1 = f32[512,512]{1,0} dot(%p0, %p0), metadata={op_name="jit(f)/jit(main)/ovl_mb1/dot_general"}
+  %ar1 = f32[512,512]{1,0} all-reduce(%mm1), channel_id=2, replica_groups={{0,1}}, to_apply=%add, metadata={op_name="jit(f)/jit(main)/ovl_mb1/dot_general"}
+}
+"""
+
+
+def test_async_pairs_classified_by_schedule():
+    ops = {o.name: o for o in parse_collectives(ASYNC_HLO, total_devices=2)}
+    assert ops["ars"].overlapped, "compute between start/done must overlap"
+    assert not ops["ags"].overlapped, "back-to-back start/done is blocking"
+
+
+def test_stage_scoped_sync_collectives():
+    ops = {o.name: o for o in parse_collectives(STAGED_HLO, total_devices=2)}
+    assert ops["ar0"].stage == "ovl_mb0" and ops["ar0"].overlapped
+    assert ops["ar1"].stage == "ovl_mb1" and not ops["ar1"].overlapped
+    s = overlap_summary(parse_collectives(STAGED_HLO, total_devices=2))
+    assert s["count"] == 2 and s["overlapped"] == 1 and s["blocking"] == 1
+    assert 0.0 < s["overlap_wire_fraction"] < 1.0
+    assert "ovl_mb0" in s["stages"] and "ovl_mb1" in s["stages"]
+
+
+class _FakeRules:
+    def __init__(self, size, sharded):
+        self._size, self._sharded = size, tuple(sharded)
+
+    def axis_size(self, name):
+        return self._size if name == "model" else 1
+
+    def sharded_over(self, name):
+        return self._sharded if name == "model" else ()
+
+
+def test_plan_overlap_decisions():
+    # mp=2 with TP reduces on the activation path -> both layers on
+    plan = plan_overlap(_FakeRules(2, ("kv_heads", "mlp")), mode="auto")
+    assert plan.enabled and plan.host_pipeline and plan.micro_batches == 2
+    assert "all-reduce" in plan.hidden_kinds
+    # single device in auto -> everything off
+    off = plan_overlap(_FakeRules(1, ()), mode="auto")
+    assert off == OverlapPlan(False, False, 1, (), off.reason)
+    # no rules (meshless engine), forced on -> host pipeline only
+    forced = plan_overlap(None, mode="on")
+    assert not forced.enabled and forced.host_pipeline
+    assert forced.micro_batches == 1
+    # off always wins
+    assert not plan_overlap(_FakeRules(2, ("mlp",)), mode="off").host_pipeline
+    # vocab sharding hides the logits gather too
+    v = plan_overlap(_FakeRules(2, ("mlp", "vocab")), mode="auto")
+    assert "all-gather" in v.hidden_kinds
+    try:
+        plan_overlap(None, mode="sometimes")
+    except ValueError:
+        pass
+    else:
+        raise AssertionError("bad mode accepted")
+
+
+def test_resolve_mode_precedence():
+    class Cfg:
+        comm_overlap = "off"
+
+    assert resolve_mode("on", Cfg()) == "on"  # CLI wins
+    assert resolve_mode(None, Cfg()) == "off"  # cfg next
+    assert resolve_mode(None, None) == "auto"  # default
+    assert stage_scope(1) == "ovl_mb1"
+
+
+def test_microbatch_bounds():
+    assert microbatch_bounds(4, 2) == [0, 2, 4]
+    assert microbatch_bounds(5, 2) == [0, 2, 5]
+    assert microbatch_bounds(1, 2) == [0, 1]  # never more groups than rows
+    assert microbatch_bounds(6, 1) == [0, 6]
+    for n in range(1, 9):
+        b = microbatch_bounds(n, 3)
+        assert b[0] == 0 and b[-1] == n
+        assert all(x < y for x, y in zip(b, b[1:]))  # no empty groups
+
+
+def test_span_pipeline_threads_caches_and_concatenates():
+    calls = []
+
+    def span_fn(caches, tokens, start):
+        calls.append((np.asarray(tokens).tolist(), dict(caches)))
+        caches = {"n": caches["n"] + tokens.shape[0]}
+        return caches, tokens[:, None] * 2
+
+    tokens = jnp.arange(5, dtype=jnp.int32)
+    start = jnp.zeros((5,), jnp.int32)
+    caches, out = span_pipeline(span_fn, {"n": jnp.int32(0)}, (tokens, start),
+                                micro_batches=2)
+    assert int(caches["n"]) == 5  # threaded through both stages
+    assert len(calls) == 2 and calls[0][0] == [0, 1] and calls[1][0] == [2, 3, 4]
+    assert int(calls[1][1]["n"]) == 2  # stage 1 saw stage 0's cache
+    np.testing.assert_array_equal(np.asarray(out)[:, 0], np.arange(5) * 2)
+    # micro_batches=1 is the identity path (no scopes, no barrier)
+    calls.clear()
+    _, out1 = span_pipeline(span_fn, {"n": jnp.int32(0)}, (tokens, start),
+                            micro_batches=1)
+    assert len(calls) == 1
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out))
