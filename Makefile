@@ -1,6 +1,6 @@
 PYTHONPATH := src
 
-.PHONY: smoke test bench serve-bench property kernel lint
+.PHONY: smoke test bench serve-bench property kernel router lint
 
 # fail-fast wiring that catches API drift (e.g. cost_analysis format
 # changes) at collection/first-failure time
@@ -31,6 +31,12 @@ kernel:
 	REPRO_KERNEL_MODE=pallas PYTHONPATH=$(PYTHONPATH) python -m pytest -q \
 		tests/test_kernels_flash.py tests/test_kernels_paged.py
 	PYTHONPATH=$(PYTHONPATH) python -m pytest -q tests/test_kernels_attention.py
+
+# multi-replica router suite: subprocess replicas behind the frame
+# protocol, routed-vs-single bit-exactness, disaggregated KV handoff,
+# merged cross-replica trace invariants (docs/router.md)
+router:
+	PYTHONPATH=$(PYTHONPATH) python -m pytest -q tests/test_serve_router.py
 
 # hypothesis property layer as its own loud-failure job (a missing
 # hypothesis install must not silently skip it; see tests/test_property.py)

@@ -32,7 +32,12 @@ the perf trajectory is tracked across PRs):
   7. kernels: the attention dispatch boundary end-to-end — the same wave
      served under ``kernel_mode=pallas`` (interpret mode on CPU) and
      ``kernel_mode=xla``, outputs asserted identical; plus the autotune
-     cache cold-search vs warm-reload round trip.
+     cache cold-search vs warm-reload round trip;
+  8. replica scaling: the multi-replica router (subprocess engines behind
+     the frame protocol) on a prefix-heavy workload — aggregate tok/s at
+     1 vs 2 replicas, and the routed prefix-hit fraction under
+     ``route=prefix`` vs ``route=rr`` (the affinity scorer's value: rr
+     scatters turn-2 traffic away from the replica holding its KV).
 
 Run as ``__main__`` the script also gates on ``BENCH_baseline.json``
 (committed): a >15% regression of ``seed_vs_paged.speedup`` or
@@ -40,7 +45,9 @@ Run as ``__main__`` the script also gates on ``BENCH_baseline.json``
 a cold autotune warm-reload miss, or the pallas/xla throughput ratio
 falling below half its baseline (the kernel gate is deliberately loose on
 CPU, where pallas runs under interpret-mode emulation — on TPU the same
-gate tracks real kernel throughput).
+gate tracks real kernel throughput).  The replica section gates 1->2
+scaling at >=1.5x aggregate tok/s and prefix-routing beating rr on hit
+tokens.
 
     PYTHONPATH=src python -m benchmarks.run        # all sections
     PYTHONPATH=src python benchmarks/bench_serve.py
@@ -601,6 +608,111 @@ def _bench_sharded(results):
            f"{sharded['unified_overlap_speedup']:.2f}x)")
 
 
+def _replicas_child():
+    """Child process: the multi-replica router on a prefix-heavy workload.
+
+    Two-wave construction (the router's own lesson: requests dispatched in
+    ONE wave get zero actual prefix hits, because the second member of a
+    shared-prefix pair is admitted before the first has registered its
+    blocks).  Wave 1 seeds one member per prefix group — it compiles the
+    engines AND populates each replica's prefix cache; wave 2 is the
+    measurement: every request shares a warm 64-token prefix, so
+    ``route=prefix`` sends it to the replica already holding that KV while
+    ``route=rr`` scatters half the traffic cold.
+
+    The scaling claim is AGGREGATE CAPACITY, the dimension that actually
+    doubles when a second identical replica joins: the per-replica pool is
+    sized so one replica offered the whole four-group load runs out of
+    blocks — it evicts warm prefixes (recomputing them at the next hit)
+    and preempts mid-decode (recomputing the whole prompt) — while two
+    replicas hold two groups each with headroom.  On the single-core CI
+    box that recompute is the measured wall-clock difference; with real
+    cores per replica the compute-parallel term stacks on top.  One JSON
+    line on stdout."""
+    from repro.configs import get_config, reduced
+    from repro.serve.router import Router
+
+    bs, shared_blocks, gen = 16, 4, 8
+    groups, per_group, reps = 4, 2, 3
+    vocab = reduced(get_config(ARCH), num_layers=2).vocab_size
+    rng = np.random.default_rng(7)
+    heads = [rng.integers(0, vocab, (shared_blocks * bs,)).astype(np.int32)
+             for _ in range(groups)]
+    warm = [np.concatenate([heads[g],
+                            rng.integers(0, vocab, (5 + g,)).astype(np.int32)])
+            for g in range(groups)]
+    wave = [np.concatenate([heads[g],
+                            rng.integers(0, vocab,
+                                         (6 + 2 * g + m,)).astype(np.int32)])
+            for g in range(groups) for m in range(per_group)]
+    # per-replica pool: two groups (8 shared + ~8 private blocks) fit with
+    # headroom; all four groups + 8 in-flight requests do NOT — the
+    # capacity term the second replica doubles
+    eng = {"num_slots": 4, "max_len": shared_blocks * bs + 16 + gen,
+           "block_size": bs, "chunk_size": bs, "num_blocks": 24}
+    wenv = {"JAX_PLATFORMS": "cpu", "XLA_FLAGS": ""}
+
+    def run(n, route):
+        with Router(ARCH, num_replicas=n, route=route,
+                    reduced={"num_layers": 2}, engine=eng,
+                    worker_env=wenv) as router:
+            for p in warm:
+                router.submit(p, gen)
+            router.run()
+            snap = dict(router.stats)
+            best, frac = float("inf"), 0.0
+            for rep in range(reps):
+                for p in wave:
+                    router.submit(p, gen)
+                t0 = time.perf_counter()
+                router.run()
+                best = min(best, time.perf_counter() - t0)
+                if rep == 0:
+                    # hit fraction from the FIRST timed wave only: repeats
+                    # re-register every prefix on whichever replica served
+                    # it, converging rr toward all-hit
+                    hit = (router.stats["prefix_hit_tokens"]
+                           - snap["prefix_hit_tokens"])
+                    tot = (router.stats["prompt_tokens"]
+                           - snap["prompt_tokens"])
+                    frac = hit / max(tot, 1)
+            return {"tok_per_s": len(wave) * gen / best,
+                    "hit_fraction": frac,
+                    "route_decisions": router.stats["route_decisions"],
+                    "bounces": router.stats["bounces"]}
+
+    out = {"replicas1": run(1, "prefix"),
+           "replicas2_prefix": run(2, "prefix"),
+           "replicas2_rr": run(2, "rr")}
+    out["scaling_ratio"] = (out["replicas2_prefix"]["tok_per_s"]
+                            / out["replicas1"]["tok_per_s"])
+    print(json.dumps(out))
+
+
+def _bench_replicas(results):
+    env = {**os.environ, "JAX_PLATFORMS": "cpu",
+           "PYTHONPATH": str(ROOT / "src")}
+    r = subprocess.run([sys.executable, __file__, "--replicas-child"],
+                       capture_output=True, text=True, env=env, timeout=560)
+    if r.returncode != 0:
+        # recorded so check_regression fails the run — a crashed child
+        # must not leave CI green
+        results["replica_scaling"] = {"failed": (r.stdout + r.stderr)[-400:]}
+        yield f"serve_replicas,,FAILED: {(r.stdout + r.stderr)[-400:]}"
+        return
+    rs = json.loads(r.stdout.strip().splitlines()[-1])
+    results["replica_scaling"] = rs
+    yield (f"serve_replicas_1,,{rs['replicas1']['tok_per_s']:.0f} tok/s "
+           f"aggregate (1 replica, prefix route)")
+    yield (f"serve_replicas_2,,{rs['replicas2_prefix']['tok_per_s']:.0f} "
+           f"tok/s aggregate (2 replicas); prefix-hit fraction "
+           f"{rs['replicas2_prefix']['hit_fraction']:.0%} (prefix route) vs "
+           f"{rs['replicas2_rr']['hit_fraction']:.0%} (rr)")
+    yield (f"serve_replicas_scaling,,{rs['scaling_ratio']:.2f}x aggregate "
+           f"tok/s 1->2 replicas (shared-prefix waves, "
+           f"{rs['replicas2_prefix']['route_decisions']} routed admits)")
+
+
 def _bench_kernels(cfg, model, params, results):
     """Section 7: pallas-vs-xla dispatch on a served wave + autotune cache."""
     import tempfile
@@ -681,6 +793,10 @@ def check_regression(results) -> int:
     if results.get("sharded", {}).get("failed"):
         print("REGRESSION: sharded section failed "
               f"({results['sharded']['failed'][:200]})")
+        return 1
+    if results.get("replica_scaling", {}).get("failed"):
+        print("REGRESSION: replica_scaling section failed "
+              f"({results['replica_scaling']['failed'][:200]})")
         return 1
     if not BASELINE_PATH.exists():
         print(f"regression gate: no {BASELINE_PATH.name}, skipping")
@@ -768,6 +884,29 @@ def check_regression(results) -> int:
             print(f"regression gate: comm blocked "
                   f"{on['comm_blocked_fraction']:.0%} (overlap on) < "
                   f"{off['comm_blocked_fraction']:.0%} (off) OK")
+    if "replica_scaling" in base:
+        rs = results.get("replica_scaling", {})
+        # hard floor 1.5x (the router tentpole's claim) OR the committed
+        # baseline minus tolerance, whichever is stricter on this machine
+        floor = max(1.5, base["replica_scaling"]["scaling_ratio"]
+                    * (1 - REGRESSION_TOLERANCE))
+        got = rs.get("scaling_ratio", 0.0)
+        if got < floor:
+            print(f"REGRESSION: replica_scaling.scaling_ratio {got:.2f} < "
+                  f"floor {floor:.2f}")
+            rc = 1
+        else:
+            print(f"regression gate: replica_scaling.scaling_ratio "
+                  f"{got:.2f} >= floor {floor:.2f} OK")
+        pf = rs.get("replicas2_prefix", {}).get("hit_fraction", 0.0)
+        rf = rs.get("replicas2_rr", {}).get("hit_fraction", 1.0)
+        if pf <= rf:
+            print(f"REGRESSION: prefix routing did not beat rr on hit "
+                  f"tokens ({pf:.0%} vs {rf:.0%})")
+            rc = 1
+        else:
+            print(f"regression gate: prefix-hit fraction {pf:.0%} "
+                  f"(prefix route) > {rf:.0%} (rr) OK")
     return rc
 
 
@@ -790,6 +929,7 @@ def bench(results: dict | None = None):
     yield from _bench_speculative(cfg, model, params, results)
     yield from _bench_sharded(results)
     yield from _bench_kernels(cfg, model, params, results)
+    yield from _bench_replicas(results)
     JSON_PATH.write_text(json.dumps(results, indent=2) + "\n")
     yield f"serve_bench_json,,{JSON_PATH.name} written"
 
@@ -797,6 +937,9 @@ def bench(results: dict | None = None):
 if __name__ == "__main__":
     if "--sharded-child" in sys.argv:
         _sharded_child()
+        sys.exit(0)
+    if "--replicas-child" in sys.argv:
+        _replicas_child()
         sys.exit(0)
     print("name,us_per_call,derived")
     results: dict = {}

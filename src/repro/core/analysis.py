@@ -185,10 +185,13 @@ def serve_latency_summary(trace: Trace) -> dict:
     """Fold the per-request ``EV_REQ_TTFT_US`` / ``EV_REQ_TPOT_US`` events
     (one each per retirement) into distribution statistics for the run.
 
-    Returns ``{"ttft_us": {...}, "tpot_us": {...}, "spec": {...},
-    "comm": {...}}`` where the latency entries hold ``count`` / ``p50`` /
-    ``p95`` / ``max`` (floats, microseconds; zeros when the trace carries no
-    serve events), ``spec`` folds the per-dispatch ``EV_SPEC_DRAFTED`` /
+    Returns ``{"ttft_us": {...}, "tpot_us": {...}, "per_task": {...},
+    "spec": {...}, "comm": {...}}`` where the latency entries hold
+    ``count`` / ``p50`` / ``p95`` / ``max`` (floats, microseconds; zeros
+    when the trace carries no serve events), ``per_task`` breaks the same
+    TTFT/TPOT distributions out per TASK when the trace has more than one
+    (a merged replica-fleet ``.prv``: task 1 + r is replica r — empty
+    tasks, like the router on task 0, are omitted), ``spec`` folds the per-dispatch ``EV_SPEC_DRAFTED`` /
     ``EV_SPEC_ACCEPTED`` counters into the run's draft-acceptance rate
     (zeros when the run was not speculative), and ``comm`` folds the
     per-dispatch ``EV_COMM_OVERLAP_US`` / ``EV_COMM_BLOCKED_US`` counters
@@ -198,19 +201,32 @@ def serve_latency_summary(trace: Trace) -> dict:
     task's stream — the summary the serve CLI prints at exit and the
     mixed-load / sharded benches gate on.
     """
+    def _dist(vals) -> dict:
+        vals = vals.astype(float)
+        if not len(vals):
+            return {"count": 0, "p50": 0.0, "p95": 0.0, "max": 0.0}
+        return {"count": int(len(vals)),
+                "p50": float(np.percentile(vals, 50)),
+                "p95": float(np.percentile(vals, 95)),
+                "max": float(vals.max())}
+
     out: dict[str, dict] = {}
     for name, code in (("ttft_us", ev.EV_REQ_TTFT_US),
                        ("tpot_us", ev.EV_REQ_TPOT_US)):
-        vals = trace.events[trace.events["type"] == code]["value"].astype(float)
-        if len(vals):
-            out[name] = {
-                "count": int(len(vals)),
-                "p50": float(np.percentile(vals, 50)),
-                "p95": float(np.percentile(vals, 95)),
-                "max": float(vals.max()),
-            }
-        else:
-            out[name] = {"count": 0, "p50": 0.0, "p95": 0.0, "max": 0.0}
+        out[name] = _dist(trace.events[trace.events["type"] == code]["value"])
+    # multi-task traces (a merged replica fleet: router = task 0, replica r
+    # = task 1 + r) additionally break TTFT/TPOT out PER TASK, so the serve
+    # CLI can print a per-replica table — aggregate percentiles hide a
+    # slow replica entirely
+    out["per_task"] = {}
+    if trace.num_tasks > 1:
+        evs = trace.events
+        for t in range(trace.num_tasks):
+            ttft = evs[(evs["type"] == ev.EV_REQ_TTFT_US) & (evs["task"] == t)]
+            tpot = evs[(evs["type"] == ev.EV_REQ_TPOT_US) & (evs["task"] == t)]
+            if len(ttft) or len(tpot):
+                out["per_task"][t] = {"ttft_us": _dist(ttft["value"]),
+                                      "tpot_us": _dist(tpot["value"])}
     drafted = trace.events[
         trace.events["type"] == ev.EV_SPEC_DRAFTED]["value"].astype(np.int64)
     accepted = trace.events[

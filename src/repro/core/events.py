@@ -137,6 +137,14 @@ EV_POOL_ACTIVE_KIB = 42200020  # counter: bytes held by active blocks (KiB)
 # together so OVERLAP + BLOCKED == total modeled comm time for the dispatch
 EV_COMM_OVERLAP_US = 42200021  # counter: collective us hidden behind compute
 EV_COMM_BLOCKED_US = 42200022  # counter: collective us blocking compute
+# multi-replica router (serve/router.py): per routed admission the router
+# stamps the expected resident-prefix hit tokens that drove the affinity
+# score, and per prefill->decode KV-block handoff (--disaggregate) the
+# transfer size and wall time — all on the router's task-0 stream, so one
+# merged .prv carries the cross-replica request story end to end
+EV_ROUTE_PREFIX_HITS = 42200023  # counter: expected prefix-hit tokens routed
+EV_KV_XFER_BYTES = 42200024  # counter: KV-block handoff wire bytes
+EV_KV_XFER_US = 42200025  # counter: KV-block handoff wall time (us)
 BLOCK_DTYPE_IDS = {"fp16": 1, "int8": 2, "fp8": 3}
 EV_REQ_ADMIT = 40000060  # value = request id + 1 when a request enters a slot
 EV_REQ_RETIRE = 40000061  # value = request id + 1 when it completes
@@ -151,6 +159,11 @@ EV_KERNEL_VARIANT = 40000064
 # reused, no re-search) / 2 heuristic defaults (no search requested)
 EV_AUTOTUNE_SEARCH = 40000065
 EV_AUTOTUNE_HIT = 40000066
+# router (serve/router.py): one punctual event per admitted request, value =
+# the chosen replica's TASK id (replica r -> task r+1; the router itself is
+# task 0) — so EV_ROUTE_DECISION count == admitted requests in the merged
+# trace, and filtering by value isolates one replica's routed traffic
+EV_ROUTE_DECISION = 40000067
 EV_SLOT_BASE = 40000100  # per-slot occupancy: code = base + slot,
                          # value = request id + 1 (0 = slot empty)
 SERVE_CTR_LABELS = {
@@ -173,6 +186,13 @@ SERVE_CTR_LABELS = {
     EV_POOL_ACTIVE_KIB: "KV pool active-block bytes (KiB)",
     EV_COMM_OVERLAP_US: "Collective time overlapped with compute (us)",
     EV_COMM_BLOCKED_US: "Collective time blocking compute (us)",
+    EV_ROUTE_PREFIX_HITS: "Router expected prefix-hit tokens (per admit)",
+    EV_KV_XFER_BYTES: "KV handoff wire bytes (prefill -> decode replica)",
+    EV_KV_XFER_US: "KV handoff wall time (us)",
+}
+
+ROUTER_EVENT_LABELS = {
+    EV_ROUTE_DECISION: "Router decision (value = chosen replica task id)",
 }
 
 KERNEL_EVENT_LABELS = {

@@ -10,6 +10,14 @@ Extrae.jl).  Mapping policies provided here:
   * "mesh_data"       — task = data-parallel coordinate of a device in the
                         mesh, thread = model-parallel coordinate (how we map
                         an SPMD program onto the MPI-rank-shaped model);
+  * "host_device"     — host x device: TASK = a host-level process in a
+                        multi-process serving fleet (the router is task 0,
+                        engine replica r contributes its mesh-task extent at
+                        base offset 1 + r * tasks_per_host), THREAD = the
+                        device coordinate within that host.  Configured via
+                        :meth:`ProcessModel.bind_host`; this is how N replica
+                        subprocesses and the router merge into ONE .prv with
+                        distinct rows per process (serve/router.py);
   * custom            — any callables via set_task_id_fn / set_num_tasks_fn.
 """
 from __future__ import annotations
@@ -52,6 +60,10 @@ class ProcessModel:
             # configured later via bind_mesh()
             self._task_id_fn = lambda: 0
             self._num_tasks_fn = lambda: 1
+        elif mode == "host_device":
+            # configured later via bind_host()
+            self._task_id_fn = lambda: 0
+            self._num_tasks_fn = lambda: 1
         else:
             raise ValueError(f"unknown process-model mode {mode!r}")
 
@@ -66,6 +78,35 @@ class ProcessModel:
         self.mesh = mesh
         self.task_axes = names
         self.thread_axes = [a for a in thread_axes if a in mesh.axis_names]
+
+    def bind_host(self, host_task: int, num_tasks: int, *,
+                  threads_per_task: int = 1):
+        """host_device mode: pin THIS process's TASK id and the fleet-wide
+        task extent.  The router binds ``host_task=0``; replica r (one
+        local mesh task per replica at serve scale) binds
+        ``host_task=1 + r``.  A replica that itself spans a mesh offsets
+        its mesh-task coordinate by ``host_task`` instead via
+        ``set_task_id_fn`` — the header/row structure only needs the total
+        ``num_tasks`` and per-task thread extent declared here."""
+        if self.mode != "host_device":
+            raise ValueError("bind_host requires mode='host_device'")
+        if not (0 <= host_task < num_tasks):
+            raise ValueError(
+                f"host_task {host_task} outside [0, {num_tasks})")
+        self.host_task = int(host_task)
+        self.host_num_tasks = int(num_tasks)
+        self.host_threads_per_task = max(1, int(threads_per_task))
+        self._task_id_fn = lambda: self.host_task
+        self._num_tasks_fn = lambda: self.host_num_tasks
+
+    def host_threads(self) -> int | None:
+        """Declared device-thread extent per host task (host_device mode),
+        or None elsewhere — like :meth:`mesh_threads_per_task`, the trace
+        builder uses this so every fleet task gets its full thread rows
+        even when only some threads produced records."""
+        if self.mode != "host_device" or not hasattr(self, "host_task"):
+            return None
+        return self.host_threads_per_task
 
     def mesh_threads_per_task(self) -> int | None:
         """Thread count per task dictated by the bound mesh (the flattened

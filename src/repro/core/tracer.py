@@ -398,6 +398,7 @@ class Tracer:
                      int(evs["task"].max()) + 1 if len(evs) else 1)
         nthreads_local = self.pm.num_threads_seen()
         mesh_threads = self.pm.mesh_threads_per_task()
+        host_threads = self.pm.host_threads()
         threads_per_task = []
         for t in range(ntasks):
             extra = self._extra_threads.get(t, 0) + 1
@@ -407,6 +408,10 @@ class Tracer:
                 # its full model-axis thread extent even if only some threads
                 # produced records in this run
                 n = max(n, mesh_threads)
+            if host_threads is not None:
+                # host x device fleets likewise: every host task (router +
+                # each replica) gets its declared device-thread rows
+                n = max(n, host_threads)
             threads_per_task.append(n)
 
         res = rm.from_jax_devices()

@@ -96,6 +96,111 @@ def _request_extras(cfg, rng, n):
     return extras
 
 
+def _main_replicas(args) -> int:
+    """Serve through the multi-replica router (docs/router.md).
+
+    The router process itself never touches jax — the engines live in the
+    worker subprocesses, so N replicas really do compute concurrently.
+    Requests are generated in shared-prefix PAIRS (pair g shares a
+    block-aligned prefix, unique tails) so ``--route prefix`` has real
+    affinity structure to exploit; the pair index doubles as a sticky
+    session key."""
+    import time
+
+    from repro.configs import all_arch_names, get_config, reduced
+    from repro.core.analysis import serve_latency_summary
+    from repro.core.paraver import parse_prv
+    from repro.serve.router import Router
+
+    if args.arch not in all_arch_names():
+        raise SystemExit(f"unknown --arch {args.arch!r}")
+    cfg = reduced(get_config(args.arch))
+    if cfg.family not in ("dense", "moe"):
+        raise SystemExit("--replicas serves token-only prompts (dense/moe "
+                         f"archs); {args.arch} is family {cfg.family!r}")
+    cfg_over = {}
+    if args.kernel_mode:
+        cfg_over["kernel_mode"] = args.kernel_mode
+    if args.kv_dtype:
+        cfg_over["kv_dtype"] = args.kv_dtype
+    engine = dict(
+        num_slots=min(args.slots, args.requests), max_len=args.prompt_len + args.gen,
+        block_size=args.block_size, num_blocks=args.num_blocks or None,
+        prefix_cache=not args.no_prefix_cache,
+        temperature=args.temperature, top_k=args.top_k, top_p=args.top_p,
+        seed=args.seed, max_step_tokens=args.max_step_tokens or None,
+        chunk_size=args.chunk_size or None, chunk_rows=args.chunk_rows,
+        mixed_burst=args.mixed_burst, spec=args.spec, spec_k=args.spec_k,
+        spec_adaptive=args.spec_adaptive)
+
+    rng = np.random.default_rng(0)
+    shared = args.prompt_len // 2 // args.block_size * args.block_size
+    prompts = []
+    for i in range(args.requests):
+        g = i // 2
+        head_rng = np.random.default_rng(1000 + g)
+        plen = max(1, args.prompt_len - (i % 4))
+        head = head_rng.integers(0, cfg.vocab_size, (min(shared, plen),))
+        tail = rng.integers(0, cfg.vocab_size, (plen - len(head),))
+        prompts.append(np.concatenate([head, tail]).astype(np.int32))
+
+    out = pathlib.Path(args.out)
+    t0 = time.perf_counter()
+    with Router(args.arch, num_replicas=args.replicas, route=args.route,
+                disaggregate=args.disaggregate, cfg=cfg_over, engine=engine,
+                trace=args.trace, app_name=f"serve-{args.arch}") as router:
+        reqs = [router.submit(p, args.gen, session=i // 2)
+                for i, p in enumerate(prompts)]
+        results = router.run()
+        seconds = time.perf_counter() - t0
+        tokens = sum(len(results[r.rid]) for r in reqs)
+        mode = "disaggregated" if args.disaggregate else args.route
+        print(f"[serve] {args.arch} replicas={args.replicas} route={mode}: "
+              f"{tokens} tokens in {seconds:.2f}s = "
+              f"{tokens / seconds:.1f} tok/s aggregate (CPU smoke scale)")
+        st = router.stats
+        print(f"[serve] router: {st['route_decisions']} decisions, "
+              f"{st['bounces']} bounces, "
+              f"{st['prefix_hit_tokens']}/{st['prompt_tokens']} prompt "
+              f"tokens prefix-hit (expected {st['expected_hit_tokens']})")
+        if args.disaggregate:
+            print(f"[serve] kv handoff: {st['kv_xfers']} transfers, "
+                  f"{st['kv_xfer_bytes']} wire bytes "
+                  f"({router.wire_dtype}), {st['kv_xfer_us']}us wall")
+        paths = router.close(out / "serve" if args.trace else None)
+        for h in router.handles:
+            pool = h.stats.get("pool", {})
+            eng = h.stats.get("stats", {})
+            print(f"[serve] replica {h.idx} ({h.role}): "
+                  f"{eng.get('tokens_decoded', 0)} tokens decoded, "
+                  f"pool free/cached/active "
+                  f"{pool.get('free', '?')}/{pool.get('cached', '?')}/"
+                  f"{pool.get('active', '?')}, "
+                  f"{pool.get('evictions', 0)} evictions")
+    if args.trace and paths is not None:
+        trace = parse_prv(paths["prv"])
+        print(f"[serve] trace: {paths['prv']}  ({trace.summary()}; "
+              f"{trace.num_tasks} tasks: router + {args.replicas} replicas)")
+        lat = serve_latency_summary(trace)
+        if lat["per_task"]:
+            print("[serve] per-replica latency (from the merged .prv):")
+            print(f"  {'task':>4} {'role':>8} {'n':>4} "
+                  f"{'TTFT p50':>10} {'TTFT p95':>10} "
+                  f"{'TPOT p50':>10} {'TPOT p95':>10}")
+            for t, d in sorted(lat["per_task"].items()):
+                role = (router.handles[t - 1].role if 0 < t <= args.replicas
+                        else "router")
+                print(f"  {t:>4} {role:>8} {d['ttft_us']['count']:>4} "
+                      f"{d['ttft_us']['p50']:>9.0f}u {d['ttft_us']['p95']:>9.0f}u "
+                      f"{d['tpot_us']['p50']:>9.0f}u {d['tpot_us']['p95']:>9.0f}u")
+        if lat["ttft_us"]["count"]:
+            t, o = lat["ttft_us"], lat["tpot_us"]
+            print(f"[serve] aggregate over {t['count']} requests: "
+                  f"TTFT p50 {t['p50']:.0f}us / p95 {t['p95']:.0f}us; "
+                  f"TPOT p50 {o['p50']:.0f}us / p95 {o['p95']:.0f}us")
+    return 0
+
+
 def main(argv=None):
     p = argparse.ArgumentParser()
     p.add_argument("--arch", default="granite-8b")
@@ -163,6 +268,20 @@ def main(argv=None):
                         "pipeline + two-deep dispatch queue.  auto (default "
                         "via cfg.comm_overlap) = on when --mp/--mesh shards "
                         "the model axis, off single-device")
+    p.add_argument("--replicas", type=int, default=0,
+                   help="serve through N engine-replica subprocesses behind "
+                        "the prefix-affinity router (docs/router.md); 0 = "
+                        "single in-process engine")
+    p.add_argument("--route", default="prefix",
+                   choices=["prefix", "rr", "least-loaded"],
+                   help="replica routing policy: prefix = expected "
+                        "resident-prefix-hit tokens (least-loaded "
+                        "fallback), rr = round-robin")
+    p.add_argument("--disaggregate", action="store_true",
+                   help="prefill/decode disaggregation: the first replica "
+                        "serves only prompts and streams finished KV "
+                        "blocks (quantized wire format) to the decode "
+                        "replicas; needs --replicas >= 2")
     p.add_argument("--trace", action="store_true")
     p.add_argument("--flush-every", type=int, default=0,
                    help="stream the trace to disk every N decode iterations")
@@ -172,6 +291,21 @@ def main(argv=None):
         p.error("--flush-every streams the trace and requires --trace")
     if args.spec and args.mode != "unified":
         p.error("--spec is a unified-engine lane (--mode unified)")
+    if args.replicas:
+        if args.mode != "unified":
+            p.error("--replicas serves through UnifiedServeEngine workers "
+                    "(--mode unified)")
+        if args.mesh or args.mp:
+            p.error("--replicas and --mesh/--mp are separate scale-out axes "
+                    "(replicate OR shard, not both yet)")
+        if args.disaggregate and args.replicas < 2:
+            p.error("--disaggregate needs --replicas >= 2")
+        if args.flush_every:
+            p.error("--flush-every is per-engine; replica workers stream "
+                    "their own per-task segments at shutdown")
+        return _main_replicas(args)
+    if args.disaggregate:
+        p.error("--disaggregate needs --replicas >= 2")
     mesh_shape = _parse_mesh(args, p)
     if mesh_shape is not None:
         _ensure_devices(mesh_shape[0] * mesh_shape[1])

@@ -8,9 +8,15 @@
     engine.py     — ContinuousServeEngine (grouped prefill / decode-burst
                     split; the unified engine's equivalence oracle) + the
                     contiguous fixed-batch ServeEngine oracle
+    router.py     — multi-replica front-end: prefix-affinity routing over
+                    engine subprocesses, prefill/decode disaggregation,
+                    one merged cross-replica trace
+    replica.py    — the subprocess worker behind the router's pipe
+                    protocol (``python -m repro.serve.replica``)
 """
 from repro.serve.block_pool import NULL_BLOCK, BlockPool  # noqa: F401
 from repro.serve.engine import ContinuousServeEngine, ServeEngine  # noqa: F401
 from repro.serve.queue import Request, RequestQueue, RequestState  # noqa: F401
+from repro.serve.router import PrefixAffinity, Router  # noqa: F401
 from repro.serve.scheduler import Scheduler  # noqa: F401
 from repro.serve.step import UnifiedServeEngine  # noqa: F401

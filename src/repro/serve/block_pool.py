@@ -180,6 +180,16 @@ class BlockPool:
             out.append(parent)
         return out
 
+    def resident(self, h: int) -> int | None:
+        """Block id registered under chain hash ``h`` (ACTIVE or CACHED),
+        or None.  Pure query — refcounts and LRU order untouched."""
+        return self._hashed.get(h)
+
+    def resident_hashes(self) -> list[int]:
+        """Every registered chain hash with content still in the pool —
+        what a router can expect this engine to prefix-hit."""
+        return list(self._hashed.keys())
+
     def lookup(self, tokens) -> list[int]:
         """Longest run of resident prefix blocks for ``tokens``.  Capped so
         at least one token remains to prefill (the tail produces the next-

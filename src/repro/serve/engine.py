@@ -534,6 +534,80 @@ class ContinuousServeEngine:
         return req
 
     # ------------------------------------------------------------------
+    # prefix-block handoff (prefill/decode disaggregation, serve/router.py)
+    # ------------------------------------------------------------------
+    def export_prefix(self, tokens) -> tuple[list[int], list] | None:
+        """Gather the resident prefix-cache blocks covering ``tokens``'s
+        chained full-block hashes into HOST arrays.
+
+        Returns ``(hashes, leaves)`` — the chain hashes of the resident run
+        and, per paged cache leaf (tree-flatten order), the ``[layers,
+        n_blocks, ...]`` device content pulled to host — or None when
+        nothing is resident.  This is the prefill side of the
+        prefill->decode KV handoff: a prefill-only replica serves the
+        prompt once (max_new_tokens=1 retires at prefill, publishing every
+        full prompt block into its prefix cache), exports here, and the
+        decode replica :meth:`import_prefix`-es the payload so its own
+        admission prefix-hits the transferred blocks instead of
+        recomputing the prompt."""
+        if self.pool is None or not self.prefix_cache:
+            return None
+        hashes = self.pool.hash_chain(np.asarray(tokens, np.int32))
+        bids: list[int] = []
+        for h in hashes:
+            bid = self.pool.resident(h)
+            if bid is None:
+                break
+            bids.append(bid)
+        if not bids:
+            return None
+        sel = jnp.asarray(bids, jnp.int32)
+        leaves = [np.asarray(leaf[:, sel])
+                  for leaf, paged in zip(jax.tree.leaves(self._caches),
+                                         jax.tree.leaves(self._paged_mask))
+                  if paged]
+        self.stats["host_syncs"] += 1
+        return hashes[:len(bids)], leaves
+
+    def import_prefix(self, hashes: list[int], leaves: list) -> int:
+        """Scatter exported prefix blocks into this pool's cache and
+        publish them under their chain hashes (refcount 0 -> CACHED, so
+        the next admission of the same prompt claims them like any other
+        prefix hit).  Returns the number of blocks imported (0 when the
+        pool cannot host them without evicting ACTIVE work)."""
+        if self.pool is None or not self.prefix_cache or not hashes:
+            return 0
+        n = len(hashes)
+        if n > self.pool.available():
+            return 0
+        fresh = [h for h in hashes if self.pool.resident(h) is None]
+        if len(fresh) < n:
+            # partial residency: only import the missing tail if the whole
+            # prefix run stays contiguous; otherwise blocks already here win
+            if fresh != hashes[n - len(fresh):]:
+                return 0
+            keep = n - len(fresh)
+            leaves = [lf[:, keep:] for lf in leaves]
+            hashes = hashes[keep:]
+            n = len(fresh)
+            if n == 0:
+                return 0
+        bids = self.pool.alloc(n)
+        sel = jnp.asarray(bids, jnp.int32)
+        it = iter(leaves)
+
+        def scatter(c, paged):
+            if not paged:
+                return c
+            return c.at[:, sel].set(jnp.asarray(next(it)).astype(c.dtype))
+
+        self._caches = jax.tree.map(scatter, self._caches, self._paged_mask)
+        for bid, h in zip(bids, hashes):
+            self.pool.register(bid, h)
+        self.pool.free(bids)  # hashed at refcount 0 == CACHED, claimable
+        return n
+
+    # ------------------------------------------------------------------
     # serving loop
     # ------------------------------------------------------------------
     def _prefill_groups(self, admissions: list[tuple[int, Request]]):

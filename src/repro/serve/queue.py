@@ -45,6 +45,7 @@ class Request:
     admit_seq: int = -1  # global admission order (preemption priority)
     prefix_hit_tokens: int = 0  # prompt tokens served from the prefix cache
     preemptions: int = 0
+    bounces: int = 0  # router re-routes (full replica / replica death)
     t_admit_ns: int = -1
     t_first_ns: int = -1
     t_done_ns: int = -1
@@ -107,6 +108,29 @@ class RequestQueue:
         waited once; preemption must not also cost it its turn)."""
         req.state = RequestState.QUEUED
         self._q.appendleft(req)
+
+    def bounce(self, req: Request) -> Request:
+        """Re-enqueue a request bounced off a replica (admission refused by
+        a full worker, or the worker died before completing it).
+
+        The SAME :class:`Request` object goes back to the front of the
+        queue — critically, ``arrival_ns`` (the original enqueue time) is
+        untouched, so TTFT measured at whichever replica eventually serves
+        it still covers the full queue + bounce + re-admission path instead
+        of silently resetting on re-admission.  Per-admission state
+        (slot, generated tokens, timestamps after arrival) is cleared:
+        the next replica re-prefills from the prompt."""
+        req.state = RequestState.QUEUED
+        req.slot = -1
+        req.tokens = []
+        req.scheduled = 0
+        req.prefix_hit_tokens = 0
+        req.t_admit_ns = -1
+        req.t_first_ns = -1
+        req.t_done_ns = -1
+        req.bounces += 1
+        self._q.appendleft(req)
+        return req
 
     def peek(self) -> Request | None:
         return self._q[0] if self._q else None

@@ -1,0 +1,331 @@
+"""Replica worker: one :class:`UnifiedServeEngine` behind a pipe protocol.
+
+Spawned by :class:`repro.serve.router.Router` as ``python -m
+repro.serve.replica --task-id R --num-tasks N``, the worker hosts a full
+engine in its own process (own jax runtime, own device memory, own trace
+buffers) and speaks a length-prefixed frame protocol over stdin/stdout:
+
+    frame := 4-byte big-endian payload length | payload
+
+The payload codec is msgpack when the interpreter has it, JSON otherwise —
+both ends run the same container image, so whatever the worker picks the
+router picked too (the ``init`` reply names the codec as a handshake
+check).  stdout carries ONLY frames; anything the worker wants to say in
+text goes to stderr.
+
+Verbs (request ``{"op": ...}`` -> one reply frame each, strict
+request/reply alternation so the router can broadcast ``step`` to every
+replica and then collect — the replicas compute their waves CONCURRENTLY,
+which is where multi-replica throughput scaling comes from):
+
+    init      build the engine (arch + reduced overrides + engine kwargs);
+              must be the first frame
+    ping      liveness probe
+    admit     enqueue one request (router-global rid, prompt token list,
+              original ``arrival_ns`` so TTFT survives routing); replies
+              ``{"full": true}`` instead of over-committing past the
+              admission cap — the router re-routes or bounces
+    step      ``engine.run()`` the admitted wave to completion; replies
+              every request finished by this call with its tokens +
+              latency/prefix bookkeeping
+    retire    drop the worker-side bookkeeping of a finished global rid
+    stats     engine/pool counters + the pool's resident prefix-chain
+              hashes (the router refreshes its affinity map from these —
+              evictions make router-side estimates go stale)
+    export    gather the resident prefix blocks of a prompt into a spill
+              ``.npz`` (KV leaves quantized to the wire dtype via
+              core/quant.py); the prefill half of ``--disaggregate``
+    import    scatter a spill file into this engine's pool and publish the
+              chain hashes, so the next admission prefix-hits the
+              transferred blocks; the decode half of the handoff
+    flush     stream trace buffers to per-task segment files
+    shutdown  final flush (plus a task-covering RUNNING state so the
+              merged .prv row isn't bare) and exit
+
+Tracing: the worker binds the ``host_device`` process model to its
+router-assigned TASK id with the router's ``--t0-ns`` timebase
+(``perf_counter_ns`` is CLOCK_MONOTONIC on Linux — one epoch across
+processes), and only ever flushes ``split_tasks=True`` segments.  The
+router k-way merges its own stream (task 0) with every worker's segments
+into ONE ``.prv`` — mpi2prv over subprocesses instead of MPI ranks.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import struct
+import sys
+import time
+
+import numpy as np
+
+try:  # pragma: no cover - exercised implicitly when msgpack is installed
+    import msgpack
+
+    WIRE_CODEC = "msgpack"
+
+    def _pack(obj) -> bytes:
+        return msgpack.packb(obj, use_bin_type=True)
+
+    def _unpack(buf: bytes):
+        return msgpack.unpackb(buf, raw=False)
+except ImportError:  # no new deps: JSON framing is always available
+    WIRE_CODEC = "json"
+
+    def _pack(obj) -> bytes:
+        return json.dumps(obj).encode()
+
+    def _unpack(buf: bytes):
+        return json.loads(buf.decode())
+
+
+def read_frame(stream):
+    """One frame off a binary stream, or None at EOF (peer went away)."""
+    hdr = stream.read(4)
+    if len(hdr) < 4:
+        return None
+    (n,) = struct.unpack(">I", hdr)
+    buf = stream.read(n)
+    if len(buf) < n:
+        return None
+    return _unpack(buf)
+
+
+def write_frame(stream, obj):
+    payload = _pack(obj)
+    stream.write(struct.pack(">I", len(payload)) + payload)
+    stream.flush()
+
+
+# ----------------------------------------------------------------------
+# KV spill files (the disaggregation wire format)
+# ----------------------------------------------------------------------
+def save_spill(path, hashes, leaves, wire: str):
+    """Write exported prefix blocks to ``path`` (.npz).
+
+    KV leaves (ndim == 5 floats: ``[layers, blocks, block_size, Kh, D]``)
+    are quantized to the ``wire`` storage dtype with per-(position,
+    kv-head) scales — the same scheme as the quantized pool, so an int8
+    pool's already-quantized leaves (int kind) and their ndim-4 f32 scale
+    leaves pass through raw instead of being double-quantized."""
+    import jax.numpy as jnp
+
+    from repro.core.quant import kv_quantize
+
+    arrays = {"hashes": np.asarray(hashes, np.int64)}
+    kinds = []
+    for i, leaf in enumerate(leaves):
+        if wire != "fp16" and leaf.ndim == 5 and leaf.dtype.kind == "f":
+            q, s = kv_quantize(jnp.asarray(leaf), wire)
+            arrays[f"q{i}"] = np.asarray(q)
+            arrays[f"s{i}"] = np.asarray(s, np.float32)
+            kinds.append("q")
+        else:
+            arrays[f"r{i}"] = np.asarray(leaf)
+            kinds.append("r")
+    np.savez(path, kinds=np.array(kinds), wire=np.array(wire), **arrays)
+    return os.path.getsize(path)
+
+
+def load_spill(path):
+    """Inverse of :func:`save_spill`: (hashes, leaves) with quantized
+    leaves dequantized to f32 (``import_prefix`` casts to the destination
+    cache dtype at scatter time)."""
+    import jax.numpy as jnp
+
+    from repro.core.quant import kv_dequantize
+
+    with np.load(path) as z:
+        hashes = [int(h) for h in z["hashes"]]
+        leaves = []
+        for i, kind in enumerate(str(k) for k in z["kinds"]):
+            if kind == "q":
+                leaves.append(np.asarray(kv_dequantize(
+                    jnp.asarray(z[f"q{i}"]), jnp.asarray(z[f"s{i}"]),
+                    jnp.float32)))
+            else:
+                leaves.append(z[f"r{i}"])
+    return hashes, leaves
+
+
+# ----------------------------------------------------------------------
+# worker
+# ----------------------------------------------------------------------
+def _build_engine(init, tracer):
+    """Engine from the ``init`` frame: same construction path as the serve
+    CLI, so a replica fleet's per-request greedy output is bit-identical
+    to one local engine (identical reduced cfg -> identical PRNGKey(0)
+    params on every replica)."""
+    import jax
+
+    from repro.configs import get_config, reduced
+    from repro.models.model import build_model
+    from repro.serve.step import UnifiedServeEngine
+
+    cfg = reduced(get_config(init["arch"]), **(init.get("reduced") or {}))
+    for k, v in (init.get("cfg") or {}).items():
+        cfg = cfg.replace(**{k: v})
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(int(init.get("param_seed", 0))))
+    ekw = dict(init.get("engine") or {})
+    spec = ekw.pop("spec", "")
+    if spec:
+        from repro.serve.spec import make_proposer
+
+        ekw["spec"] = make_proposer(
+            spec, cfg, num_slots=ekw.get("num_slots", 4),
+            max_len=ekw.get("max_len", 64),
+            temperature=ekw.get("temperature", 0.0),
+            top_k=ekw.get("top_k", 0), top_p=ekw.get("top_p", 1.0),
+            seed=ekw.get("seed", 0))
+    return UnifiedServeEngine(cfg, params, tracer=tracer, **ekw)
+
+
+def _pool_stats(engine):
+    if engine.pool is None:
+        return {}
+    return {"free": engine.pool.num_free(), "cached": engine.pool.num_cached(),
+            "active": engine.pool.num_active(),
+            "evictions": engine.pool.stats["evictions"],
+            "hit_blocks": engine.pool.stats["hit_blocks"]}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--task-id", type=int, required=True,
+                    help="this worker's TASK id in the merged trace "
+                         "(router = 0, replica r = 1 + r)")
+    ap.add_argument("--num-tasks", type=int, required=True,
+                    help="fleet-wide task extent (1 router + N replicas)")
+    ap.add_argument("--t0-ns", type=int, default=0,
+                    help="router trace timebase (perf_counter_ns origin)")
+    ap.add_argument("--trace-base", default="",
+                    help="segment file base; empty disables tracing")
+    args = ap.parse_args(argv)
+
+    inp = sys.stdin.buffer
+    out = sys.stdout.buffer
+    # stdout is the frame channel — re-route accidental prints to stderr
+    sys.stdout = sys.stderr
+
+    init = read_frame(inp)
+    if init is None or init.get("op") != "init":
+        return 1
+
+    tracer = None
+    if args.trace_base:
+        from repro.core.tracer import Tracer
+
+        tracer = Tracer(f"replica{args.task_id}", mode="host_device")
+        tracer.pm.bind_host(args.task_id, args.num_tasks)
+        tracer.init(t0_ns=args.t0_ns or None)
+    try:
+        engine = _build_engine(init, tracer)
+    except Exception as e:  # surface build failures as a frame, not a hang
+        write_frame(out, {"error": f"{type(e).__name__}: {e}"})
+        return 1
+    max_inflight = int(init.get("max_inflight") or 2 * engine.num_slots)
+    reqs: dict[str, object] = {}  # router-global rid -> local Request
+    write_frame(out, {"ok": True, "codec": WIRE_CODEC,
+                      "num_blocks": engine.num_blocks,
+                      "block_size": engine.block_size,
+                      "max_inflight": max_inflight})
+
+    while True:
+        frame = read_frame(inp)
+        if frame is None:  # router died / closed the pipe
+            break
+        op = frame.get("op")
+        if op == "ping":
+            write_frame(out, {"ok": True})
+        elif op == "admit":
+            if engine.scheduler.inflight() >= max_inflight:
+                write_frame(out, {"full": True})
+                continue
+            try:
+                req = engine.submit(
+                    np.asarray(frame["prompt"], np.int32),
+                    int(frame["max_new_tokens"]),
+                    arrival_ns=frame.get("arrival_ns"))
+            except ValueError as e:
+                write_frame(out, {"error": str(e)})
+                continue
+            reqs[frame["rid"]] = req
+            write_frame(out, {"ok": True,
+                              "inflight": engine.scheduler.inflight()})
+        elif op == "step":
+            done = engine.run()
+            finished = {}
+            for grid in list(reqs):
+                req = reqs[grid]
+                if req.rid in done:
+                    finished[grid] = {
+                        "tokens": [int(t) for t in done[req.rid]],
+                        "ttft_ns": req.ttft_ns(),
+                        "tpot_ns": req.tpot_ns(),
+                        "prefix_hit_tokens": req.prefix_hit_tokens,
+                        "preemptions": req.preemptions,
+                    }
+                    del reqs[grid]
+            write_frame(out, {"done": finished,
+                              "inflight": engine.scheduler.inflight()})
+        elif op == "retire":
+            write_frame(out, {"ok": reqs.pop(frame["rid"], None) is not None})
+        elif op == "stats":
+            write_frame(out, {
+                "stats": {k: v for k, v in engine.stats.items()
+                          if isinstance(v, (int, float))},
+                "pool": _pool_stats(engine),
+                "resident": ([int(h) for h in engine.pool.resident_hashes()]
+                             if engine.pool is not None else []),
+                "inflight": engine.scheduler.inflight(),
+            })
+        elif op == "export":
+            t0 = time.perf_counter_ns()
+            res = engine.export_prefix(frame["tokens"])
+            if res is None:
+                write_frame(out, {"empty": True})
+                continue
+            hashes, leaves = res
+            nbytes = save_spill(frame["path"], hashes, leaves,
+                                frame.get("wire", "int8"))
+            write_frame(out, {"hashes": [int(h) for h in hashes],
+                              "blocks": len(hashes), "bytes": nbytes,
+                              "us": (time.perf_counter_ns() - t0) // 1000})
+        elif op == "import":
+            t0 = time.perf_counter_ns()
+            hashes, leaves = load_spill(frame["path"])
+            n = engine.import_prefix(hashes, leaves)
+            write_frame(out, {"imported": n,
+                              "us": (time.perf_counter_ns() - t0) // 1000})
+        elif op == "flush":
+            segs = (tracer.flush(args.trace_base, split_tasks=True)
+                    if tracer is not None else None)
+            write_frame(out, {"segments": [str(p) for p in segs or []]})
+        elif op == "shutdown":
+            if tracer is not None:
+                from repro.core import events as ev
+
+                # flush() never drains OPEN states, so the base RUNNING
+                # state from init() would be lost — inject a closed one
+                # covering the worker's lifetime for row coverage
+                tracer.inject_state(args.task_id, 0, tracer.t0,
+                                    time.perf_counter_ns(), ev.STATE_RUNNING)
+                tracer.flush(args.trace_base, emit_marker=False,
+                             split_tasks=True)
+            write_frame(out, {
+                "segments": ([str(p) for p in tracer.segments]
+                             if tracer is not None else []),
+                "stats": {k: v for k, v in engine.stats.items()
+                          if isinstance(v, (int, float))},
+                "pool": _pool_stats(engine),
+            })
+            break
+        else:
+            write_frame(out, {"error": f"unknown op {op!r}"})
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -86,6 +86,13 @@ class Scheduler:
     def drained(self) -> bool:
         return not self.queue and not self.any_active()
 
+    def inflight(self) -> int:
+        """Requests this engine has accepted but not retired: active slots
+        plus its local queue.  A replica worker compares this against its
+        admission cap to answer "full" instead of over-committing
+        (serve/replica.py)."""
+        return self.occupancy() + len(self.queue)
+
     # ------------------------------------------------------------------
     def admissions(self) -> list[tuple[int, Request]]:
         """Pop queued requests into free slots (FIFO), up to the
