@@ -37,7 +37,12 @@ the perf trajectory is tracked across PRs):
      the frame protocol) on a prefix-heavy workload — aggregate tok/s at
      1 vs 2 replicas, and the routed prefix-hit fraction under
      ``route=prefix`` vs ``route=rr`` (the affinity scorer's value: rr
-     scatters turn-2 traffic away from the replica holding its KV).
+     scatters turn-2 traffic away from the replica holding its KV);
+  9. CoW fork sampling: ``n_samples=4`` fan-out (one prefill, aliased
+     prompt blocks, per-fork CoW write frontiers) vs 4 independent
+     same-prompt requests at the SAME pool budget — tok/s, peak blocks
+     vs a single request, and greedy fork-0 asserted bit-identical to
+     the unforked oracle.
 
 Run as ``__main__`` the script also gates on ``BENCH_baseline.json``
 (committed): a >15% regression of ``seed_vs_paged.speedup`` or
@@ -788,6 +793,99 @@ def _bench_kernels(cfg, model, params, results):
            f"params={cold})")
 
 
+def _bench_fork_sampling(cfg, model, params, results):
+    """Section 9: n-way sampling via CoW forking vs the naive alternative.
+
+    Both engines get the SAME pool budget — sized so the CoW fan fits
+    whole (shared prompt blocks + per-fork write frontiers) while four
+    independent 12-block requests cannot all be resident and must run as
+    waves.  The fork path additionally pays ONE chunked prefill of the
+    164-token prompt where the independent path pays four; together those
+    are the claimed >=2x."""
+    from repro.serve.step import UnifiedServeEngine
+
+    n, prompt_len, gen, bs = 4, 164, 28, 16
+    max_len = prompt_len + gen
+    # 25 usable blocks: one request spans 12, so two independent requests
+    # fit concurrently; the fan needs ~11 aliased + (n-1) CoW tails +
+    # n decode-frontier blocks and fits whole
+    num_blocks = 26
+    prompt = np.random.default_rng(6).integers(
+        0, cfg.vocab_size, (prompt_len,)).astype(np.int32)
+    REPS = 3
+
+    def make():
+        return UnifiedServeEngine(
+            cfg, params, num_slots=n, max_len=max_len, block_size=bs,
+            chunk_size=bs, num_blocks=num_blocks, prefix_cache=False)
+
+    # single-request oracle: greedy tokens + solo block residency
+    solo = make()
+    r = solo.submit(prompt, gen)
+    want = solo.run()[r.rid]  # warmup/compile
+    solo.stats["peak_blocks"] = 0
+    r = solo.submit(prompt, gen)
+    assert np.array_equal(solo.run()[r.rid], want)
+    single_peak = solo.stats["peak_blocks"]
+
+    # 4 independent same-prompt requests (prefix cache off: no sharing)
+    indep = make()
+    [indep.submit(prompt, gen) for _ in range(n)]
+    indep.run()  # warmup
+    dt_ind = float("inf")
+    for _ in range(REPS):
+        rs = [indep.submit(prompt, gen) for _ in range(n)]
+        t0 = time.perf_counter()
+        out = indep.run()
+        dt_ind = min(dt_ind, time.perf_counter() - t0)
+    for req in rs:
+        assert np.array_equal(out[req.rid], want)
+
+    # one admission, n_samples=4: one prefill, CoW fan at prompt end
+    fork = make()
+    fork.submit(prompt, gen, n_samples=n)
+    fork.run()  # warmup
+    dt_fork, forks = float("inf"), 0
+    for _ in range(REPS):
+        f0 = fork.pool.stats["forks"]
+        c0 = fork.pool.stats["cow_copies"]
+        fork.stats["peak_blocks"] = fork.stats["peak_shared"] = 0
+        rp = fork.submit(prompt, gen, n_samples=n)
+        t0 = time.perf_counter()
+        out = fork.run()
+        dt_fork = min(dt_fork, time.perf_counter() - t0)
+        forks = fork.pool.stats["forks"] - f0
+        cow_copies = fork.pool.stats["cow_copies"] - c0
+    fork0_match = bool(np.array_equal(out[rp.rid], want))
+    all_match = fork0_match and all(
+        np.array_equal(out[k.rid], want) for k in rp.forks)
+
+    total = n * gen
+    results["fork_sampling"] = {
+        "n": n, "prompt_len": prompt_len, "gen": gen,
+        "pool_blocks": num_blocks - 1,
+        "tok_per_s_independent": total / dt_ind,
+        "tok_per_s_forked": total / dt_fork,
+        "speedup": dt_ind / dt_fork,
+        "forks": forks, "cow_copies": cow_copies,
+        "peak_blocks_forked": fork.stats["peak_blocks"],
+        "peak_blocks_single": single_peak,
+        "peak_ratio": fork.stats["peak_blocks"] / max(single_peak, 1),
+        "peak_shared_blocks": fork.stats["peak_shared"],
+        "fork0_greedy_match": fork0_match,
+        "all_streams_match": all_match,
+    }
+    yield (f"serve_fork_independent,,{total / dt_ind:.0f} tok/s "
+           f"({n} separate requests, {num_blocks - 1}-block pool)")
+    yield (f"serve_fork_cow,,{total / dt_fork:.0f} tok/s (n_samples={n}: "
+           f"{forks} forks, {cow_copies} CoW copies, peak "
+           f"{fork.stats['peak_shared']} blocks shared)")
+    yield (f"serve_fork_speedup,,{dt_ind / dt_fork:.2f}x tok/s at equal "
+           f"pool budget; peak blocks {fork.stats['peak_blocks']} vs "
+           f"{single_peak} solo = {fork.stats['peak_blocks'] / max(single_peak, 1):.2f}x; "
+           f"fork-0 greedy match={fork0_match}")
+
+
 def check_regression(results) -> int:
     """Compare against the committed baseline; nonzero = CI failure."""
     if results.get("sharded", {}).get("failed"):
@@ -884,6 +982,33 @@ def check_regression(results) -> int:
             print(f"regression gate: comm blocked "
                   f"{on['comm_blocked_fraction']:.0%} (overlap on) < "
                   f"{off['comm_blocked_fraction']:.0%} (off) OK")
+    if "fork_sampling" in base:
+        fk = results.get("fork_sampling", {})
+        # hard floor 2.0x (the CoW-fork tentpole's claim) OR the committed
+        # baseline minus tolerance, whichever is stricter on this machine
+        floor = max(2.0, base["fork_sampling"]["speedup"]
+                    * (1 - REGRESSION_TOLERANCE))
+        got = fk.get("speedup", 0.0)
+        if got < floor:
+            print(f"REGRESSION: fork_sampling.speedup {got:.2f} < floor "
+                  f"{floor:.2f}")
+            rc = 1
+        else:
+            print(f"regression gate: fork_sampling.speedup {got:.2f} >= "
+                  f"floor {floor:.2f} OK")
+        if not fk.get("fork0_greedy_match"):
+            print("REGRESSION: fork_sampling.fork0_greedy_match — the "
+                  "forked fan changed fork 0's greedy tokens")
+            rc = 1
+        if fk.get("peak_ratio", 99.0) >= 2.0:
+            print(f"REGRESSION: fork_sampling.peak_ratio "
+                  f"{fk.get('peak_ratio'):.2f} >= 2.0 — the fan is copying "
+                  f"instead of aliasing prompt blocks")
+            rc = 1
+        else:
+            print(f"regression gate: fork_sampling.peak_ratio "
+                  f"{fk.get('peak_ratio', 0.0):.2f} < 2.0 OK "
+                  f"({fk.get('peak_shared_blocks', 0)} blocks shared at peak)")
     if "replica_scaling" in base:
         rs = results.get("replica_scaling", {})
         # hard floor 1.5x (the router tentpole's claim) OR the committed
@@ -930,6 +1055,7 @@ def bench(results: dict | None = None):
     yield from _bench_sharded(results)
     yield from _bench_kernels(cfg, model, params, results)
     yield from _bench_replicas(results)
+    yield from _bench_fork_sampling(cfg, model, params, results)
     JSON_PATH.write_text(json.dumps(results, indent=2) + "\n")
     yield f"serve_bench_json,,{JSON_PATH.name} written"
 

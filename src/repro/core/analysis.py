@@ -186,7 +186,8 @@ def serve_latency_summary(trace: Trace) -> dict:
     (one each per retirement) into distribution statistics for the run.
 
     Returns ``{"ttft_us": {...}, "tpot_us": {...}, "per_task": {...},
-    "spec": {...}, "comm": {...}}`` where the latency entries hold
+    "spec": {...}, "forks": {...}, "comm": {...}}`` where the latency
+    entries hold
     ``count`` / ``p50`` / ``p95`` / ``max`` (floats, microseconds; zeros
     when the trace carries no serve events), ``per_task`` breaks the same
     TTFT/TPOT distributions out per TASK when the trace has more than one
@@ -237,6 +238,20 @@ def serve_latency_summary(trace: Trace) -> dict:
         "accepted": int(accepted.sum()),
         "acceptance": (float(accepted.sum() / drafted.sum())
                        if drafted.sum() else 0.0),
+    }
+    # CoW fan-out: every forked child retires through the same
+    # EV_REQ_TTFT_US / EV_REQ_TPOT_US path as its parent, so the latency
+    # distributions above already cover the per-fork streams; this entry
+    # adds the fork ledger itself — EV_FORK marks each minted child
+    # (value = parent rid + 1) and the EV_BLOCKS_SHARED gauge's peak
+    # proves the fan aliased the prompt blocks instead of copying them
+    forks = trace.events[trace.events["type"] == ev.EV_FORK]
+    shared = trace.events[
+        trace.events["type"] == ev.EV_BLOCKS_SHARED]["value"].astype(np.int64)
+    out["forks"] = {
+        "count": int(len(forks)),
+        "parents": int(len(np.unique(forks["value"]))),
+        "peak_shared_blocks": int(shared.max()) if len(shared) else 0,
     }
     out["comm"] = comm_overlap_summary(trace)
     return out

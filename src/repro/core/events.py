@@ -145,6 +145,12 @@ EV_COMM_BLOCKED_US = 42200022  # counter: collective us blocking compute
 EV_ROUTE_PREFIX_HITS = 42200023  # counter: expected prefix-hit tokens routed
 EV_KV_XFER_BYTES = 42200024  # counter: KV-block handoff wire bytes
 EV_KV_XFER_US = 42200025  # counter: KV-block handoff wall time (us)
+# copy-on-write decode forking (serve/block_pool.py fork + serve/step.py):
+# SHARED counts blocks referenced by more than one request (ref >= 2) —
+# emitted with every EV_BLOCKS_* gauge update, so the prefill amortisation
+# of n-way sampling/beam/sessions is a first-class Paraver curve (shared
+# stays high while the forks decode; it collapses as siblings retire)
+EV_BLOCKS_SHARED = 42200026  # counter: KV blocks shared by >= 2 requests
 BLOCK_DTYPE_IDS = {"fp16": 1, "int8": 2, "fp8": 3}
 EV_REQ_ADMIT = 40000060  # value = request id + 1 when a request enters a slot
 EV_REQ_RETIRE = 40000061  # value = request id + 1 when it completes
@@ -164,6 +170,11 @@ EV_AUTOTUNE_HIT = 40000066
 # task 0) — so EV_ROUTE_DECISION count == admitted requests in the merged
 # trace, and filtering by value isolates one replica's routed traffic
 EV_ROUTE_DECISION = 40000067
+# copy-on-write fork (serve/step.py): one punctual event per CHILD minted
+# off a completing prompt (n_samples=4 -> 3 events, the parent keeps its
+# slot) or per beam-search table reassignment, value = parent rid + 1 —
+# so EV_FORK count == (n-1) * admitted fan-out requests in a sampling run
+EV_FORK = 40000068
 EV_SLOT_BASE = 40000100  # per-slot occupancy: code = base + slot,
                          # value = request id + 1 (0 = slot empty)
 SERVE_CTR_LABELS = {
@@ -189,6 +200,7 @@ SERVE_CTR_LABELS = {
     EV_ROUTE_PREFIX_HITS: "Router expected prefix-hit tokens (per admit)",
     EV_KV_XFER_BYTES: "KV handoff wire bytes (prefill -> decode replica)",
     EV_KV_XFER_US: "KV handoff wall time (us)",
+    EV_BLOCKS_SHARED: "KV blocks shared by >= 2 requests (CoW forking)",
 }
 
 ROUTER_EVENT_LABELS = {

@@ -26,6 +26,24 @@ import jax.numpy as jnp
 
 NEG_FILTERED = -2.0e38  # mask value for filtered-out vocab entries
 
+# fold_in salt separating per-fork key derivation from every other consumer
+# of the engine's dispatch key (step.py reserves 1 << 17 for spec-accept and
+# 1 << 18 for chunk sampling; forks get their own plane so a fork stream can
+# never collide with a dispatch stream)
+_FORK_SALT = 1 << 19
+
+
+def fork_key(key, fork_index: int):
+    """Per-fork PRNG key for n-way CoW sampling: fold the fork index into
+    the request's base key.  Fork 0 is the parent and keeps ``key``
+    UNCHANGED — its stream (and therefore greedy output) is bit-identical
+    to an unforked request; siblings ``1..n-1`` fold into disjoint streams
+    that are pure functions of (seed, traffic, fork index), so the same
+    ``--seed`` reproduces all n streams across runs."""
+    if fork_index == 0:
+        return key
+    return jax.random.fold_in(key, _FORK_SALT + int(fork_index))
+
 
 def filter_logits(lg, top_k: int = 0, top_p: float = 1.0):
     """Top-k then nucleus (top-p) filtering over the last axis.

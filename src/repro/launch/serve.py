@@ -149,7 +149,7 @@ def _main_replicas(args) -> int:
     with Router(args.arch, num_replicas=args.replicas, route=args.route,
                 disaggregate=args.disaggregate, cfg=cfg_over, engine=engine,
                 trace=args.trace, app_name=f"serve-{args.arch}") as router:
-        reqs = [router.submit(p, args.gen, session=i // 2)
+        reqs = [router.submit(p, args.gen, session=i // 2, n_samples=args.n)
                 for i, p in enumerate(prompts)]
         results = router.run()
         seconds = time.perf_counter() - t0
@@ -226,6 +226,28 @@ def main(argv=None):
     p.add_argument("--slots", type=int, default=4)
     p.add_argument("--prompt-len", type=int, default=32)
     p.add_argument("--gen", type=int, default=32)
+    p.add_argument("--n", type=int, default=1,
+                   help="samples per prompt: each request prefills ONCE and "
+                        "CoW-forks into n decode streams whose block tables "
+                        "alias the prompt blocks (docs/paged_cache.md); "
+                        "per-fork PRNG keys fold --seed + fork index, so "
+                        "sampled fans are reproducible (unified mode)")
+    p.add_argument("--best-of", type=int, default=0,
+                   help="candidate count: sugar for --n N.  The serve path "
+                        "tracks no EOS/logprob state, so ranking the n "
+                        "candidates is the caller's job — the flag "
+                        "demonstrates the one-prefill fan-out cost model "
+                        "(use --beam for model-scored search)")
+    p.add_argument("--beam", type=int, default=0,
+                   help="beam search width: fork-based beams on the CoW "
+                        "pool, per-step score/prune, summed log-prob "
+                        "ranking (unified mode, single engine, serves "
+                        "prompts one at a time)")
+    p.add_argument("--session", action="store_true",
+                   help="serve each prompt as a 2-turn conversation under a "
+                        "persistent session id: turn 2 re-submits the full "
+                        "turn-1 context + fresh tokens and must prefix-hit "
+                        "the pinned blocks (unified mode, single engine)")
     p.add_argument("--temperature", type=float, default=0.0)
     p.add_argument("--top-k", type=int, default=0,
                    help="top-k sampling filter (0 = off; ignored when greedy)")
@@ -291,6 +313,21 @@ def main(argv=None):
         p.error("--flush-every streams the trace and requires --trace")
     if args.spec and args.mode != "unified":
         p.error("--spec is a unified-engine lane (--mode unified)")
+    if args.best_of:
+        if args.n > 1 and args.n != args.best_of:
+            p.error("--best-of implies --n; pick one")
+        args.n = args.best_of
+    if (args.n > 1 or args.beam or args.session) and args.mode != "unified":
+        p.error("--n/--best-of/--beam/--session ride the unified engine's "
+                "CoW fork path (--mode unified)")
+    if args.beam and (args.n > 1 or args.session):
+        p.error("--beam is a standalone search (no --n/--session)")
+    if args.session and args.n > 1:
+        p.error("--session persists ONE stream; fan-out is per-request "
+                "(--n) — they are mutually exclusive")
+    if args.replicas and (args.beam or args.session):
+        p.error("--beam/--session need the single in-process engine "
+                "(--replicas routes sticky sessions on its own)")
     if args.replicas:
         if args.mode != "unified":
             p.error("--replicas serves through UnifiedServeEngine workers "
@@ -336,12 +373,17 @@ def main(argv=None):
     params = model.init(jax.random.PRNGKey(0))
     out = pathlib.Path(args.out)
 
+    slots = min(args.slots, args.requests)
+    if args.beam:
+        slots = max(slots, args.beam)  # beams borrow the slot rows
     tracer = xtrace.init(f"serve-{args.arch}") if args.trace else None
     rng = np.random.default_rng(0)
     prompts = rng.integers(
         0, cfg.vocab_size, (args.requests, args.prompt_len)).astype(np.int32)
     extras = _request_extras(cfg, np.random.default_rng(1), args.requests)
     max_len = args.prompt_len + cfg.num_patches + args.gen
+    if args.session:  # turn 2 = turn-1 context + 8 follow-up + gen more
+        max_len += args.gen + 8
 
     if args.mode == "static":
         engine = ServeEngine(cfg, params, max_len=max_len, tracer=tracer,
@@ -368,12 +410,12 @@ def main(argv=None):
                 unified_kw.update(
                     spec=make_proposer(
                         args.spec, cfg,
-                        num_slots=min(args.slots, args.requests),
+                        num_slots=slots,
                         max_len=max_len, temperature=args.temperature,
                         top_k=args.top_k, top_p=args.top_p, seed=args.seed),
                     spec_k=args.spec_k, spec_adaptive=args.spec_adaptive)
         engine = cls(
-            cfg, params, num_slots=min(args.slots, args.requests), max_len=max_len,
+            cfg, params, num_slots=slots, max_len=max_len,
             block_size=args.block_size,
             num_blocks=args.num_blocks or None,
             prefix_cache=not args.no_prefix_cache,
@@ -390,12 +432,45 @@ def main(argv=None):
             print("[serve] sharding summary:")
             for line in engine.sharding_summary():
                 print(f"  {line}")
-        # staggered prompt lengths exercise variable-length admission
-        for i in range(args.requests):
-            plen = max(1, args.prompt_len - (i % 4))
-            ex = {k: v[i] for k, v in extras.items()}
-            engine.submit(prompts[i, :plen], args.gen, extras=ex)
-        engine.run()
+        if args.beam:
+            # standalone model-scored search: one prompt at a time on the
+            # idle engine (beams borrow the slot rows)
+            for i in range(args.requests):
+                plen = max(1, args.prompt_len - (i % 4))
+                beams = engine.beam_search(prompts[i, :plen], args.gen,
+                                           width=args.beam)
+                print(f"[serve] beam prompt {i}: width {args.beam}, best "
+                      f"sum-log-prob {beams[0][1]:.3f} "
+                      f"(worst kept {beams[-1][1]:.3f})")
+        elif args.session:
+            # 2-turn conversations: turn 2 extends turn 1's full context
+            # and must serve it from the session's pinned blocks
+            t1 = []
+            for i in range(args.requests):
+                plen = max(1, args.prompt_len - (i % 4))
+                t1.append(engine.submit(prompts[i, :plen], args.gen,
+                                        session=f"s{i}"))
+            out1 = engine.run()
+            t2 = []
+            for i, r in enumerate(t1):
+                follow = rng.integers(0, cfg.vocab_size, (8,)).astype(np.int32)
+                ctx = np.concatenate([r.prompt, out1[r.rid], follow])
+                t2.append(engine.submit(ctx, args.gen, session=f"s{i}"))
+            engine.run()
+            hit = sum(r.prefix_hit_tokens for r in t2)
+            need = sum(r.prompt_len for r in t2)
+            print(f"[serve] sessions: {len(t2)} turn-2 requests, "
+                  f"{hit}/{need} prompt tokens served from pinned context")
+            for i in range(args.requests):
+                engine.close_session(f"s{i}")
+        else:
+            # staggered prompt lengths exercise variable-length admission
+            for i in range(args.requests):
+                plen = max(1, args.prompt_len - (i % 4))
+                ex = {k: v[i] for k, v in extras.items()}
+                engine.submit(prompts[i, :plen], args.gen, extras=ex,
+                              n_samples=args.n)
+            engine.run()
         stats = engine.throughput_stats()
 
     mesh_note = (f" mesh={mesh_shape[0]}dx{mesh_shape[1]}m"
@@ -416,6 +491,11 @@ def main(argv=None):
         counts = (" ".join(f"{k}={v}" for k, v in sorted(kd.items()))
                   or "none recorded")
         print(f"[serve] attention kernels (mode={cfg.kernel_mode}): {counts}")
+        if stats.get("forks", 0):
+            print(f"[serve] CoW forking: {stats['forks']} forks, "
+                  f"{stats['cow_copies']} block copies, peak "
+                  f"{stats.get('peak_shared', 0)} blocks shared "
+                  f"(n={args.beam or args.n} per prompt)")
     if args.mode == "unified":
         note = ("on" if engine.chunkable
                 else "off — state-carrying family, whole-prompt admission")
@@ -460,6 +540,11 @@ def main(argv=None):
                   f"{sp['drafted']} drafts accepted "
                   f"({sp['acceptance']:.0%}) over {sp['dispatches']} "
                   f"verify dispatches")
+        if lat["forks"]["count"]:
+            fk = lat["forks"]
+            print(f"[serve] forks (from trace): {fk['count']} children off "
+                  f"{fk['parents']} parents, peak "
+                  f"{fk['peak_shared_blocks']} blocks shared")
     return 0
 
 

@@ -128,6 +128,24 @@ def _span_dest(block_tables, row_start, row_len, q, bs):
     return jnp.where(valid, blk * bs + pos % bs, pos % bs).reshape(-1)
 
 
+def copy_pool_blocks(leaf, src, dst):
+    """Copy whole pool blocks ``src[i] -> dst[i]`` within one pooled leaf.
+
+    Leaves here are the engine's layers-STACKED pool entries —
+    ``[layers, NB, bs, ...]`` for data and scale alike — so the block axis
+    is axis 1, not axis 0.  This is the device half of copy-on-write
+    forking (serve/block_pool.py ``cow``): the host moves a writer's
+    reference to a fresh block, and this replicates the shared block's
+    contents there before the write dispatches, so the copy is bit-exact
+    and the other holders never observe the divergence.  Call sites pad
+    the pair list with NULL -> NULL self-copies to keep the jit cache
+    small; block 0 is garbage by contract, so the padding is inert.
+    """
+    out = leaf.at[:, dst].set(leaf[:, src])
+    axes = (None,) + (PAGED_POOL_AXES if leaf.ndim == 5 else PAGED_SCALE_AXES)
+    return constrain(out, axes)
+
+
 def _scatter_pool(leaf, new_flat, dest, axes):
     flat = leaf.reshape((leaf.shape[0] * leaf.shape[1],) + leaf.shape[2:])
     flat = flat.at[dest].set(new_flat.astype(leaf.dtype))

@@ -62,11 +62,12 @@ class BlockPool:
         self._hash_of = [None] * self.num_blocks  # block -> registered hash
         # hash -> block, insertion/touch order == LRU order for eviction
         self._hashed: collections.OrderedDict[int, int] = collections.OrderedDict()
-        self.stats = {"allocs": 0, "evictions": 0, "hit_blocks": 0}
+        self.stats = {"allocs": 0, "evictions": 0, "hit_blocks": 0,
+                      "forks": 0, "cow_copies": 0}
         if tracer is not None:
             for code in (ev.EV_BLOCKS_FREE, ev.EV_BLOCKS_CACHED,
                          ev.EV_BLOCKS_ACTIVE, ev.EV_BLOCK_DTYPE,
-                         ev.EV_POOL_ACTIVE_KIB):
+                         ev.EV_POOL_ACTIVE_KIB, ev.EV_BLOCKS_SHARED):
                 tracer.register(code, ev.SERVE_CTR_LABELS[code])
             tracer.register(ev.EV_EVICT, "KV block evicted (block id)")
             # punctual, once: the pool's storage dtype as a counter value so
@@ -94,6 +95,13 @@ class BlockPool:
     def ref(self, bid: int) -> int:
         return self._ref[bid]
 
+    def num_shared(self) -> int:
+        """Blocks referenced by more than one request (CoW-shared): the
+        gauge that proves n-way forks alias the prompt instead of copying
+        it.  A shared block must be copied-on-write before any fork may
+        scatter into it."""
+        return sum(1 for r in self._ref[1:] if r > 1)
+
     def blocks_for(self, num_tokens: int) -> int:
         """Blocks spanning cache positions [0, num_tokens)."""
         return -(-int(num_tokens) // self.block_size)
@@ -107,6 +115,7 @@ class BlockPool:
             self.tracer.emit(ev.EV_BLOCKS_CACHED, self.num_cached())
             active = self.num_active()
             self.tracer.emit(ev.EV_BLOCKS_ACTIVE, active)
+            self.tracer.emit(ev.EV_BLOCKS_SHARED, self.num_shared())
             self.tracer.emit(ev.EV_BLOCK_DTYPE,
                              ev.BLOCK_DTYPE_IDS.get(self.kv_dtype, 0))
             if self.block_bytes:
@@ -166,6 +175,42 @@ class BlockPool:
             if self._ref[bid] == 0 and self._hash_of[bid] is None:
                 self._free.append(bid)
         self._emit_gauges()
+
+    # ------------------------------------------------------------------
+    # copy-on-write forking
+    # ------------------------------------------------------------------
+    def fork(self, bids) -> list[int]:
+        """Alias one child's view of a parent's block list: every real
+        block (full prompt blocks AND the partial tail) gains one
+        reference; nothing is copied.  The returned list is the child's own
+        table — identical block ids, independently owned refs.  Writes into
+        a shared block are deferred to :meth:`cow`: the partial tail is the
+        only block a forked request ever writes while shared, so n-way
+        sampling costs n-1 tail copies and zero full-block copies."""
+        real = [b for b in bids if b != NULL_BLOCK]
+        self.incref(real)
+        self.stats["forks"] += 1
+        return list(bids)
+
+    def cow(self, bid: int) -> tuple[int, bool]:
+        """Copy-on-write gate before scattering into ``bid``.  A privately
+        held block (ref <= 1) is written in place — ``(bid, False)``.  A
+        shared block must not be scribbled under its other holders: this
+        writer's reference moves to a freshly allocated block —
+        ``(fresh, True)`` — and the caller copies the device-side contents
+        ``bid -> fresh`` before dispatching the write.  The last holder to
+        write inherits the original in place (ref drops back to 1 as the
+        earlier writers peel off), so n holders cost exactly n-1 copies.
+        May raise ``MemoryError`` like :meth:`alloc` — callers preempt and
+        retry under the same discipline."""
+        if self._ref[bid] <= 1:
+            return bid, False
+        fresh = self.alloc(1)[0]
+        # drop this writer's reference on the shared source; the remaining
+        # holders keep theirs (a hashed source can even stay CACHED-able)
+        self.free([bid])
+        self.stats["cow_copies"] += 1
+        return fresh, True
 
     # ------------------------------------------------------------------
     # prefix cache

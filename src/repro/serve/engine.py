@@ -110,6 +110,13 @@ class _MeshState:
 class ContinuousServeEngine:
     """Continuous-batching engine over a paged KV-block pool."""
 
+    # n-way CoW fan-out (``submit(n_samples=...)``) needs the chunk-sampling
+    # path that forks sibling rows off a completing prompt — only the
+    # unified token-budget step implements it (serve/step.py flips this on
+    # when the config is chunkable).  The legacy two-path engine rejects
+    # fan-out loudly instead of silently serving n sequential requests.
+    supports_fork = False
+
     def __init__(self, cfg: ModelConfig, params, *, num_slots: int, max_len: int,
                  block_size: int = 16, num_blocks: int | None = None,
                  prefix_cache: bool = True, tracer: Tracer | None = None,
@@ -235,6 +242,15 @@ class ContinuousServeEngine:
         self._req_hashes: dict[int, list[int]] = {}  # rid -> prompt hash chain
         self._chain_memo: dict[int, tuple[int, list[int]]] = {}  # rid -> (len, chain)
         self._preempted: list[Request] = []  # requeue deferred past token drain
+        # multi-turn sessions: id -> {"context": np[int32], "blocks": [bid],
+        # "tokens": int} — the blocks are the session's PIN (one extra ref
+        # per full context block, taken at turn retirement), so turn k+1
+        # prefix-hits the whole prior conversation even under pool pressure
+        self._sessions: dict[str, dict] = {}
+        # copy-on-write transfers planned by _ensure_blocks / the spec lane:
+        # (src, dst) block pairs whose device contents must be replicated
+        # before the next dispatch scatters into dst (serve/block_pool.py)
+        self._cow_pairs: list[tuple[int, int]] = []
         self._key = jax.random.PRNGKey(seed)
         self._dispatches = 0  # burst dispatch counter (drives the RNG stream)
 
@@ -261,12 +277,23 @@ class ContinuousServeEngine:
             self._admit = jax.jit(self._admit_impl, donate_argnums=(0,))
             self._burst = jax.jit(self._burst_impl, donate_argnums=(1,),  # caches
                                   static_argnames=("steps",))
+        # CoW block replication (device half of pool.cow): caches donated,
+        # pair lists padded to a power of two with NULL -> NULL self-copies
+        # so the jit cache stays O(log max_pairs)
+        if self.meshstate is not None:
+            self._copy_blocks = jax.jit(self._copy_blocks_impl,
+                                        donate_argnums=(0,),
+                                        out_shardings=self._cache_sh)
+        else:
+            self._copy_blocks = jax.jit(self._copy_blocks_impl,
+                                        donate_argnums=(0,))
         self._aot_cache: dict = {}  # signature -> (compiled, collective ops)
 
         # --- run statistics ---
         self.stats = {"iterations": 0, "prefills": 0, "tokens_decoded": 0,
                       "prefill_tokens": 0, "prefix_hit_tokens": 0,
                       "preemptions": 0, "peak_active": 0, "peak_blocks": 0,
+                      "peak_shared": 0,
                       "host_syncs": 0, "decode_syncs": 0,
                       "decode_dispatches": 0, "planned_ahead": 0,
                       "comm_overlap_us": 0, "comm_blocked_us": 0,
@@ -427,6 +454,37 @@ class ContinuousServeEngine:
         bt = tables if self._has_paged else None
         return self._decode_scan(params, caches, tok, idx, active, bt, key, steps)
 
+    def _copy_blocks_impl(self, caches, src, dst):
+        """Replicate pool blocks ``src[i] -> dst[i]`` across every paged
+        leaf (data + quantization scales) — the device half of copy-on-
+        write: a fork's writer reference moved to ``dst`` on the host
+        (pool.cow), and this makes ``dst``'s contents bit-identical to the
+        shared ``src`` before the write dispatches."""
+        from repro.models import cache_utils
+
+        return jax.tree.map(
+            lambda leaf, paged: (cache_utils.copy_pool_blocks(leaf, src, dst)
+                                 if paged else leaf),
+            caches, self._paged_mask)
+
+    def _flush_cow(self):
+        """Apply pending CoW block copies in ONE jitted call before the
+        next dispatch.  Pairs pad to a power of two with NULL -> NULL
+        self-copies (block 0 is garbage by contract) so distinct pair
+        counts share executables."""
+        if not self._cow_pairs:
+            return
+        pairs = self._cow_pairs
+        self._cow_pairs = []
+        n = 1
+        while n < len(pairs):
+            n *= 2
+        pairs = pairs + [(NULL_BLOCK, NULL_BLOCK)] * (n - len(pairs))
+        src = self._dev(jnp.asarray([p[0] for p in pairs], jnp.int32))
+        dst = self._dev(jnp.asarray([p[1] for p in pairs], jnp.int32))
+        with self._with_rules():
+            self._caches = self._copy_blocks(self._caches, src, dst)
+
     # ------------------------------------------------------------------
     # admission policy (Scheduler callback): blocks, not slots, gate entry
     # ------------------------------------------------------------------
@@ -514,7 +572,8 @@ class ContinuousServeEngine:
     # request intake
     # ------------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int, *, extras: dict | None = None,
-               arrival_ns: int | None = None) -> Request:
+               arrival_ns: int | None = None, n_samples: int = 1,
+               session: str | None = None) -> Request:
         # reject BEFORE enqueueing: a rejected request must not linger in the
         # queue and get served anyway.  Paged storage holds ABSOLUTE
         # positions, so the capacity bound applies to SWA archs too (the
@@ -527,11 +586,80 @@ class ContinuousServeEngine:
                 raise ValueError(
                     f"prompt {plen} + {max_new_tokens} new tokens needs cache "
                     f"capacity {need} > {self.capacity}")
+        if n_samples > 1:
+            # loud exclusion, not silent degradation: fan-out needs the
+            # chunk-sampling fork path of the unified step (serve/step.py)
+            if not self.supports_fork:
+                raise ValueError(
+                    f"n_samples={n_samples} needs CoW forking, which "
+                    f"{type(self).__name__} does not support for "
+                    f"family={self.cfg.family!r} (unified engine + chunkable "
+                    f"config only)")
+            if session is not None:
+                raise ValueError("n_samples > 1 and session are mutually "
+                                 "exclusive (a session persists ONE stream)")
+        if session is not None:
+            if not self.prefix_cache:
+                raise ValueError(
+                    "sessions persist context through the prefix cache; "
+                    "enable prefix_cache (token-only prompts, fully-paged "
+                    "model) to use session ids")
+            held = self._sessions.get(session)
+            if held is not None:
+                ctx = held["context"]
+                p = np.asarray(prompt, np.int32)
+                if len(p) <= len(ctx) or not np.array_equal(p[:len(ctx)], ctx):
+                    raise ValueError(
+                        f"session {session!r}: the new prompt must extend the "
+                        f"stored {len(ctx)}-token context (turn k+1 = full "
+                        f"conversation so far + new tokens)")
         req = self.queue.submit(prompt, max_new_tokens, extras=extras,
-                                arrival_ns=arrival_ns)
+                                arrival_ns=arrival_ns, n_samples=n_samples,
+                                session=session)
         if self.tracer is not None:
             self.tracer.emit(ev.EV_QUEUE_DEPTH, len(self.queue))
         return req
+
+    # ------------------------------------------------------------------
+    # multi-turn sessions: pin the full context across requests
+    # ------------------------------------------------------------------
+    def _session_pin(self, req: Request):
+        """At a session turn's retirement, publish + pin its full context.
+
+        The context written to the pool is ``prompt ++ tokens[:-1]`` (the
+        last sampled token's KV is never written — it would be the next
+        step's input); every FULL block of it is registered under the
+        chained hash and given one extra reference, so the conversation
+        survives eviction until the next turn claims it (or the session
+        closes).  The previous turn's pin — a prefix of this one — is
+        released after the new pin is taken, so the session never drops to
+        zero references in between."""
+        sid = req.session
+        context = np.concatenate(
+            [req.prompt, np.asarray(req.tokens, np.int32)])
+        written = len(context) - 1  # last token's KV not in the pool
+        nfull = written // self.block_size
+        blocks = self._slot_blocks[req.slot][:nfull]
+        hashes = self.pool.hash_chain(context[:nfull * self.block_size])
+        for bid, h in zip(blocks, hashes):
+            self.pool.register(bid, h)
+        self.pool.incref(blocks)  # the session's pin
+        prev = self._sessions.get(sid)
+        self._sessions[sid] = {"context": context, "blocks": list(blocks),
+                               "tokens": written}
+        if prev is not None:
+            self.pool.free(prev["blocks"])  # hand over turn k's pin
+
+    def close_session(self, session: str) -> int:
+        """Release a session's pin: its context blocks drop to the prefix
+        cache (CACHED, evictable — a re-opened conversation may still hit
+        them) and the pool conserves FREE/ACTIVE/CACHED.  Returns the
+        number of pinned blocks released; unknown ids are a no-op 0."""
+        held = self._sessions.pop(session, None)
+        if held is None:
+            return 0
+        self.pool.free(held["blocks"])
+        return len(held["blocks"])
 
     # ------------------------------------------------------------------
     # prefix-block handoff (prefill/decode disaggregation, serve/router.py)
@@ -706,6 +834,8 @@ class ContinuousServeEngine:
         req.t_done_ns = _now_ns()
         self._active[req.slot] = False
         self._active_dirty = True
+        if req.session is not None and self.prefix_cache:
+            self._session_pin(req)  # before the slot's refs drop
         self._release_blocks(req.slot)
         req.extras.clear()  # prefill inputs (frames/patches) are dead weight now
         if self.tracer is not None:
@@ -754,17 +884,37 @@ class ContinuousServeEngine:
                 - (r.scheduled - int(self._slot_sched0[s]))
                 for s, r in pairs))
             shortfall: list[tuple[int, int]] = []  # (slot, missing blocks)
+            shared: list[tuple[int, int]] = []  # (slot, w): CoW before write
             total = 0
             for slot, req in pairs:
-                last_pos = (int(self._slot_start[slot]) + req.scheduled
-                            - int(self._slot_sched0[slot]) + steps - 2)
-                missing = last_pos // self.block_size + 1 - len(self._slot_blocks[slot])
+                first_pos = (int(self._slot_start[slot]) + req.scheduled
+                             - int(self._slot_sched0[slot]) - 1)
+                last_pos = first_pos + steps - 1
+                owned = len(self._slot_blocks[slot])
+                missing = last_pos // self.block_size + 1 - owned
                 if missing > 0:
                     shortfall.append((slot, missing))
                     total += missing
+                # copy-on-write: any block this burst writes while another
+                # request still references it (a CoW fork's shared partial
+                # tail) must be copied first — each copy costs one block,
+                # charged against availability alongside the growth
+                for w in range(first_pos // self.block_size,
+                               min(last_pos // self.block_size, owned - 1) + 1):
+                    if self.pool.ref(self._slot_blocks[slot][w]) > 1:
+                        shared.append((slot, w))
+                        total += 1
             if total <= self.pool.available():
                 for slot, missing in shortfall:
                     self._grow_slot_blocks(slot, missing)
+                for slot, w in shared:
+                    old = self._slot_blocks[slot][w]
+                    fresh, copied = self.pool.cow(old)
+                    if copied:
+                        self._slot_blocks[slot][w] = fresh
+                        self._tables[slot, w] = fresh
+                        self._tables_dirty = True
+                        self._cow_pairs.append((old, fresh))
                 return pairs, steps
             pairs = self._preempt_one(pairs)
         return pairs, 0
@@ -856,9 +1006,12 @@ class ContinuousServeEngine:
             if self.pool is not None:
                 self.stats["peak_blocks"] = max(self.stats["peak_blocks"],
                                                 self.pool.num_active())
+                self.stats["peak_shared"] = max(self.stats["peak_shared"],
+                                                self.pool.num_shared())
             dispatched = None
             pairs = [(s, r) for s, r in self.scheduler.active() if self._active[s]]
             pairs, steps = self._ensure_blocks(pairs)
+            self._flush_cow()  # CoW copies land before the burst writes
             if pairs:
                 # greedy decode consumes no randomness — skip the fold_in
                 key = (self._key if self.temperature <= 0.0
@@ -953,7 +1106,9 @@ class ContinuousServeEngine:
             out.update(blocks_free=self.pool.num_free(),
                        blocks_cached=self.pool.num_cached(),
                        evictions=self.pool.stats["evictions"],
-                       hit_blocks=self.pool.stats["hit_blocks"])
+                       hit_blocks=self.pool.stats["hit_blocks"],
+                       forks=self.pool.stats["forks"],
+                       cow_copies=self.pool.stats["cow_copies"])
         return out
 
 

@@ -37,6 +37,15 @@ class Request:
     max_new_tokens: int
     extras: dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
     arrival_ns: int = -1
+    # n-way CoW fan-out: the parent request is admitted and prefilled ONCE;
+    # at prompt completion it forks into n_samples decode streams whose
+    # block tables alias the parent's prompt blocks (serve/step.py).
+    n_samples: int = 1
+    fork_of: int = -1  # parent rid for a forked child, -1 otherwise
+    fork_index: int = 0  # 0 = the parent itself; 1..n-1 = siblings
+    # multi-turn session: requests sharing a session id persist their full
+    # context blocks across turns (turn k+1 prefix-hits turn k's context)
+    session: str | None = None
 
     state: str = RequestState.QUEUED
     slot: int = -1
@@ -49,6 +58,7 @@ class Request:
     t_admit_ns: int = -1
     t_first_ns: int = -1
     t_done_ns: int = -1
+    forks: list["Request"] = dataclasses.field(default_factory=list)
 
     @property
     def prompt_len(self) -> int:
@@ -88,20 +98,46 @@ class RequestQueue:
         self._next_rid = 0
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int, *,
-               extras: dict | None = None, arrival_ns: int | None = None) -> Request:
+               extras: dict | None = None, arrival_ns: int | None = None,
+               n_samples: int = 1, session: str | None = None) -> Request:
         prompt = np.asarray(prompt, np.int32)
         if prompt.ndim != 1:
             raise ValueError(f"prompt must be 1-D token ids, got {prompt.shape}")
         if max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
+        if n_samples < 1:
+            raise ValueError("n_samples must be >= 1")
         req = Request(
             rid=self._next_rid, prompt=prompt, max_new_tokens=int(max_new_tokens),
             extras=dict(extras or {}),
             arrival_ns=_now_ns() if arrival_ns is None else int(arrival_ns),
+            n_samples=int(n_samples), session=session,
         )
         self._next_rid += 1
         self._q.append(req)
         return req
+
+    def fork_children(self, parent: Request, n: int | None = None) -> list[Request]:
+        """Mint the ``n_samples - 1`` sibling requests of a completing
+        fan-out parent.  Children share the parent's prompt array (their
+        block tables will alias its blocks — serve/step.py) and inherit its
+        arrival time, so per-fork TTFT measures the real queue-to-first-
+        token path.  Children are NOT enqueued: the engine adopts each one
+        straight into a free decode slot, or requeues it at the front when
+        slots are exhausted (where it re-admits via the prefix cache)."""
+        n = parent.n_samples if n is None else int(n)
+        kids = []
+        for i in range(1, n):
+            kid = Request(
+                rid=self._next_rid, prompt=parent.prompt,
+                max_new_tokens=parent.max_new_tokens,
+                extras=dict(parent.extras), arrival_ns=parent.arrival_ns,
+                fork_of=parent.rid, fork_index=i,
+            )
+            self._next_rid += 1
+            kids.append(kid)
+        parent.forks = kids
+        return kids
 
     def requeue(self, req: Request) -> None:
         """Put a preempted request at the FRONT of the queue (it already

@@ -188,7 +188,10 @@ def _pool_stats(engine):
     return {"free": engine.pool.num_free(), "cached": engine.pool.num_cached(),
             "active": engine.pool.num_active(),
             "evictions": engine.pool.stats["evictions"],
-            "hit_blocks": engine.pool.stats["hit_blocks"]}
+            "hit_blocks": engine.pool.stats["hit_blocks"],
+            "forks": engine.pool.stats["forks"],
+            "cow_copies": engine.pool.stats["cow_copies"],
+            "shared": engine.pool.num_shared()}
 
 
 def main(argv=None) -> int:
@@ -247,7 +250,9 @@ def main(argv=None) -> int:
                 req = engine.submit(
                     np.asarray(frame["prompt"], np.int32),
                     int(frame["max_new_tokens"]),
-                    arrival_ns=frame.get("arrival_ns"))
+                    arrival_ns=frame.get("arrival_ns"),
+                    n_samples=int(frame.get("n", 1)),
+                    session=frame.get("session"))
             except ValueError as e:
                 write_frame(out, {"error": str(e)})
                 continue
@@ -260,13 +265,23 @@ def main(argv=None) -> int:
             for grid in list(reqs):
                 req = reqs[grid]
                 if req.rid in done:
-                    finished[grid] = {
+                    entry = {
                         "tokens": [int(t) for t in done[req.rid]],
                         "ttft_ns": req.ttft_ns(),
                         "tpot_ns": req.tpot_ns(),
                         "prefix_hit_tokens": req.prefix_hit_tokens,
                         "preemptions": req.preemptions,
                     }
+                    if req.forks:
+                        # a fan-out parent carries its siblings home in one
+                        # frame: the router sees the n streams as ONE unit,
+                        # exactly as it routed them
+                        entry["streams"] = [
+                            [int(t) for t in done[k.rid]]
+                            for k in req.forks if k.rid in done]
+                        entry["fork_ttft_ns"] = [
+                            k.ttft_ns() for k in req.forks]
+                    finished[grid] = entry
                     del reqs[grid]
             write_frame(out, {"done": finished,
                               "inflight": engine.scheduler.inflight()})

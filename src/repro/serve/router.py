@@ -190,7 +190,7 @@ class Router:
                  max_inflight: int | None = None, wire_dtype: str | None = None,
                  trace: bool = False, trace_dir=None,
                  app_name: str = "serve-router", worker_env: dict | None = None,
-                 param_seed: int = 0):
+                 param_seed: int = 0, persist_sessions: bool = False):
         if route not in ROUTE_MODES:
             raise ValueError(f"route must be one of {ROUTE_MODES}, got {route!r}")
         if num_replicas < 1:
@@ -199,6 +199,13 @@ class Router:
             raise ValueError("--disaggregate needs >= 2 replicas "
                              "(>=1 prefill + >=1 decode)")
         self.route = route
+        # sticky routing always follows the session key; with
+        # ``persist_sessions`` the key is ALSO forwarded to the worker
+        # engine, whose session pin keeps the conversation's KV blocks
+        # resident across turns (engine.submit then requires each turn to
+        # extend the stored context — opt-in, because sticky-only callers
+        # reuse keys across unrelated prompts)
+        self.persist_sessions = bool(persist_sessions)
         self.disaggregate = bool(disaggregate)
         self.num_prefill = int(num_prefill) if disaggregate else 0
         engine = dict(engine or {})
@@ -294,6 +301,7 @@ class Router:
         tr.register(ev.EV_REQ_ADMIT, "Serve request admitted (rid+1)")
         tr.register(ev.EV_REQ_RETIRE, "Serve request retired (rid+1)")
         tr.register(ev.EV_REQ_PREEMPT, "Serve request preempted (rid+1)")
+        tr.register(ev.EV_FORK, "CoW fork: child stream minted (parent rid+1)")
         tr.register(ev.EV_EVICT, "KV block evicted (block id)")
         for s in range(num_slots):
             tr.register(ev.EV_SLOT_BASE + s,
@@ -307,9 +315,16 @@ class Router:
     # intake
     # ------------------------------------------------------------------
     def submit(self, prompt, max_new_tokens: int, *, session=None,
-               arrival_ns: int | None = None) -> Request:
+               arrival_ns: int | None = None, n_samples: int = 1) -> Request:
+        """``n_samples > 1`` fans out on the WORKER (CoW fork at prompt
+        completion) — the router routes the whole fan as one unit, so all
+        n streams share one replica's prompt blocks instead of prefilling
+        the prompt n times across the fleet.  ``session=`` is both the
+        sticky-routing key and the worker-side persistent-context id."""
         req = self.queue.submit(prompt, max_new_tokens,
-                                arrival_ns=arrival_ns)
+                                arrival_ns=arrival_ns, n_samples=n_samples,
+                                session=str(session) if session is not None
+                                else None)
         if session is not None:
             self._session_key[req.rid] = session
         return req
@@ -346,10 +361,15 @@ class Router:
 
     def _admit_on(self, h: ReplicaHandle, req: Request) -> bool:
         """One admit attempt; True when the replica accepted it."""
-        reply = h.call({"op": "admit", "rid": str(req.rid),
-                        "prompt": [int(t) for t in req.prompt],
-                        "max_new_tokens": req.max_new_tokens,
-                        "arrival_ns": req.arrival_ns})
+        frame = {"op": "admit", "rid": str(req.rid),
+                 "prompt": [int(t) for t in req.prompt],
+                 "max_new_tokens": req.max_new_tokens,
+                 "arrival_ns": req.arrival_ns, "n": req.n_samples}
+        if self.persist_sessions:
+            sess = self._session_key.get(req.rid)
+            if sess is not None:
+                frame["session"] = str(sess)
+        reply = h.call(frame)
         if reply.get("full"):
             return False
         if "error" in reply:
@@ -357,7 +377,8 @@ class Router:
                 f"replica {h.idx} rejected request {req.rid}: {reply['error']}")
         req.state = RequestState.ACTIVE
         self.pending[h.idx][req.rid] = req
-        self.load[h.idx] += req.prompt_len + req.max_new_tokens
+        # an n-way fan decodes n streams off one prefill — load it as such
+        self.load[h.idx] += req.prompt_len + req.n_samples * req.max_new_tokens
         expected = self.affinity.score(req.prompt, [h.idx])[h.idx]
         self.affinity.publish(h.idx, req.prompt)
         session = self._session_key.get(req.rid)
@@ -489,7 +510,8 @@ class Router:
                     continue
                 req.tokens = list(info["tokens"])
                 req.state = RequestState.DONE
-                self.load[h.idx] -= req.prompt_len + req.max_new_tokens
+                self.load[h.idx] -= (req.prompt_len
+                                     + req.n_samples * req.max_new_tokens)
                 self.stats["prefix_hit_tokens"] += info["prefix_hit_tokens"]
                 info["replica"] = h.idx
                 self.request_info[grid] = info

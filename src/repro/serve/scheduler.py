@@ -139,6 +139,24 @@ class Scheduler:
         self._emit(ev.EV_SLOT_BASE + slot, req.rid + 1)
         return slot, req
 
+    def adopt(self, slot: int, req: Request) -> None:
+        """Seat a freshly forked child directly into a free slot, bypassing
+        the queue AND the admission policy: the child allocates no blocks —
+        its table aliases the parent's (serve/block_pool.py ``fork``), so
+        the availability gate has nothing to gate.  Stamps the same
+        admit/slot events as :meth:`admit_one` so per-slot Paraver
+        timelines and admit-before-retire invariants hold for forks too."""
+        if self.slots[slot] is not None:
+            raise ValueError(f"slot {slot} is occupied")
+        req.state = RequestState.ACTIVE
+        req.slot = slot
+        req.admit_seq = self._admit_seq
+        self._admit_seq += 1
+        self.slots[slot] = req
+        self._emit(ev.EV_REQ_ADMIT, req.rid + 1)
+        self._emit(ev.EV_SLOT_BASE + slot, req.rid + 1)
+        self._emit(ev.EV_SLOTS_ACTIVE, self.occupancy())
+
     def retire(self, req: Request):
         """Return a finished request's slot to the pool."""
         if self.slots[req.slot] is not req:

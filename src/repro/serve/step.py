@@ -73,7 +73,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import events as ev
-from repro.core.sampling import sample_logits, spec_accept
+from repro.core.sampling import fork_key, sample_logits, spec_accept
 from repro.serve.block_pool import NULL_BLOCK
 from repro.serve.engine import EV_TOKENS_DECODED, ContinuousServeEngine
 from repro.serve.queue import Request, _now_ns
@@ -88,6 +88,10 @@ class ChunkPlan:
     length: int  # valid tokens (<= chunk_size)
     tokens: np.ndarray  # [length] int32
     sample: bool  # True when this chunk completes the prompt
+    # fork children adopted into free slots when this chunk completed a
+    # fan-out parent's prompt — the fetch side appends each child's first
+    # token from its own fan column (serve/queue.py fork_children)
+    forked: list[Request] = dataclasses.field(default_factory=list)
 
 
 class UnifiedServeEngine(ContinuousServeEngine):
@@ -132,15 +136,31 @@ class UnifiedServeEngine(ContinuousServeEngine):
             for code in (ev.EV_STEP_BUDGET, ev.EV_CHUNK_TOKENS,
                          ev.EV_DECODE_TOKENS):
                 self.tracer.register(code, ev.SERVE_CTR_LABELS[code])
+            self.tracer.register(
+                ev.EV_FORK, "CoW fork: child stream minted (parent rid+1)")
         if self.meshstate is not None:
             r = self.meshstate.replicated
             self._unified = jax.jit(
                 self._unified_impl, donate_argnums=(1,),  # caches
                 static_argnames=("steps", "chunk"),
                 out_shardings=(self._cache_sh, r, r, r, r))
+            self._beam_prefill = jax.jit(
+                self._beam_prefill_impl, donate_argnums=(1,),
+                static_argnames=("width",),
+                out_shardings=(self._cache_sh, r, r))
+            self._beam_step = jax.jit(
+                self._beam_step_impl, donate_argnums=(1,),
+                static_argnames=("width",),
+                out_shardings=(self._cache_sh, r, r))
         else:
             self._unified = jax.jit(self._unified_impl, donate_argnums=(1,),
                                     static_argnames=("steps", "chunk"))
+            self._beam_prefill = jax.jit(self._beam_prefill_impl,
+                                         donate_argnums=(1,),
+                                         static_argnames=("width",))
+            self._beam_step = jax.jit(self._beam_step_impl,
+                                      donate_argnums=(1,),
+                                      static_argnames=("width",))
         # --- speculative decoding: draft/verify spans through the span path
         self.spec = spec
         self.spec_k_max = max(1, int(spec_k))
@@ -167,6 +187,13 @@ class UnifiedServeEngine(ContinuousServeEngine):
             else:
                 self._spec_step = jax.jit(self._spec_impl, donate_argnums=(1,),
                                           static_argnames=("chunk",))
+
+    @property
+    def supports_fork(self) -> bool:
+        # n-way fan-out rides the chunk-sampling fork path (sibling fan
+        # columns + slot adoption at prompt completion) — chunkable configs
+        # only; other families inherit the base class's loud rejection
+        return self.chunkable
 
     # ------------------------------------------------------------------
     # the jitted mixed-batch step
@@ -195,15 +222,15 @@ class UnifiedServeEngine(ContinuousServeEngine):
         else:
             toks = jnp.zeros((0, self.num_slots), jnp.int32)
 
-        ck_tok = jnp.zeros(ck_start.shape, jnp.int32)
+        ck_fan = jnp.zeros(ck_start.shape + (self.num_slots,), jnp.int32)
         if chunk:
             ck_tables = tables[ck_slot]  # [C, W]
             caches, logits = self.model.span_step(
                 params, caches, ck_tokens, ck_start, ck_len, ck_tables,
                 micro_batches=self.overlap.micro_batches)
-            tok, idx, ck_tok = self._fold_chunk_rows(
+            tok, idx, ck_fan = self._fold_chunk_rows(
                 logits, ck_start, ck_len, ck_slot, ck_sample, key, tok, idx)
-        return caches, tok, idx, toks, ck_tok
+        return caches, tok, idx, toks, ck_fan
 
     def _fold_chunk_rows(self, logits, ck_start, ck_len, ck_slot, ck_sample,
                          key, tok, idx):
@@ -218,6 +245,21 @@ class UnifiedServeEngine(ContinuousServeEngine):
                   else jax.random.fold_in(key, 1 << 18))
         ck_tok = sample_logits(last, ck_key, self.temperature,
                                self.cfg.vocab_size, self.top_k, self.top_p)
+        # sibling fan: column i of ck_fan is the first token fork-child i
+        # would start with (n-way sampling forks at prompt completion).
+        # Column 0 IS the ck_tok sample above — key derivation untouched,
+        # so the parent stream stays bit-identical to an unforked run;
+        # sibling columns draw from per-fork keys (core/sampling.fork_key)
+        # and greedy columns all collapse to the same argmax.  The extra
+        # samples cost C * S categoricals per dispatch — noise next to the
+        # span matmuls — and keep the executable's shape independent of
+        # how many forks the host actually seats.
+        fan = [ck_tok]
+        for i in range(1, self.num_slots):
+            fan.append(sample_logits(last, fork_key(ck_key, i),
+                                     self.temperature, self.cfg.vocab_size,
+                                     self.top_k, self.top_p))
+        ck_fan = jnp.stack(fan, axis=1)  # [C, S]
         onehot = ((ck_slot[:, None] == jnp.arange(self.num_slots)[None, :])
                   & ck_sample[:, None])  # [C, S]
         hit = onehot.any(axis=0)
@@ -225,7 +267,7 @@ class UnifiedServeEngine(ContinuousServeEngine):
                         .astype(tok.dtype), tok)
         idx = jnp.where(hit, (onehot * (ck_start + ck_len)[:, None]).sum(0)
                         .astype(idx.dtype), idx)
-        return tok, idx, ck_tok
+        return tok, idx, ck_fan
 
     # ------------------------------------------------------------------
     # the jitted draft/verify span step (spec mode)
@@ -276,12 +318,12 @@ class UnifiedServeEngine(ContinuousServeEngine):
         tok = jnp.where(spec_active, final, tok)
         idx = jnp.where(spec_active, idx + n_acc + 1, idx)
 
-        ck_tok = jnp.zeros(ck_start.shape, jnp.int32)
+        ck_fan = jnp.zeros(ck_start.shape + (self.num_slots,), jnp.int32)
         if chunk:
-            tok, idx, ck_tok = self._fold_chunk_rows(
+            tok, idx, ck_fan = self._fold_chunk_rows(
                 logits[s:, :self.chunk_size], ck_start, ck_len, ck_slot,
                 ck_sample, key, tok, idx)
-        return caches, tok, idx, out_toks, n_acc, ck_tok
+        return caches, tok, idx, out_toks, n_acc, ck_fan
 
     # ------------------------------------------------------------------
     # admission policy: blocks for the FIRST chunk only (JIT per chunk)
@@ -461,7 +503,7 @@ class UnifiedServeEngine(ContinuousServeEngine):
         with (tr.phase(ev.PHASE_DECODE) if tr else contextlib.nullcontext()), \
                 (tr.user_function(name="unified_step") if tr
                  else contextlib.nullcontext()):
-            (self._caches, self._tok, self._idx, toks, ck_tok), coll_ops = \
+            (self._caches, self._tok, self._idx, toks, ck_fan), coll_ops = \
                 self._traced_call(
                     "unified", self._unified,
                     (self.params, self._caches, self._tok, self._idx,
@@ -485,7 +527,7 @@ class UnifiedServeEngine(ContinuousServeEngine):
             if req.scheduled >= req.max_new_tokens:
                 self._active[slot] = False
                 self._active_dirty = True
-        n_chunk = self._advance_chunks(chunks, t_dispatch)
+        n_chunk = self._advance_chunks(chunks, t_dispatch, ck_fan)
         # per-ITERATION values (a burst is `steps` iterations in one
         # dispatch, emitted once; its chunks ride the first iteration):
         # STEP_BUDGET == CHUNK + DECODE at every sample, and chunkable
@@ -498,13 +540,17 @@ class UnifiedServeEngine(ContinuousServeEngine):
             tr.emit(ev.EV_STEP_BUDGET, len(pairs) + n_chunk)
             tr.emit(ev.EV_CHUNK_TOKENS, n_chunk)
             tr.emit(ev.EV_DECODE_TOKENS, len(pairs))
-        return toks, ck_tok, pairs, chunks, t_dispatch, coll_ops
+        return toks, ck_fan, pairs, chunks, t_dispatch, coll_ops
 
-    def _advance_chunks(self, chunks: list[ChunkPlan], t_dispatch) -> int:
+    def _advance_chunks(self, chunks: list[ChunkPlan], t_dispatch,
+                        ck_fan=None) -> int:
         """Dispatch-side chunk bookkeeping (cursor advance, prompt-block
-        registration at completion); returns the chunk token count."""
+        registration at completion, fan-out forking); returns the chunk
+        token count.  ``ck_fan`` is the dispatch's [C, S] sibling-token fan
+        — possibly still on device (pipelined unified path): the fork hook
+        seeds child registers from it without a host sync."""
         n_chunk = 0
-        for c in chunks:
+        for row, c in enumerate(chunks):
             n_chunk += c.length
             slot, req = c.slot, c.req
             self._progress[slot] += c.length
@@ -524,25 +570,98 @@ class UnifiedServeEngine(ContinuousServeEngine):
                     for j, h in enumerate(hashes[:req.prompt_len
                                                  // self.block_size]):
                         self.pool.register(self._slot_blocks[slot][j], h)
+                if req.n_samples > 1 and req.fork_of < 0 and not req.forks:
+                    # the ONE prefill of an n-way fan-out just completed:
+                    # fork the siblings (a preemption-resumed parent keeps
+                    # its existing forks — re-forking would double-serve)
+                    self._fork_fanout(row, c, ck_fan, t_dispatch)
         return n_chunk
+
+    def _fork_fanout(self, row: int, c: ChunkPlan, ck_fan, t_dispatch):
+        """Fan a completing fan-out prompt into its sibling decode streams.
+
+        Each child adopted into a free slot costs ZERO block copies: its
+        table aliases every parent block — full prompt blocks AND the
+        partial tail — via ``pool.fork`` (one extra ref each), and the
+        shared tail copies lazily at the child's first decode write
+        (``_ensure_blocks``/``_plan_spec`` CoW).  Its registers seed from
+        the dispatch still in flight: first token = fan column
+        ``fork_index``, position = the parent's first decode write
+        position.  Children that find no free slot requeue at the FRONT —
+        they re-admit like any request and prefix-hit the prompt blocks
+        their parent just registered, so the fan degrades to a cache hit
+        instead of n-way recompute."""
+        slot, req = c.slot, c.req
+        tr = self.tracer
+        kids = self.queue.fork_children(req)
+        start = int(self._slot_start[slot])  # first decode write position
+        bs = self.block_size
+        overflow: list[Request] = []
+        for kid in kids:
+            if tr is not None:
+                tr.emit(ev.EV_FORK, req.rid + 1)
+            target = next((s for s in range(self.num_slots)
+                           if self.scheduler.slots[s] is None), None)
+            if target is None:
+                overflow.append(kid)
+                continue
+            self.scheduler.adopt(target, kid)
+            if self.spec is not None:
+                self.spec.reset_slot(target)
+            self._slot_blocks[target] = self.pool.fork(self._slot_blocks[slot])
+            self._tables[target] = self._tables[slot]
+            self._tables_dirty = True
+            self._slot_start[target] = start
+            self._slot_sched0[target] = 0
+            self._progress[target] = self._target[target] = start
+            self._prefilling[target] = False
+            kid.scheduled = 1  # the fan token, in flight right now
+            kid.t_admit_ns = t_dispatch
+            hit = req.prompt_len // bs * bs  # full blocks served by aliasing
+            kid.prefix_hit_tokens = hit
+            self.stats["prefix_hit_tokens"] += hit
+            if tr is not None:
+                tr.emit(ev.EV_PREFIX_HIT_TOKENS, hit)
+            if kid.max_new_tokens > 1:
+                self._active[target] = True
+                self._active_dirty = True
+            # device-lazy register seed: the fan is an output of the
+            # dispatch in flight — no host sync, the child decodes in the
+            # very next dispatch
+            self._tok = self._tok.at[target].set(ck_fan[row, kid.fork_index])
+            self._idx = self._idx.at[target].set(start)
+            c.forked.append(kid)
+        for kid in reversed(overflow):
+            self.queue.requeue(kid)  # front, ascending fork order
+        if overflow and tr is not None:
+            tr.emit(ev.EV_QUEUE_DEPTH, len(self.queue))
 
     def _emit_chunk_tokens(self, chunks: list[ChunkPlan], ck) -> None:
         """Fetch-side chunk bookkeeping: append the first sampled token of
-        each completed prompt and retire single-token requests."""
+        each completed prompt and of every fork child seated at dispatch;
+        retire single-token requests.
+
+        The ROW OWNER always reads fan column 0 — that is the value the
+        dispatch wrote into the slot's token register — even when the owner
+        is an overflow fork child re-admitted through the normal path (its
+        ``fork_index`` has no column: the fan only covers siblings adopted
+        at their parent's dispatch, so an overflow child re-samples its
+        first token on the standard path after its prefix-cache hit)."""
         for i, c in enumerate(chunks):
             if not c.sample:
                 continue
-            req = c.req
-            if req.t_first_ns < 0:
-                req.t_first_ns = _now_ns()  # resumed requests keep their TTFT
-            req.tokens.append(int(ck[i]))
-            self.stats["tokens_decoded"] += 1
-            if self.tracer is not None:
-                self.tracer.emit(ev.EV_TOKENS_TOTAL,
-                                 self.stats["tokens_decoded"])
-            if len(req.tokens) >= req.max_new_tokens \
-                    and self.scheduler.slots[req.slot] is req:
-                self._finish(req)
+            for req in [c.req] + c.forked:
+                if req.t_first_ns < 0:
+                    req.t_first_ns = _now_ns()  # resumes keep their TTFT
+                col = 0 if req is c.req else req.fork_index
+                req.tokens.append(int(ck[i, col]))
+                self.stats["tokens_decoded"] += 1
+                if self.tracer is not None:
+                    self.tracer.emit(ev.EV_TOKENS_TOTAL,
+                                     self.stats["tokens_decoded"])
+                if len(req.tokens) >= req.max_new_tokens \
+                        and self.scheduler.slots[req.slot] is req:
+                    self._finish(req)
 
     def _process_unified(self, toks_dev, ck_dev, pairs, chunks, t_dispatch,
                          coll_ops):
@@ -583,17 +702,39 @@ class UnifiedServeEngine(ContinuousServeEngine):
                 pos = self._slot_pos(slot, req)
                 rem = req.max_new_tokens - len(req.tokens)
                 k = max(0, min(k_base, rem - 1, self.capacity - 1 - pos))
-                missing = pool.blocks_for(pos + k + 1) \
-                    - len(self._slot_blocks[slot])
-                while k > 0 and missing > pool.available():
+
+                def span_cost(k):
+                    # growth for positions pos..pos+k, PLUS one block per
+                    # CoW copy: a span scattering into a block another
+                    # fork still references must copy it first, charged
+                    # against availability like the growth (conservatively
+                    # — the last writer inherits the original in place)
+                    owned = len(self._slot_blocks[slot])
+                    missing = pool.blocks_for(pos + k + 1) - owned
+                    bs = self.block_size
+                    shared = [w for w in range(pos // bs,
+                                               min((pos + k) // bs,
+                                                   owned - 1) + 1)
+                              if pool.ref(self._slot_blocks[slot][w]) > 1]
+                    return missing, shared
+
+                missing, shared = span_cost(k)
+                while k > 0 and max(missing, 0) + len(shared) > pool.available():
                     k -= 1
-                    missing = pool.blocks_for(pos + k + 1) \
-                        - len(self._slot_blocks[slot])
-                if missing > pool.available():
+                    missing, shared = span_cost(k)
+                if max(missing, 0) + len(shared) > pool.available():
                     ok = False  # even the pending token cannot be funded
                     break
                 if missing > 0:
                     self._grow_slot_blocks(slot, missing)
+                for w in shared:
+                    old = self._slot_blocks[slot][w]
+                    fresh, copied = pool.cow(old)
+                    if copied:
+                        self._slot_blocks[slot][w] = fresh
+                        self._tables[slot, w] = fresh
+                        self._tables_dirty = True
+                        self._cow_pairs.append((old, fresh))
                 spec_len[slot] = k + 1
             if ok:
                 return pairs, spec_len
@@ -654,6 +795,8 @@ class UnifiedServeEngine(ContinuousServeEngine):
                                             self.scheduler.occupancy())
             self.stats["peak_blocks"] = max(self.stats["peak_blocks"],
                                             self.pool.num_active())
+            self.stats["peak_shared"] = max(self.stats["peak_shared"],
+                                            self.pool.num_shared())
             if not pairs and not chunks:
                 if not self.scheduler.drained() and not self._preempted:
                     if not self._relieve_stalled_prefill():
@@ -684,6 +827,7 @@ class UnifiedServeEngine(ContinuousServeEngine):
                         jnp.asarray(q, jnp.float32)[:, :k_ask])
 
             # ---- one span dispatch, fetched synchronously ----
+            self._flush_cow()  # CoW copies land before the span writes
             key, ck_tokens, ck_start, ck_len, ck_slot, ck_sample = \
                 self._prep_dispatch(chunks)
             t_dispatch = _now_ns()
@@ -692,7 +836,7 @@ class UnifiedServeEngine(ContinuousServeEngine):
                     (tr.user_function(name="spec_step") if tr
                      else contextlib.nullcontext()):
                 (self._caches, self._tok, self._idx, out_toks, n_acc,
-                 ck_tok), coll_ops = self._traced_call(
+                 ck_fan), coll_ops = self._traced_call(
                     "spec", self._spec_step,
                     (self.params, self._caches, self._tok, self._idx,
                      self._active_dev, self._tables_dev,
@@ -705,11 +849,11 @@ class UnifiedServeEngine(ContinuousServeEngine):
                      self._dev(jnp.asarray(ck_slot)),
                      self._dev(jnp.asarray(ck_sample)), key),
                     {"chunk": bool(chunks)})
-                out, nacc, ck = jax.device_get((out_toks, n_acc, ck_tok))
+                out, nacc, ck = jax.device_get((out_toks, n_acc, ck_fan))
             self._note_kernel("paged_span")  # draft/verify rides the span
             self.stats["host_syncs"] += 1
             self._replay(coll_ops, t_dispatch, _now_ns())
-            n_chunk = self._advance_chunks(chunks, t_dispatch)
+            n_chunk = self._advance_chunks(chunks, t_dispatch, ck)
 
             # ---- commit accepted prefixes + correction/bonus tokens ----
             drafted = accepted = 0
@@ -767,6 +911,162 @@ class UnifiedServeEngine(ContinuousServeEngine):
                 for r in self.scheduler.completed[done0:]}
 
     # ------------------------------------------------------------------
+    # beam search: fork + per-step score/prune on the same CoW mechanism
+    # ------------------------------------------------------------------
+    def _beam_prefill_impl(self, params, caches, tokens, table, *, width):
+        """Prompt prefill through the span path (one [1, L] row writing
+        into the beam's block table) -> (caches, top-``width`` first-token
+        log-probs, their ids)."""
+        length = tokens.shape[0]
+        caches, logits = self.model.span_step(
+            params, caches, tokens[None], jnp.zeros((1,), jnp.int32),
+            jnp.full((1,), length, jnp.int32), table[None],
+            micro_batches=1)
+        lp = jax.nn.log_softmax(logits[0, length - 1].astype(jnp.float32))
+        val, ids = jax.lax.top_k(lp, width)
+        return caches, val, ids
+
+    def _beam_step_impl(self, params, caches, tok, idx, active, tables, *,
+                        width):
+        """One beam decode step: the SAME paged decode the serve loop runs
+        (every beam is a slot row; inactive rows NULL-masked), then
+        per-beam top-``width`` log-prob candidates for the host to prune.
+        log_softmax preserves the argmax, so width=1 reduces to greedy
+        decode bit-for-bit."""
+        bt = jnp.where(active[:, None], tables, NULL_BLOCK)
+        caches, logits = self.model.decode_step(params, caches, tok, idx,
+                                                block_tables=bt)
+        lp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        val, ids = jax.lax.top_k(lp, width)  # [S, width]
+        return caches, val, ids
+
+    def beam_search(self, prompt, num_tokens: int, *, width: int = 4
+                    ) -> list[tuple[np.ndarray, float]]:
+        """Beam-search ``num_tokens`` continuations of ``prompt``; returns
+        [(tokens, cumulative log-prob)] best-first, ``width`` entries.
+
+        Beams ARE forks: the prompt prefills ONCE into beam 0's blocks,
+        beams 1..W-1 alias them via ``pool.fork`` (zero copies), and every
+        per-step prune that reseats beam b onto source s is another fork —
+        release b's refs, alias s's (EV_FORK per reseat, value = source
+        beam + 1).  The only copies are CoW on the shared write-frontier
+        block, exactly like n-way sampling; peak ACTIVE blocks stay at
+        prompt + W tails instead of W full contexts.  Runs standalone on an
+        idle engine (the beams borrow the slot rows)."""
+        if not self.chunkable:
+            raise ValueError(
+                "beam_search needs the fully-paged span path (dense/moe "
+                f"families); {self.cfg.family!r} cannot run it")
+        if not 1 <= width <= self.num_slots:
+            raise ValueError(f"width must be in [1, {self.num_slots}]")
+        if self.queue or self.scheduler.any_active():
+            raise RuntimeError("beam_search needs an idle engine "
+                               "(no queued or active requests)")
+        prompt = np.asarray(prompt, np.int32)
+        plen = int(prompt.shape[0])
+        if plen + num_tokens > self.capacity:
+            raise ValueError(
+                f"prompt {plen} + {num_tokens} beam tokens needs cache "
+                f"capacity {plen + num_tokens} > {self.capacity}")
+        t_beam0 = time.perf_counter()
+        pool, bs, tr = self.pool, self.block_size, self.tracer
+        w = width
+        # beam 0 owns the prompt blocks; 1..W-1 alias them (zero copies)
+        blocks: list[list[int]] = [pool.alloc(pool.blocks_for(plen))]
+        tables = np.full((self.num_slots, self.blocks_per_slot),
+                         NULL_BLOCK, np.int32)
+        tables[0, :len(blocks[0])] = blocks[0]
+        for b in range(1, w):
+            blocks.append(pool.fork(blocks[0]))
+            tables[b] = tables[0]
+            if tr is not None:
+                tr.emit(ev.EV_FORK, 0 + 1)
+        self.stats["prefills"] += 1
+        self.stats["prefill_tokens"] += plen
+        with (tr.phase(ev.PHASE_PREFILL) if tr
+              else contextlib.nullcontext()), \
+                (tr.user_function(name="beam_prefill") if tr
+                 else contextlib.nullcontext()), self._with_rules():
+            self._caches, val, ids = self._beam_prefill(
+                self.params, self._caches, jnp.asarray(prompt),
+                self._dev(jnp.asarray(tables[0])), width=w)
+        val, ids = np.asarray(val, np.float64), np.asarray(ids)
+        self._note_kernel("paged_span")
+        self.stats["host_syncs"] += 1
+        scores = val.copy()  # [w] cumulative log-probs
+        seqs = [[int(t)] for t in ids]
+        tok = np.zeros((self.num_slots,), np.int32)
+        idx = np.zeros((self.num_slots,), np.int32)
+        active = np.zeros((self.num_slots,), bool)
+        tok[:w], idx[:w], active[:w] = ids, plen, True
+        active_dev = self._dev(jnp.asarray(active))
+        # num_tokens - 1 decode steps: the final token's KV is never
+        # written, so its position needs no block and triggers no CoW
+        for step in range(1, num_tokens):
+            # fund + exclusively own each beam's write block (CoW): the
+            # decode writes tok's KV at position idx == plen + step - 1
+            wblk = (plen + step - 1) // bs
+            for b in range(w):
+                if wblk >= len(blocks[b]):
+                    fresh = pool.alloc(1)
+                    tables[b, len(blocks[b])] = fresh[0]
+                    blocks[b].extend(fresh)
+                elif pool.ref(blocks[b][wblk]) > 1:
+                    old = blocks[b][wblk]
+                    fresh, copied = pool.cow(old)
+                    if copied:
+                        blocks[b][wblk] = fresh
+                        tables[b, wblk] = fresh
+                        self._cow_pairs.append((old, fresh))
+            self._flush_cow()
+            self.stats["peak_blocks"] = max(self.stats["peak_blocks"],
+                                            pool.num_active())
+            self.stats["peak_shared"] = max(self.stats["peak_shared"],
+                                            pool.num_shared())
+            with (tr.phase(ev.PHASE_DECODE) if tr
+                  else contextlib.nullcontext()), \
+                    (tr.user_function(name="beam_step") if tr
+                     else contextlib.nullcontext()), self._with_rules():
+                self._caches, val, ids = self._beam_step(
+                    self.params, self._caches, self._dev(jnp.asarray(tok)),
+                    self._dev(jnp.asarray(idx)), active_dev,
+                    self._dev(jnp.asarray(tables)), width=w)
+            val = np.asarray(val, np.float64)[:w]
+            ids = np.asarray(ids)[:w]
+            self._note_kernel("paged_decode")
+            self.stats["host_syncs"] += 1
+            total = scores[:, None] + val  # [w, w] candidate scores
+            flat = np.argsort(-total, axis=None, kind="stable")[:w]
+            src, pick = flat // w, flat % w
+            # reseat pruned beams: alias the surviving source's blocks
+            # (fork) BEFORE releasing the old rows, so a row that is both
+            # replaced and someone's source never drops to ref 0
+            old_blocks = [blocks[b] for b in range(w)]
+            old_tables = tables[:w].copy()
+            for b in range(w):
+                s = int(src[b])
+                if s != b:
+                    blocks[b] = pool.fork(old_blocks[s])
+                    tables[b] = old_tables[s]
+                    if tr is not None:
+                        tr.emit(ev.EV_FORK, s + 1)
+            for b in range(w):
+                if int(src[b]) != b:
+                    pool.free(old_blocks[b])
+            seqs = [seqs[int(s)] + [int(ids[int(s), int(p)])]
+                    for s, p in zip(src, pick)]
+            scores = total.reshape(-1)[flat]
+            tok[:w] = [ids[int(s), int(p)] for s, p in zip(src, pick)]
+            idx[:w] = plen + step
+        for b in range(w):
+            pool.free(blocks[b])  # unhashed -> straight back to FREE
+        self.stats["tokens_decoded"] += w * num_tokens
+        self.stats["seconds"] += time.perf_counter() - t_beam0
+        order = np.argsort(-scores, kind="stable")
+        return [(np.asarray(seqs[int(r)], np.int32), float(scores[int(r)]))
+                for r in order]
+
+    # ------------------------------------------------------------------
     # serving loop
     # ------------------------------------------------------------------
     def run(self) -> dict[int, np.ndarray]:
@@ -815,11 +1115,14 @@ class UnifiedServeEngine(ContinuousServeEngine):
                 chunks = self._plan_chunks(pairs)
             pairs, steps = self._ensure_blocks(
                 pairs, max_steps=self.mixed_burst if chunks else None)
+            self._flush_cow()  # CoW copies land before the burst writes
             self.stats["peak_active"] = max(self.stats["peak_active"],
                                             self.scheduler.occupancy())
             if self.pool is not None:
                 self.stats["peak_blocks"] = max(self.stats["peak_blocks"],
                                                 self.pool.num_active())
+                self.stats["peak_shared"] = max(self.stats["peak_shared"],
+                                                self.pool.num_shared())
             dispatched = self._dispatch(pairs, steps, chunks)
             if dispatched is None and self._whole_tokens and tr:
                 # whole-prompt prefills with nothing left to decode (e.g.

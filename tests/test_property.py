@@ -330,3 +330,112 @@ def test_kernel_fallback_never_changes_numerics(data):
     margin_ok = (top2[..., 1] - top2[..., 0]) > 1e-4
     same = la.argmax(-1) == lp.argmax(-1)
     assert np.all(same | ~(margin_ok & valid)), f"seed {rng_seed}"
+
+
+# ----------------------------------------------------------------------
+# block pool: fork / free / evict interleavings
+# ----------------------------------------------------------------------
+
+
+@settings(max_examples=40, deadline=None)
+@given(data=st.data())
+def test_block_pool_fork_free_evict_interleavings(data):
+    """Random interleavings of alloc / fork / cow / free / register / claim
+    against a reference model of holders (one ref per block per holder).
+
+    Invariants after EVERY operation:
+      * exact refcount conservation — ``pool.ref(b)`` equals the number of
+        model holders referencing ``b`` (implies shared blocks are never
+        evicted out from under a holder);
+      * FREE/ACTIVE/CACHED partition the pool (``check_invariants``);
+      * ``num_shared`` counts exactly the blocks with >= 2 holders;
+      * ``cow`` copies IFF the block is shared — a privately held block is
+        never spuriously copied, a shared one is never written in place.
+    """
+    import collections as _c
+
+    from repro.serve.block_pool import BlockPool
+
+    nb = data.draw(st.integers(4, 12))
+    pool = BlockPool(nb, block_size=4)
+    holders: list[list[int]] = []
+    next_hash = [1]  # synthetic chain hashes for register/claim
+
+    def check():
+        want = _c.Counter(b for hold in holders for b in hold)
+        for b in range(1, nb):
+            assert pool.ref(b) == want[b], (b, want)
+        assert pool.num_shared() == sum(1 for v in want.values() if v > 1)
+        assert pool.num_active() == len(want)
+        pool.check_invariants()
+
+    n_ops = data.draw(st.integers(1, 40))
+    for _ in range(n_ops):
+        op = data.draw(st.sampled_from(
+            ["alloc", "fork", "cow", "free", "register", "claim"]))
+        if op == "alloc":
+            n = data.draw(st.integers(1, 3))
+            if n > pool.available():
+                with pytest.raises(MemoryError):
+                    pool.alloc(n)
+            else:
+                holders.append(pool.alloc(n))
+        elif op == "fork" and holders:
+            parent = holders[data.draw(st.integers(0, len(holders) - 1))]
+            forks0 = pool.stats["forks"]
+            child = pool.fork(parent)
+            assert child == list(parent)  # aliases, never copies
+            assert pool.stats["forks"] == forks0 + 1
+            holders.append(list(child))
+        elif op == "cow" and holders:
+            hold = holders[data.draw(st.integers(0, len(holders) - 1))]
+            if not hold:
+                continue
+            j = data.draw(st.integers(0, len(hold) - 1))
+            bid = hold[j]
+            shared = pool.ref(bid) > 1
+            if shared and pool.available() == 0:
+                with pytest.raises(MemoryError):
+                    pool.cow(bid)
+            else:
+                copies0 = pool.stats["cow_copies"]
+                new, copied = pool.cow(bid)
+                assert copied == shared  # copy IFF shared
+                if copied:
+                    assert new != bid and pool.ref(new) == 1
+                    hold[j] = new
+                    assert pool.stats["cow_copies"] == copies0 + 1
+                else:
+                    assert new == bid
+        elif op == "free" and holders:
+            hold = holders.pop(data.draw(st.integers(0, len(holders) - 1)))
+            pool.free(hold)
+        elif op == "register" and holders:
+            hold = holders[data.draw(st.integers(0, len(holders) - 1))]
+            if not hold:
+                continue
+            bid = hold[data.draw(st.integers(0, len(hold) - 1))]
+            pool.register(bid, next_hash[0])
+            next_hash[0] += 1
+        elif op == "claim":
+            cached = [(h, b) for h, b in zip(pool.resident_hashes(),
+                                             map(pool.resident,
+                                                 pool.resident_hashes()))
+                      if pool.ref(b) >= 0 and pool._hash_of[b] is not None]
+            if cached:
+                _, bid = cached[data.draw(st.integers(0, len(cached) - 1))]
+                pool.claim([bid])
+                holders.append([bid])
+        check()
+
+    # drain: every holder releases; the pool must conserve exactly
+    for hold in holders:
+        pool.free(hold)
+    holders.clear()
+    check()
+    assert pool.num_active() == 0
+    assert pool.num_free() + pool.num_cached() == nb - 1
+    # a drained block cannot be double-freed
+    if nb > 1:
+        with pytest.raises(ValueError):
+            pool.free([1])

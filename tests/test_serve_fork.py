@@ -1,0 +1,360 @@
+"""Copy-on-write decode forking: n-way fan-out greedy equivalence against
+the unforked oracle (fp16 + int8 pools, spec lane, mp=2 mesh), seeded
+sampling reproducibility, fork overflow, beam search on the same CoW
+mechanism, multi-turn sessions, loud exclusions, and the trace ledger
+(EV_FORK counts, EV_BLOCKS_SHARED gauge, budget triples)."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import events as ev
+from repro.core.tracer import Tracer
+from repro.models.model import build_model
+from repro.serve.engine import ContinuousServeEngine
+from repro.serve.step import UnifiedServeEngine
+
+ROOT = "/root/repo"
+_CACHE = {}
+
+
+def _setup(arch="granite-8b", **kw):
+    key = (arch, tuple(sorted(kw.items())))
+    if key not in _CACHE:
+        cfg = reduced(get_config(arch), num_layers=2, **kw)
+        model = build_model(cfg)
+        _CACHE[key] = (cfg, model.init(jax.random.PRNGKey(0)))
+    return _CACHE[key]
+
+
+def _prompt(cfg, n, seed=2):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, cfg.vocab_size, (n,)).astype(np.int32)
+
+
+def _conserved(pool):
+    pool.check_invariants()
+    return pool.num_free() + pool.num_active() + pool.num_cached() \
+        == pool.num_blocks - 1
+
+
+# ----------------------------------------------------------------------
+# the tentpole: n-way fan-out == n unforked oracles, one prefill
+# ----------------------------------------------------------------------
+@pytest.mark.parametrize("kv_dtype", ["fp16", "int8"])
+def test_greedy_fork_streams_match_unforked_oracle(kv_dtype):
+    """All n greedy streams must be bit-identical to the single unforked
+    request — the CoW copy is exact, the aliased prompt blocks are read
+    correctly, and the fan costs one prefill plus shared-tail copies."""
+    kw = {} if kv_dtype == "fp16" else {"kv_dtype": kv_dtype}
+    cfg, params = _setup(**kw)
+    prompt = _prompt(cfg, 48)
+    oracle = UnifiedServeEngine(cfg, params, num_slots=4, max_len=96,
+                                block_size=16, chunk_size=16)
+    r0 = oracle.submit(prompt, 4)
+    want = oracle.run()[r0.rid]
+    single_peak = oracle.stats["peak_blocks"]
+
+    eng = UnifiedServeEngine(cfg, params, num_slots=4, max_len=96,
+                             block_size=16, chunk_size=16)
+    rp = eng.submit(prompt, 4, n_samples=4)
+    out = eng.run()
+    for req in [rp] + rp.forks:
+        np.testing.assert_array_equal(out[req.rid], want,
+                                      err_msg=f"fork {req.fork_index}")
+    assert eng.pool.stats["forks"] == 3
+    # 3 block-aligned prompt blocks alias; each fork CoWs/allocs only its
+    # write frontier, so the fan stays under 2x one request's residency
+    assert eng.stats["peak_shared"] > 0
+    assert eng.stats["peak_blocks"] < 2 * single_peak
+    assert _conserved(eng.pool)
+    assert eng.pool.num_active() == 0
+
+
+def test_fork_overflow_requeues_and_all_streams_complete():
+    """n_samples > free slots: the overflow children requeue at the FRONT,
+    re-admit through the prefix cache, and still finish; greedy keeps every
+    stream equal to the oracle."""
+    cfg, params = _setup()
+    prompt = _prompt(cfg, 37)
+    oracle = UnifiedServeEngine(cfg, params, num_slots=2, max_len=96,
+                                block_size=16, chunk_size=16)
+    r0 = oracle.submit(prompt, 6)
+    want = oracle.run()[r0.rid]
+
+    tracer = Tracer("fork-overflow").init()
+    eng = UnifiedServeEngine(cfg, params, num_slots=2, max_len=96,
+                             block_size=16, chunk_size=16, tracer=tracer)
+    rp = eng.submit(prompt, 6, n_samples=4)
+    out = eng.run()
+    trace = tracer.finish()
+    assert len(rp.forks) == 3 and len(out) == 4
+    for req in [rp] + rp.forks:
+        np.testing.assert_array_equal(out[req.rid], want,
+                                      err_msg=f"fork {req.fork_index}")
+    # every minted child is an EV_FORK, adopted or requeued alike
+    forks = trace.events[trace.events["type"] == ev.EV_FORK]
+    assert len(forks) == 3
+    assert set(forks["value"]) == {rp.rid + 1}
+    # overflow children re-admit via the prompt blocks the fan registered
+    assert all(k.prefix_hit_tokens >= 32 for k in rp.forks)
+    assert _conserved(eng.pool)
+
+
+def test_seeded_fan_reproducible_and_fork0_bit_exact():
+    """temperature > 0: the same --seed must reproduce the identical n=4
+    fan across runs (per-fork keys fold seed + fork index), fork 0 must be
+    bit-identical to the unforked engine at the same seed, and the sibling
+    streams must actually diverge (distinct fold planes)."""
+    cfg, params = _setup()
+    prompt = _prompt(cfg, 37)
+    kw = dict(num_slots=4, max_len=96, block_size=16, chunk_size=16,
+              temperature=0.8, seed=7)
+
+    def fan():
+        eng = UnifiedServeEngine(cfg, params, **kw)
+        rp = eng.submit(prompt, 6, n_samples=4)
+        out = eng.run()
+        return [out[r.rid] for r in [rp] + rp.forks]
+
+    a, b = fan(), fan()
+    for i, (x, y) in enumerate(zip(a, b)):
+        np.testing.assert_array_equal(x, y, err_msg=f"fork {i} not seeded")
+    solo = UnifiedServeEngine(cfg, params, **kw)
+    rs = solo.submit(prompt, 6)
+    want = solo.run()[rs.rid]
+    np.testing.assert_array_equal(a[0], want,
+                                  err_msg="fork 0 != unforked oracle")
+    assert any(not np.array_equal(a[0], s) for s in a[1:]), \
+        "sibling streams collapsed onto fork 0 at temperature > 0"
+
+
+def test_fork_composes_with_spec_lane():
+    """Forked slots ride the speculative lane: the spec planner charges CoW
+    copies before dispatch, so greedy fan output still matches the
+    unforked spec oracle."""
+    from repro.serve.spec import make_proposer
+
+    cfg, params = _setup()
+    prompt = _prompt(cfg, 40)
+
+    def spec_kw():
+        return dict(spec=make_proposer("ngram", cfg, num_slots=4, max_len=96),
+                    spec_k=4)
+
+    oracle = UnifiedServeEngine(cfg, params, num_slots=4, max_len=96,
+                                block_size=16, chunk_size=16, **spec_kw())
+    ro = oracle.submit(prompt, 8)
+    want = oracle.run()[ro.rid]
+    eng = UnifiedServeEngine(cfg, params, num_slots=4, max_len=96,
+                             block_size=16, chunk_size=16, **spec_kw())
+    rp = eng.submit(prompt, 8, n_samples=3)
+    out = eng.run()
+    for req in [rp] + rp.forks:
+        np.testing.assert_array_equal(out[req.rid], want,
+                                      err_msg=f"fork {req.fork_index}")
+    assert _conserved(eng.pool)
+
+
+def test_fork_trace_ledger_and_budget_triples():
+    """A traced n=4 run carries the full ledger: EV_FORK == (n-1) x
+    admitted fan-outs, the EV_BLOCKS_SHARED gauge peaks > 0, the step
+    budget triples stay present, and the FREE/ACTIVE/CACHED gauges
+    conserve the pool extent at every emission."""
+    cfg, params = _setup()
+    tracer = Tracer("fork-ledger").init()
+    eng = UnifiedServeEngine(cfg, params, num_slots=4, max_len=96,
+                             block_size=16, chunk_size=16, tracer=tracer)
+    parents = [eng.submit(_prompt(cfg, 40, seed=s), 4, n_samples=4)
+               for s in (3, 4)]
+    eng.run()
+    trace = tracer.finish()
+    evs = trace.events
+    assert (evs["type"] == ev.EV_FORK).sum() == 3 * len(parents)
+    shared = evs[evs["type"] == ev.EV_BLOCKS_SHARED]["value"]
+    assert len(shared) and shared.max() > 0
+    for code in (ev.EV_STEP_BUDGET, ev.EV_CHUNK_TOKENS, ev.EV_DECODE_TOKENS):
+        assert (evs["type"] == code).sum() > 0, code
+    # gauges are emitted in FREE, CACHED, ACTIVE bursts: replaying them in
+    # time order, every ACTIVE update closes a burst whose trio must
+    # conserve the pool extent
+    codes = (ev.EV_BLOCKS_FREE, ev.EV_BLOCKS_CACHED, ev.EV_BLOCKS_ACTIVE)
+    pool_evs = evs[np.isin(evs["type"], codes)]
+    pool_evs = pool_evs[np.argsort(pool_evs["time"], kind="stable")]
+    last, checked = {}, 0
+    for r in pool_evs:
+        last[int(r["type"])] = int(r["value"])
+        if int(r["type"]) == ev.EV_BLOCKS_ACTIVE and len(last) == 3:
+            assert sum(last.values()) == eng.pool.num_blocks - 1, last
+            checked += 1
+    assert checked > 0
+
+
+# ----------------------------------------------------------------------
+# beam search rides the same mechanism
+# ----------------------------------------------------------------------
+def test_beam_width1_is_greedy_and_wider_beams_sort_and_conserve():
+    cfg, params = _setup()
+    prompt = _prompt(cfg, 24)
+    eng = UnifiedServeEngine(cfg, params, num_slots=4, max_len=64,
+                             block_size=16, chunk_size=16)
+    rg = eng.submit(prompt, 6)
+    want = eng.run()[rg.rid]
+    free0 = eng.pool.num_free()
+    beams = eng.beam_search(prompt, 6, width=1)
+    np.testing.assert_array_equal(beams[0][0], want,
+                                  err_msg="width-1 beam != greedy")
+    beams = eng.beam_search(prompt, 6, width=3)
+    assert len(beams) == 3
+    scores = [s for _, s in beams]
+    assert scores == sorted(scores, reverse=True)
+    assert np.isfinite(scores).all()
+    assert eng.stats["peak_shared"] > 0
+    assert eng.pool.num_free() == free0  # beams hand every block back
+    assert _conserved(eng.pool)
+
+
+def test_beam_search_needs_idle_engine_and_valid_width():
+    cfg, params = _setup()
+    eng = UnifiedServeEngine(cfg, params, num_slots=2, max_len=64,
+                             block_size=16, chunk_size=16)
+    with pytest.raises(ValueError, match="width"):
+        eng.beam_search(_prompt(cfg, 8), 4, width=3)
+    eng.submit(_prompt(cfg, 8), 4)
+    with pytest.raises(RuntimeError, match="idle"):
+        eng.beam_search(_prompt(cfg, 8), 4, width=2)
+
+
+# ----------------------------------------------------------------------
+# multi-turn sessions persist blocks across requests
+# ----------------------------------------------------------------------
+def test_multi_turn_session_prefix_hits_and_warm_ttft():
+    """3-turn conversation: turns 2/3 must prefix-hit every FULL block of
+    the prior context, a warm turn's admit-to-first-token latency must
+    beat an equal-length cold prompt, and closing the session returns the
+    pinned blocks (pool conserves, nothing stays ACTIVE)."""
+    cfg, params = _setup()
+    # pool sized above the default contiguous budget: pinned session
+    # contexts stay ACTIVE between turns, on top of the live slots' blocks
+    eng = UnifiedServeEngine(cfg, params, num_slots=2, max_len=128,
+                             block_size=16, chunk_size=16, num_blocks=64)
+    # warm the compile caches so latency compares compute, not first-jits
+    eng.submit(_prompt(cfg, 48, seed=99), 4)
+    eng.run()
+
+    def turn(prompt, sid):
+        r = eng.submit(prompt, 6, session=sid)
+        out = eng.run()
+        return r, np.concatenate([prompt, out[r.rid]])
+
+    warm_lat, cold_lat = [], []
+    for s in range(3):
+        p1 = _prompt(cfg, 32, seed=10 + s)
+        r1, ctx1 = turn(p1, f"s{s}")
+        follow = _prompt(cfg, 10, seed=20 + s)
+        r2, ctx2 = turn(np.concatenate([ctx1, follow]), f"s{s}")
+        r3, _ = turn(np.concatenate([ctx2, _prompt(cfg, 10, seed=30 + s)]),
+                     f"s{s}")
+        bs = eng.block_size
+        # pinned context = prompt ++ tokens[:-1]; hits are block-aligned
+        assert r2.prefix_hit_tokens >= (len(ctx1) - 1) // bs * bs, "turn 2"
+        assert r3.prefix_hit_tokens >= (len(ctx2) - 1) // bs * bs, "turn 3"
+        warm_lat += [r2.t_first_ns - r2.t_admit_ns,
+                     r3.t_first_ns - r3.t_admit_ns]
+        # cold control: same lengths, fresh tokens, no session
+        for plen in (len(ctx1) + 10, len(ctx2) + 10):
+            rc = eng.submit(_prompt(cfg, plen, seed=500 + plen + s), 6)
+            eng.run()
+            cold_lat.append(rc.t_first_ns - rc.t_admit_ns)
+    assert np.median(warm_lat) < np.median(cold_lat), (warm_lat, cold_lat)
+    released = sum(eng.close_session(f"s{s}") for s in range(3))
+    assert released > 0
+    assert eng.close_session("s0") == 0  # double close is a no-op
+    assert _conserved(eng.pool)
+    assert eng.pool.num_active() == 0
+
+
+def test_session_turns_must_extend_and_exclusions_are_loud():
+    cfg, params = _setup()
+    eng = UnifiedServeEngine(cfg, params, num_slots=2, max_len=96,
+                             block_size=16, chunk_size=16)
+    p = _prompt(cfg, 32)
+    r1 = eng.submit(p, 4, session="a")
+    eng.run()
+    with pytest.raises(ValueError, match="extend"):
+        eng.submit(_prompt(cfg, 40, seed=9), 4, session="a")
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        eng.submit(_prompt(cfg, 16), 4, n_samples=2, session="b")
+    nocache = UnifiedServeEngine(cfg, params, num_slots=2, max_len=96,
+                                 block_size=16, chunk_size=16,
+                                 prefix_cache=False)
+    with pytest.raises(ValueError, match="prefix"):
+        nocache.submit(p, 4, session="c")
+    eng.close_session("a")
+
+
+def test_fork_rejected_loudly_off_the_unified_path():
+    """The legacy engine and non-chunkable families must refuse fan-out
+    instead of silently serving n sequential requests."""
+    cfg, params = _setup()
+    legacy = ContinuousServeEngine(cfg, params, num_slots=2, max_len=64,
+                                   block_size=16)
+    with pytest.raises(ValueError, match="n_samples"):
+        legacy.submit(_prompt(cfg, 16), 4, n_samples=2)
+    hcfg, hparams = _setup("recurrentgemma-9b")
+    hybrid = UnifiedServeEngine(hcfg, hparams, num_slots=2, max_len=64,
+                                block_size=16)
+    assert not hybrid.supports_fork
+    with pytest.raises(ValueError, match="n_samples"):
+        hybrid.submit(_prompt(hcfg, 16), 4, n_samples=2)
+
+
+# ----------------------------------------------------------------------
+# forked serving under the mp=2 mesh (subprocess: forced CPU devices)
+# ----------------------------------------------------------------------
+MP2_FORK_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    import jax, numpy as np
+    from repro.compat import make_mesh
+    from repro.configs import get_config, reduced
+    from repro.models.model import build_model
+    from repro.serve.step import UnifiedServeEngine
+
+    mesh = make_mesh((1, 2), ("data", "model"))
+    cfg = reduced(get_config("granite-8b"), num_layers=2, num_kv_heads=2)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    prompt = np.random.default_rng(2).integers(
+        0, cfg.vocab_size, (40,)).astype(np.int32)
+
+    ref = UnifiedServeEngine(cfg, params, num_slots=4, max_len=96,
+                             block_size=16, chunk_size=16)
+    r0 = ref.submit(prompt, 6)
+    want = ref.run()[r0.rid]
+    eng = UnifiedServeEngine(cfg, params, num_slots=4, max_len=96,
+                             block_size=16, chunk_size=16, mesh=mesh)
+    rp = eng.submit(prompt, 6, n_samples=4)
+    out = eng.run()
+    for req in [rp] + rp.forks:
+        np.testing.assert_array_equal(out[req.rid], want)
+    assert eng.pool.stats["forks"] == 3
+    assert eng.pool.stats["cow_copies"] >= 3  # sharded CoW copies land too
+    print("OK fork-mp2")
+""")
+
+
+def test_fork_greedy_bit_identical_under_mp2():
+    r = subprocess.run(
+        [sys.executable, "-c", MP2_FORK_SCRIPT], capture_output=True,
+        text=True, env={**os.environ, "PYTHONPATH": "src"}, cwd=ROOT,
+        timeout=560)
+    assert r.returncode == 0, (r.stdout + r.stderr)[-3000:]
+    assert "OK fork-mp2" in r.stdout
